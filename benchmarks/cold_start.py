@@ -1,0 +1,78 @@
+"""Paper Fig. 12 / 13 — cold-start latency breakdown + working sets.
+
+Invokes functions one at a time (fresh instances), capturing the
+per-phase breakdown the threaded runtime records and the REAP
+working-set page counts implied by each system's snapshot footprint.
+"""
+from __future__ import annotations
+
+from repro.core import fabric as F
+from repro.core.runtime import SYSTEMS, WorkerNode
+from repro.core.workloads import NAMES, SUITE
+
+from benchmarks.common import pct, save_json, table
+
+SYSTEMS_ORDER = ("baseline", "nexus-tcp", "nexus-async", "nexus")
+
+
+def measure(system: str) -> dict:
+    node = WorkerNode(system)
+    per_fn = {}
+    try:
+        for fn in NAMES:
+            node.deploy(fn)
+            node.seed_input(fn)
+            res = node.invoke(fn).result(timeout=60)
+            assert res.cold
+            pool = node._pools[fn]
+            inst = pool.instances()[0]
+            per_fn[fn] = {
+                "cold_s": res.latency_s,
+                "breakdown": res.breakdown,
+                "ws_pages": inst.restore_info.ws_pages,
+                "restore_s": inst.restore_info.total_s,
+                "insert_s": inst.restore_info.ws_insert_s,
+            }
+    finally:
+        node.shutdown()
+    return per_fn
+
+
+def run() -> dict:
+    data = {s: measure(s) for s in SYSTEMS_ORDER}
+
+    rows = []
+    for s in SYSTEMS_ORDER:
+        cold = sum(d["cold_s"] for d in data[s].values()) / len(NAMES)
+        pages = sum(d["ws_pages"] for d in data[s].values()) / len(NAMES)
+        insert = sum(d["insert_s"] for d in data[s].values()) / len(NAMES)
+        io = sum(d["breakdown"].get("fetch", 0.0)
+                 + d["breakdown"].get("write", 0.0)
+                 + d["breakdown"].get("write_handoff", 0.0)
+                 + max(d["breakdown"].get("write_ack", 0.0), 0.0)
+                 for d in data[s].values()) / len(NAMES)
+        rows.append({"system": s, "cold_ms": round(cold * 1e3, 1),
+                     "ws_pages": round(pages),
+                     "insert_ms": round(insert * 1e3, 1),
+                     "io_ms": round(io * 1e3, 1)})
+    base = rows[0]
+    for r in rows:
+        r["cold_vs_base_%"] = round(pct(r["cold_ms"], base["cold_ms"]), 1)
+        r["pages_vs_base_%"] = round(pct(r["ws_pages"], base["ws_pages"]), 1)
+        r["insert_vs_base_%"] = round(
+            pct(r["insert_ms"], base["insert_ms"]), 1)
+        r["io_vs_base_%"] = round(pct(r["io_ms"], base["io_ms"]), 1)
+
+    print(table(rows, ["system", "cold_ms", "cold_vs_base_%", "ws_pages",
+                       "pages_vs_base_%", "insert_ms", "insert_vs_base_%",
+                       "io_ms", "io_vs_base_%"],
+                title="Fig 12/13: cold starts (paper: cold -10%, "
+                      "pages -31%, insert -40%, I/O -58/-75/-81%)"))
+
+    payload = {"systems": rows, "per_fn": data}
+    save_json("cold_start", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

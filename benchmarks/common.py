@@ -1,0 +1,47 @@
+"""Shared helpers for the benchmark harness."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def save_json(name: str, payload: Any) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=str)
+    return os.path.abspath(path)
+
+
+def table(rows: list[dict], cols: list[str], *, title: str = "",
+          fmt: dict | None = None) -> str:
+    fmt = fmt or {}
+    out = []
+    if title:
+        out.append(f"== {title} ==")
+    widths = {c: max(len(c), *(len(_cell(r.get(c), fmt.get(c)))
+                               for r in rows)) for c in cols}
+    out.append("  ".join(c.ljust(widths[c]) for c in cols))
+    out.append("  ".join("-" * widths[c] for c in cols))
+    for r in rows:
+        out.append("  ".join(
+            _cell(r.get(c), fmt.get(c)).ljust(widths[c]) for c in cols))
+    return "\n".join(out)
+
+
+def _cell(v, f) -> str:
+    if v is None:
+        return "-"
+    if f:
+        return format(v, f)
+    if isinstance(v, float):
+        return f"{v:.3g}"
+    return str(v)
+
+
+def pct(new: float, base: float) -> float:
+    """Reduction of `new` vs `base` in percent (positive = saving)."""
+    return (1.0 - new / base) * 100.0 if base else float("nan")

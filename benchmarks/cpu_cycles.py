@@ -1,0 +1,86 @@
+"""Paper Fig. 2 — CPU-cycle breakdowns.
+
+(a) worker-node cycle distribution across host/guest x user/kernel for a
+    balanced 10-function mix under the coupled baseline;
+(b) synthetic single 1 MB PUT across communication fabrics
+    (raw TCP vs MinIO SDK vs AWS SDK, Python vs Go);
+(d) the same op native vs inside a VM (virtualization amplification).
+"""
+from __future__ import annotations
+
+from repro.core import fabric as F
+from repro.core import metrics as M
+from repro.core.runtime import WorkerNode
+from repro.core.workloads import NAMES
+
+from benchmarks.common import save_json, table
+
+MB = 1024 * 1024
+
+
+def node_cycle_distribution(invocations_per_fn: int = 4) -> dict:
+    node = WorkerNode("baseline")
+    try:
+        for fn in NAMES:
+            node.deploy(fn)
+            node.seed_input(fn)
+        futs = [node.invoke(fn) for fn in NAMES
+                for _ in range(invocations_per_fn)]
+        for f in futs:
+            f.result(timeout=120)
+        snap = node.acct.snapshot()
+    finally:
+        node.shutdown()
+    total = snap["total"]
+    shares = {d: snap["cycles"].get(d, 0.0) / total for d in M.DOMAINS}
+    return {"shares": shares, "total_mcycles": total,
+            "crossings": snap["crossings"]}
+
+
+def fabric_sweep() -> list[dict]:
+    rows = []
+    for sdk in ("tcp", "minio", "aws"):
+        for lang in ("py", "go"):
+            native = F.fabric_op_mcycles(sdk, lang, MB)
+            base = F.fabric_op_mcycles("tcp", lang, MB)
+            rows.append({"fabric": sdk, "lang": lang,
+                         "native_mcyc": round(native, 1),
+                         "x_over_tcp": round(native / base, 1)})
+    return rows
+
+
+def virtualization_amplification() -> list[dict]:
+    rows = []
+    for sdk in ("tcp", "minio", "aws"):
+        native = F.fabric_op_mcycles(sdk, "py", MB)
+        vm = F.in_guest_op_cost(sdk, "py", MB).total()
+        rows.append({"fabric": sdk, "native_mcyc": round(native, 1),
+                     "vm_mcyc": round(vm, 1),
+                     "amplification": round(vm / native, 2)})
+    return rows
+
+
+def run() -> dict:
+    dist = node_cycle_distribution()
+    sweep = fabric_sweep()
+    amp = virtualization_amplification()
+
+    print(table([{"domain": d, "share": f"{s:.0%}"}
+                 for d, s in dist["shares"].items()],
+                ["domain", "share"],
+                title="Fig 2a: worker-node cycle distribution (baseline)"))
+    print()
+    print(table(sweep, ["fabric", "lang", "native_mcyc", "x_over_tcp"],
+                title="Fig 2b/2c: 1MB PUT across fabrics "
+                      "(paper: minio 3x/5x, aws 6x/13x)"))
+    print()
+    print(table(amp, ["fabric", "native_mcyc", "vm_mcyc", "amplification"],
+                title="Fig 2d: virtualization amplification (paper: ~2x)"))
+
+    payload = {"fig2a": dist, "fig2b": sweep, "fig2d": amp}
+    save_json("cpu_cycles", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,71 @@
+"""Paper Fig. 6 — deployment density under the p99 < 5x-unloaded SLO.
+
+Sweeps deployed-function count per system through the virtual-time
+cluster simulator (same cost model as the threaded runtime; §6 setup:
+4 worker nodes x 28 cores x 128 GB, 280-VM overcommit, Azure-like
+arrivals) and reports the density knee plus CPU/memory utilization at
+the baseline's largest sustainable scale (the paper's common operating
+point comparison).
+"""
+from __future__ import annotations
+
+from repro.core.des import DensitySimulator, find_density
+
+from benchmarks.common import pct, save_json, table
+
+SYSTEMS_ORDER = ("baseline", "nexus-tcp", "nexus-async", "nexus")
+
+
+def run(quick: bool = False) -> dict:
+    duration = 45.0 if quick else 60.0
+    step = 40 if quick else 20
+    sweep: dict[str, list] = {}
+    density: dict[str, int] = {}
+    for system in SYSTEMS_ORDER:
+        best, results = find_density(system, lo=160, hi=800, step=step,
+                                     seed=1, duration_s=duration,
+                                     warmup_s=10.0)
+        density[system] = best
+        sweep[system] = [
+            {"n": r.n_functions, "slowdown": round(r.geomean_slowdown(), 2),
+             "cpu": round(r.cpu_util, 3), "mem": round(r.mem_util, 3),
+             "cold": r.cold_starts}
+            for r in results]
+
+    rows = [{"system": s, "density": density[s],
+             "gain_%": round((density[s] / max(density["baseline"], 1) - 1)
+                             * 100, 1)}
+            for s in SYSTEMS_ORDER]
+
+    # common operating point: baseline's max sustainable n
+    n0 = density["baseline"]
+    op_rows = []
+    for s in SYSTEMS_ORDER:
+        r = DensitySimulator(s, n0, seed=1, duration_s=duration,
+                             warmup_s=10.0).run()
+        op_rows.append({"system": s, "n": n0,
+                        "cpu_util": round(r.cpu_util, 3),
+                        "mem_util": round(r.mem_util, 3)})
+    base_cpu = op_rows[0]["cpu_util"]
+    base_mem = op_rows[0]["mem_util"]
+    for r in op_rows:
+        r["cpu_saving_%"] = round(pct(r["cpu_util"], base_cpu), 1)
+        r["mem_saving_%"] = round(pct(r["mem_util"], base_mem), 1)
+
+    print(table(rows, ["system", "density", "gain_%"],
+                title="Fig 6a: deployment density "
+                      "(paper: 320 / 380 / 380 / 440 -> +18%/+18%/+37%)"))
+    print()
+    print(table(op_rows, ["system", "n", "cpu_util", "cpu_saving_%",
+                          "mem_util", "mem_saving_%"],
+                title=f"Fig 6b/6c at the common operating point n={n0} "
+                      "(paper @180: CPU -35/-36/-44%, mem -36/-40/-31%)"))
+
+    payload = {"density": density, "gains": rows, "sweep": sweep,
+               "operating_point": op_rows}
+    save_json("density", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,307 @@
+"""Loop-aware static analysis of optimized HLO text.
+
+XLA's `compiled.cost_analysis()` counts while-loop bodies ONCE (verified
+empirically in EXPERIMENTS.md §Roofline): a layer stack scanned with
+`lax.scan` under-reports FLOPs/bytes by the trip count. This analyzer
+walks the optimized HLO with explicit loop multipliers instead:
+
+* computations are parsed into blocks; `while` ops carry
+  ``backend_config={"known_trip_count":{"n":...}}`` in optimized HLO —
+  body and condition computations inherit multiplier x n (nested loops
+  multiply);
+* FLOPs: every `dot` contributes 2 x |result| x |contracted dims|
+  (operand shapes resolved through a per-computation symbol table);
+  dots inside called fusions are recursed into;
+* HBM bytes: post-fusion, each top-level instruction reads its operands
+  and writes its result exactly once — we sum operand+result bytes over
+  materializing ops (fusions, dots, copies, collectives, slices,
+  reduces); bookkeeping ops (bitcast/tuple/gte/parameter) are free;
+* collective bytes: per-kind sums with ring-cost conventions
+  (all-reduce 2x result; reduce-scatter operand ~= result x group;
+  all-gather / all-to-all / permute result bytes), loop-corrected.
+
+All quantities are per device (the HLO is the SPMD-partitioned module).
+"""
+from __future__ import annotations
+
+import json
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+#: ops whose operands/results move through HBM post-fusion
+_MATERIALIZING = COLLECTIVES + (
+    "fusion", "dot", "copy", "convert", "dynamic-slice",
+    "dynamic-update-slice", "reduce", "transpose", "broadcast", "iota",
+    "concatenate", "pad", "slice", "gather", "scatter", "sort", "rng",
+    "copy-start", "copy-done", "custom-call",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*((?:\([^)]*\))|(?:\w+\[[\d,]*\]\S*))"
+    r"\s+([\w\-]+)\((.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s*->")
+
+
+def _shape_list(type_str: str) -> list[tuple[str, tuple[int, ...]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        shape = tuple(int(d) for d in dims.split(",") if d)
+        out.append((dt, shape))
+    return out
+
+
+def _nbytes(type_str: str) -> int:
+    total = 0
+    for dt, shape in _shape_list(type_str):
+        n = 1
+        for d in shape:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    rest: str
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: list[Instr] = field(default_factory=list)
+    symtab: dict[str, str] = field(default_factory=dict)  # name -> type_str
+
+
+def parse_computations(hlo: str) -> tuple[dict[str, Computation], str]:
+    comps: dict[str, Computation] = {}
+    entry = ""
+    cur: Computation | None = None
+    for line in hlo.splitlines():
+        if not line.strip():
+            continue
+        if not line.startswith(" ") and line.rstrip().endswith("{"):
+            m = _COMP_RE.match(line.strip())
+            if m:
+                cur = Computation(m.group(1))
+                comps[cur.name] = cur
+                if line.startswith("ENTRY"):
+                    entry = cur.name
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            ins = Instr(m.group(1), m.group(2), m.group(3), m.group(4))
+            cur.instrs.append(ins)
+            cur.symtab[ins.name] = ins.type_str
+    return comps, entry
+
+
+def _dot_flops(comp: Computation, ins: Instr) -> float:
+    result = _shape_list(ins.type_str)
+    if not result:
+        return 0.0
+    _, rshape = result[0]
+    rsize = 1
+    for d in rshape:
+        rsize *= d
+    # contracted size from the lhs operand's shape
+    ops = re.findall(r"%([\w\.\-]+)", ins.rest.split("),")[0])
+    mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.rest)
+    contracted = 1
+    if ops and mc:
+        lhs_type = comp.symtab.get(ops[0])
+        if lhs_type:
+            shapes = _shape_list(lhs_type)
+            if shapes:
+                _, lshape = shapes[0]
+                for i in mc.group(1).split(","):
+                    if i and int(i) < len(lshape):
+                        contracted *= lshape[int(i)]
+    return 2.0 * rsize * contracted
+
+
+def _instr_bytes(comp: Computation, ins: Instr,
+                 comps: "dict[str, Computation] | None" = None) -> int:
+    """operand + result bytes, operands resolved via the symbol table.
+
+    In-place updates (dynamic-update-slice roots, incl. fused ones) only
+    touch the written slice: XLA aliases the carried buffer, so traffic
+    is 2x the update bytes, not 2x the buffer."""
+    head = ins.rest.split("), ")[0]
+    op_types = []
+    for op_name in re.findall(r"%([\w\.\-]+)", head):
+        t = comp.symtab.get(op_name)
+        if t:
+            op_types.append(t)
+
+    callee = None
+    if ins.op == "fusion" and comps is not None:
+        m = re.search(r"calls=%?([\w\.\-]+)", ins.rest)
+        callee = comps.get(m.group(1)) if m else None
+
+    is_dus = ins.op == "dynamic-update-slice" or (
+        callee is not None and callee.instrs
+        and callee.instrs[-1].op == "dynamic-update-slice")
+    if is_dus:
+        rbytes = _nbytes(ins.type_str)
+        small = [_nbytes(t) for t in op_types if _nbytes(t) < rbytes]
+        return 2 * sum(small) if small else rbytes
+
+    # dynamic-slice windows read only the addressed region: count the
+    # result twice (read + write) plus genuinely-small side operands,
+    # never the full sliced operand (a scan xs slice is NOT a full read).
+    rbytes = _nbytes(ins.type_str)
+    has_dslice = ins.op == "dynamic-slice" or (
+        callee is not None
+        and any(i.op == "dynamic-slice" for i in callee.instrs))
+    if has_dslice and any(_nbytes(t) > 4 * rbytes for t in op_types):
+        return 2 * rbytes + sum(_nbytes(t) for t in op_types
+                                if _nbytes(t) <= rbytes)
+
+    return rbytes + sum(_nbytes(t) for t in op_types)
+
+
+def op_types_of(comp: Computation, ins: Instr) -> list[str]:
+    head = ins.rest.split("), ")[0]
+    return [comp.symtab[n] for n in re.findall(r"%([\w\.\-]+)", head)
+            if n in comp.symtab]
+
+
+_CALL_RE = re.compile(r"(?:calls|to_apply|condition|body)=%?([\w\.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+
+def _is_kernel_tile(type_str: str) -> bool:
+    """Working tiles that the Pallas kernels keep VMEM-resident on TPU:
+
+    * attention score/prob/kv-span tiles — >=4-D with both trailing dims
+      >= 256 (block_q x block_k / block_q x window-span), which the
+      flash_attention kernel never writes to HBM;
+    * selective-scan state tiles — >=4-D (B, chunk, d_block, N) with a
+      small trailing state dim, VMEM-resident in the ssm_scan kernel.
+
+    XLA-on-CPU materializes these per block-step; the kernelized bytes
+    metric elides them to model the TPU lowering (kernels validated
+    bit-close vs the same math in tests/test_kernels.py).
+    """
+    for dt, shape in _shape_list(type_str):
+        if len(shape) < 4:
+            continue
+        a, b = shape[-2], shape[-1]
+        if a >= 256 and b >= 256:
+            return True
+        if b <= 32 and a * b >= 2048:
+            return True
+    return False
+
+
+def analyze(hlo: str, top_n: int = 0) -> dict:
+    comps, entry = parse_computations(hlo)
+    flops = 0.0
+    bytes_hbm = 0
+    bytes_kernelized = 0
+    coll: dict[str, int] = defaultdict(int)
+    top: list[tuple[float, str, str, str]] = []
+
+    # multiplier propagation: worklist of (computation, multiplier).
+    # `count_bytes=False` inside fusion bodies (no HBM traffic there),
+    # dots still counted (CPU HLO occasionally fuses converts over dots).
+    seen: list[tuple[str, float, bool]] = [(entry, 1.0, True)]
+    work = [(entry, 1.0, True)]
+    while work:
+        cname, mult, top_level = work.pop()
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        for ins in comp.instrs:
+            if ins.op == "dot":
+                flops += mult * _dot_flops(comp, ins)
+            if top_level and any(ins.op == m or ins.op.startswith(m + ".")
+                                 for m in _MATERIALIZING):
+                b = mult * _instr_bytes(comp, ins, comps)
+                bytes_hbm += b
+                if not _is_kernel_tile(ins.type_str):
+                    # dtype-widening copies (bf16->f32 slice stashes)
+                    # happen in VMEM inside the Pallas kernels
+                    widen = False
+                    shapes = _shape_list(ins.type_str)
+                    if shapes and shapes[0][0] == "f32":
+                        for t in op_types_of(comp, ins):
+                            for dt2, sh2 in _shape_list(t):
+                                if dt2 == "bf16" and sh2 == shapes[0][1]:
+                                    widen = True
+                    if not widen:
+                        bytes_kernelized += b
+                if top_n:
+                    meta = re.search(r'op_name="([^"]+)"', ins.rest)
+                    top.append((b, cname,
+                                f"{ins.op} {ins.type_str[:60]} x{mult:.0f}",
+                                meta.group(1)[:90] if meta else ""))
+            for kind in COLLECTIVES:
+                if ins.op == kind or ins.op.startswith(kind + "-start"):
+                    n = _nbytes(ins.type_str)
+                    if kind == "all-reduce":
+                        n *= 2
+                    coll[kind] += int(mult * n)
+            if ins.op == "while":
+                trip = 1
+                mt = _TRIP_RE.search(ins.rest)
+                if mt:
+                    trip = int(mt.group(1))
+                for target in _CALL_RE.findall(ins.rest):
+                    item = (target, mult * trip, True)
+                    if item not in seen:
+                        seen.append(item)
+                        work.append(item)
+            elif ins.op == "fusion":
+                for target in _CALL_RE.findall(ins.rest):
+                    item = (target, mult, False)
+                    if item not in seen:
+                        seen.append(item)
+                        work.append(item)
+
+    out = {
+        "flops": flops,
+        "bytes_hbm": float(bytes_hbm),
+        "bytes_hbm_kernelized": float(bytes_kernelized),
+        "collective_bytes": dict(coll),
+        "collective_total": float(sum(coll.values())),
+        "computations": len(comps),
+    }
+    if top_n:
+        top.sort(reverse=True)
+        out["top_bytes"] = [
+            {"GB": round(b / 1e9, 1), "comp": c, "instr": i, "op": o}
+            for b, c, i, o in top[:top_n]]
+    return out
+
+
+def analyze_file(path: str) -> dict:
+    with open(path) as f:
+        return analyze(f.read())
+
+
+if __name__ == "__main__":
+    import sys
+    print(json.dumps(analyze_file(sys.argv[1]), indent=1))

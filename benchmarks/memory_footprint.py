@@ -1,0 +1,72 @@
+"""Paper Fig. 3 / 10 / 11 — memory footprints.
+
+Fig 3:  per-instance component breakdown averaged over the suite,
+        baseline vs SDK-only offload vs full fabric offload.
+Fig 10: per-workload per-instance footprint normalized to baseline.
+Fig 11: node-level footprint vs co-resident instance count (backend
+        amortization).
+"""
+from __future__ import annotations
+
+from repro.core import fabric as F
+from repro.core.workloads import NAMES, SUITE
+
+from benchmarks.common import pct, save_json, table
+
+
+def per_instance() -> dict:
+    rows = []
+    avgs = {}
+    for system in ("baseline", "nexus-sdk-only", "nexus"):
+        per_wl = {}
+        for name in NAMES:
+            acct = F.instance_memory(SUITE[name].extra_libs_mb, system)
+            per_wl[name] = acct.total()
+        avgs[system] = sum(per_wl.values()) / len(per_wl)
+        rows.append({"system": system,
+                     "avg_MB": round(avgs[system], 1),
+                     "reduction_vs_baseline_%": round(
+                         pct(avgs[system], avgs["baseline"]), 1),
+                     **{n: round(v, 0) for n, v in per_wl.items()}})
+    base = F.instance_memory(60.0, "baseline")
+    fabric_share = base.share("cloud_sdk", "rpc_lib")
+    return {"rows": rows, "fabric_share_of_baseline": fabric_share,
+            "paper": {"avg": [169, 140, 134], "fabric_share": ">25%"}}
+
+
+def node_level(max_instances: int = 280) -> list[dict]:
+    """Total node memory as co-resident instances grow (Fig 11)."""
+    out = []
+    mix = [SUITE[n].extra_libs_mb for n in NAMES]
+    for n in (40, 80, 120, 200, max_instances):
+        base = sum(F.instance_memory(mix[i % len(mix)], "baseline").total()
+                   for i in range(n))
+        nexus = (sum(F.instance_memory(mix[i % len(mix)], "nexus").total()
+                     for i in range(n))
+                 + F.BACKEND_BASE_MB + F.BACKEND_PER_INSTANCE_MB * n)
+        out.append({"instances": n,
+                    "baseline_GB": round(base / 1024, 2),
+                    "nexus_GB": round(nexus / 1024, 2),
+                    "saving_%": round(pct(nexus, base), 1)})
+    return out
+
+
+def run() -> dict:
+    inst = per_instance()
+    node = node_level()
+    print(table(inst["rows"],
+                ["system", "avg_MB", "reduction_vs_baseline_%"],
+                title="Fig 3: per-instance RSS (paper: 169 -> 140 -> 134 MB;"
+                      " fabric share "
+                      f"{inst['fabric_share_of_baseline']:.0%} vs >25%)"))
+    print()
+    print(table(node, ["instances", "baseline_GB", "nexus_GB", "saving_%"],
+                title="Fig 11: node-level memory vs density "
+                      "(paper: 10-21% lower)"))
+    payload = {"fig3": inst, "fig11": node}
+    save_json("memory_footprint", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,127 @@
+"""§Roofline — three-term roofline per (arch x shape) on the 16x16 mesh.
+
+Reads the analyzed dry-run records (results/roofline.jsonl, produced by
+``python -m repro.launch.dryrun --all --single-pod-only --analyze``) and
+reports, per cell:
+
+    compute term    = HLO_FLOPs / peak_FLOPs            [s, per chip]
+    memory term     = HLO_bytes / HBM_bw                [s, per chip]
+    collective term = collective_bytes / link_bw        [s, per chip]
+
+with the loop-corrected HLO numbers (benchmarks/hlo_analysis.py), the
+dominant term, MODEL_FLOPS / HLO_FLOPs (useful-compute ratio), and a
+one-line "what would move the dominant term" note.
+
+Hardware constants (TPU v5e-class, per assignment): 197 TFLOP/s bf16,
+819 GB/s HBM, ~50 GB/s/link ICI (model axis traffic; the single-pod
+mesh gives each chip ICI links along both axes).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.configs import registry
+from repro.configs.base import SHAPES
+
+from benchmarks.common import RESULTS_DIR, save_json, table
+from benchmarks.model_flops import hbm_bytes_ideal, model_flops
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link
+
+_SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def _advice(dom: str, rec: dict, ratio: float) -> str:
+    if dom == "compute":
+        if ratio < 0.5:
+            return ("cut non-model compute: causal kv-block early exit / "
+                    "remat policy (recompute shows as extra dots)")
+        return "compute-bound near useful flops: raise MXU utilization"
+    if dom == "memory":
+        return ("shrink materialized intermediates (masks, fp32 stashes); "
+                "fuse elementwise chains; bf16 residuals")
+    return ("reshard to cut collective bytes: keep FSDP gathers on-chip "
+            "axis, overlap DP reduce with bwd")
+
+
+def load_records(path: str | None = None) -> list[dict]:
+    path = path or os.path.join(RESULTS_DIR, "roofline.jsonl")
+    recs = []
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            if "error" not in r and r.get("hlo_analysis"):
+                recs.append(r)
+    return recs
+
+
+def roofline_row(rec: dict) -> dict:
+    arch, shape_name = rec["arch"], rec["shape"]
+    cfg = registry.get(arch)
+    shape = SHAPES[shape_name]
+    devices = rec["devices"]
+    an = rec["hlo_analysis"]
+
+    t_comp = an["flops"] / PEAK_FLOPS
+    t_mem = an["bytes_hbm"] / HBM_BW
+    t_coll = an["collective_total"] / LINK_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dom = max(terms, key=terms.get)
+
+    mf = model_flops(cfg, shape)
+    mf_dev = mf["total"] / devices
+    ratio = mf_dev / an["flops"] if an["flops"] else 0.0
+    bound = max(terms.values())
+    # roofline fraction: useful model flops per chip over the time the
+    # dominant term forces, vs peak.
+    frac = (mf_dev / bound) / PEAK_FLOPS if bound > 0 else 0.0
+
+    return {
+        "arch": arch, "shape": shape_name, "step": rec["step"],
+        "compute_s": t_comp, "memory_s": t_mem, "collective_s": t_coll,
+        "dominant": dom,
+        "model_flops_per_chip": mf_dev,
+        "hlo_flops_per_chip": an["flops"],
+        "useful_ratio": ratio,
+        "roofline_fraction": frac,
+        "advice": _advice(dom, rec, ratio),
+        "hbm_fit_temp_GB": rec["memory"]["temp_B"] / 1e9,
+    }
+
+
+def run(path: str | None = None) -> dict:
+    recs = load_records(path)
+    rows = [roofline_row(r) for r in recs]
+    rows.sort(key=lambda r: (r["arch"], _SHAPE_ORDER.index(r["shape"])))
+
+    disp = [{**r,
+             "compute_s": f"{r['compute_s']:.3g}",
+             "memory_s": f"{r['memory_s']:.3g}",
+             "collective_s": f"{r['collective_s']:.3g}",
+             "useful_ratio": f"{r['useful_ratio']:.2f}",
+             "roofline_fraction": f"{r['roofline_fraction']:.3f}"}
+            for r in rows]
+    print(table(disp, ["arch", "shape", "step", "compute_s", "memory_s",
+                       "collective_s", "dominant", "useful_ratio",
+                       "roofline_fraction"],
+                title=f"§Roofline: {len(rows)} cells, 16x16 mesh "
+                      "(terms in seconds/step per chip)"))
+
+    # the three hillclimb picks
+    if rows:
+        worst = min(rows, key=lambda r: r["roofline_fraction"])
+        coll = max(rows, key=lambda r: r["collective_s"]
+                   / max(r["compute_s"] + r["memory_s"], 1e-12))
+        print(f"\nworst roofline fraction: {worst['arch']} x "
+              f"{worst['shape']} ({worst['roofline_fraction']:.3f})")
+        print(f"most collective-bound:   {coll['arch']} x {coll['shape']}")
+
+    save_json("roofline_table", rows)
+    return {"rows": rows}
+
+
+if __name__ == "__main__":
+    run()

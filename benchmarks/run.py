@@ -1,0 +1,63 @@
+"""Benchmark harness entry point: ``python -m benchmarks.run``.
+
+Runs one benchmark per paper table/figure (see DESIGN.md §7) plus the
+roofline report when analyzed dry-run records exist. ``--quick`` trims
+the density sweep. Individual benches run via
+``python -m benchmarks.<name>``.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+import traceback
+
+from benchmarks.common import RESULTS_DIR
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of benchmark names")
+    args = ap.parse_args()
+
+    from benchmarks import (cold_start, cpu_cycles, density, faasm_gap,
+                            memory_footprint, warm_path)
+
+    benches = [
+        ("cpu_cycles (Fig 2)", cpu_cycles.run, {}),
+        ("memory_footprint (Fig 3/10/11)", memory_footprint.run, {}),
+        ("warm_path (Fig 7/8/9)", warm_path.run, {}),
+        ("cold_start (Fig 12/13)", cold_start.run, {}),
+        ("density (Fig 6)", density.run, {"quick": args.quick}),
+        ("faasm_gap (Fig 14)", faasm_gap.run, {}),
+    ]
+    roofline_path = os.path.join(RESULTS_DIR, "roofline.jsonl")
+    if os.path.exists(roofline_path):
+        from benchmarks import roofline
+        benches.append(("roofline (SRoofline)", roofline.run, {}))
+
+    wanted = set(args.only.split(",")) if args.only else None
+    failures = []
+    for name, fn, kw in benches:
+        if wanted and not any(w in name for w in wanted):
+            continue
+        print(f"\n{'=' * 72}\n{name}\n{'=' * 72}")
+        t0 = time.time()
+        try:
+            fn(**kw)
+            print(f"[{name}] done in {time.time() - t0:.1f}s")
+        except Exception:                          # noqa: BLE001
+            failures.append(name)
+            traceback.print_exc()
+
+    print(f"\n{'=' * 72}")
+    if failures:
+        print(f"FAILED: {failures}")
+        raise SystemExit(1)
+    print("all benchmarks completed; JSON results in results/")
+
+
+if __name__ == "__main__":
+    main()

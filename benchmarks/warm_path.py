@@ -1,0 +1,111 @@
+"""Paper Fig. 7 / 8 / 9 — warm-path behaviour per workload x system.
+
+Runs the REAL threaded runtime: one instance per function, repeated
+invocations after a discarded warmup, per the paper's unloaded-latency
+protocol. Reports:
+
+* Fig 7: warm latency normalized to baseline;
+* Fig 8: per-invocation cycle breakdown (Hk/Hu/Gk/Gu);
+* Fig 9: KVM-exit + vCPU-wakeup analogues normalized to baseline.
+"""
+from __future__ import annotations
+
+from repro.core import metrics as M
+from repro.core.runtime import SYSTEMS, WorkerNode
+from repro.core.workloads import NAMES
+
+from benchmarks.common import pct, save_json, table
+
+SYSTEMS_ORDER = ("baseline", "nexus-tcp", "nexus-async", "nexus")
+
+
+def measure(system: str, reps: int = 6) -> dict:
+    node = WorkerNode(system)
+    per_fn = {}
+    try:
+        for fn in NAMES:
+            node.deploy(fn)
+            node.seed_input(fn)
+            node.invoke(fn).result(timeout=60)       # discarded cold start
+        for fn in NAMES:
+            acct_before = node.acct.snapshot()
+            for _ in range(reps):
+                node.invoke(fn).result(timeout=60)   # serial -> warm reuse
+            acct_after = node.acct.snapshot()
+            warm = node.latency.mean(f"{fn}:warm")
+            cyc = {d: (acct_after["cycles"].get(d, 0.0)
+                       - acct_before["cycles"].get(d, 0.0)) / reps
+                   for d in M.DOMAINS}
+            cross = {k: (acct_after["crossings"].get(k, 0)
+                         - acct_before["crossings"].get(k, 0)) / reps
+                     for k in (M.VM_EXIT, M.VCPU_WAKEUP)}
+            per_fn[fn] = {"warm_s": warm, "cycles": cyc,
+                          "crossings": cross}
+    finally:
+        node.shutdown()
+    return per_fn
+
+
+def run() -> dict:
+    data = {s: measure(s) for s in SYSTEMS_ORDER}
+
+    # Fig 7: normalized warm latency
+    rows7 = []
+    for fn in NAMES:
+        base = data["baseline"][fn]["warm_s"]
+        rows7.append({"fn": fn, "baseline_ms": round(base * 1e3, 1),
+                      **{s: round(data[s][fn]["warm_s"] / base, 2)
+                         for s in SYSTEMS_ORDER[1:]}})
+    avg_red = {s: round(sum(
+        pct(data[s][fn]["warm_s"], data["baseline"][fn]["warm_s"])
+        for fn in NAMES) / len(NAMES), 1) for s in SYSTEMS_ORDER[1:]}
+
+    # Fig 8: cycle totals + guest-user share
+    rows8 = []
+    for s in SYSTEMS_ORDER:
+        tot = sum(sum(data[s][fn]["cycles"].values()) for fn in NAMES)
+        gu = sum(data[s][fn]["cycles"]["guest_user"] for fn in NAMES)
+        hu = sum(data[s][fn]["cycles"]["host_user"] for fn in NAMES)
+        hk = sum(data[s][fn]["cycles"]["host_kernel"] for fn in NAMES)
+        rows8.append({"system": s, "total_Mcyc": round(tot, 1),
+                      "guest_user": round(gu, 1),
+                      "host_user": round(hu, 1),
+                      "host_kernel": round(hk, 1)})
+    base_tot = rows8[0]["total_Mcyc"]
+    for r in rows8:
+        r["vs_baseline_%"] = round(pct(r["total_Mcyc"], base_tot), 1)
+
+    # Fig 9: crossing counts
+    rows9 = []
+    for s in SYSTEMS_ORDER:
+        ex = sum(data[s][fn]["crossings"][M.VM_EXIT] for fn in NAMES)
+        wk = sum(data[s][fn]["crossings"][M.VCPU_WAKEUP] for fn in NAMES)
+        rows9.append({"system": s, "vm_exits": round(ex),
+                      "vcpu_wakeups": round(wk)})
+    for r in rows9:
+        r["exits_vs_base"] = round(r["vm_exits"] / rows9[0]["vm_exits"], 2)
+        r["wakeups_vs_base"] = round(
+            r["vcpu_wakeups"] / max(rows9[0]["vcpu_wakeups"], 1), 2)
+
+    print(table(rows7, ["fn", "baseline_ms"] + list(SYSTEMS_ORDER[1:]),
+                title="Fig 7: warm latency vs baseline "
+                      f"(avg reductions {avg_red}; paper: 19%/22%/39%)"))
+    print()
+    print(table(rows8, ["system", "total_Mcyc", "guest_user", "host_user",
+                        "host_kernel", "vs_baseline_%"],
+                title="Fig 8: per-invocation cycles "
+                      "(paper: total -37%, guest-user -28%, Hu +71%)"))
+    print()
+    print(table(rows9, ["system", "vm_exits", "vcpu_wakeups",
+                        "exits_vs_base", "wakeups_vs_base"],
+                title="Fig 9: boundary crossings "
+                      "(paper: exits -53%, wakeups -70%)"))
+
+    payload = {"fig7": rows7, "fig7_avg_reduction": avg_red,
+               "fig8": rows8, "fig9": rows9}
+    save_json("warm_path", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

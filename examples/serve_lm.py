@@ -1,0 +1,24 @@
+"""End-to-end serving example: batched LM requests through Nexus.
+
+Serves 12 batched requests against a reduced llama3-family model with
+the paper's full fast path: ingress hints -> backend prompt prefetch
+overlapped with instance acquisition -> zero-copy arena views -> decode
+-> async completion writeback (response gated on durability).
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import subprocess
+import sys
+
+
+def main():
+    subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve",
+         "--arch", "llama3-8b", "--smoke", "--requests", "12",
+         "--gen", "12", "--prompt-len", "64", "--replicas", "2",
+         "--transport", "rdma"],
+        check=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Regenerate the optimized-vs-baseline roofline comparison markdown."""
+import json
+
+from benchmarks.roofline import roofline_row
+
+base = {}
+for l in open("results/roofline.jsonl"):
+    r = json.loads(l)
+    if "error" not in r and r.get("hlo_analysis"):
+        base[(r["arch"], r["shape"])] = roofline_row(r)
+
+opt = {}
+for l in open("results/roofline_opt.jsonl"):
+    r = json.loads(l)
+    if "error" not in r and r.get("hlo_analysis"):
+        opt[(r["arch"], r["shape"])] = roofline_row(r)
+
+print("| arch | shape | dominant before → after (s) | speedup | frac before → after |")
+print("|---|---|---|---|---|")
+tot_b = tot_a = 0.0
+for key in sorted(base):
+    if key not in opt:
+        continue
+    b, a = base[key], opt[key]
+    bd = max(b["compute_s"], b["memory_s"], b["collective_s"])
+    ad = max(a["compute_s"], a["memory_s"], a["collective_s"])
+    tot_b += bd
+    tot_a += ad
+    print(f"| {key[0]} | {key[1]} | {bd:.3g} → {ad:.3g} | {bd/ad:.1f}x | "
+          f"{b['roofline_fraction']:.4f} → {a['roofline_fraction']:.4f} |")
+print(f"\nSum of dominant terms over all cells: "
+      f"{tot_b:.3g} s → {tot_a:.3g} s (**{tot_b/tot_a:.1f}x**).")

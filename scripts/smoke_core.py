@@ -1,0 +1,36 @@
+"""Scratch driver: exercise the four system variants end to end."""
+import sys
+import time
+
+from repro.core.runtime import SYSTEMS, WorkerNode
+from repro.core.workloads import SUITE
+
+FAIL = []
+for system in ("baseline", "nexus-tcp", "nexus-async", "nexus"):
+    node = WorkerNode(system)
+    try:
+        for fn in ("ST-R", "AES", "CNN"):
+            node.deploy(fn)
+            node.seed_input(fn)
+        t0 = time.monotonic()
+        futs = []
+        for _ in range(3):
+            for fn in ("ST-R", "AES", "CNN"):
+                futs.append(node.invoke(fn))
+        results = [f.result(timeout=60) for f in futs]
+        wall = time.monotonic() - t0
+        assert all(r.output_etag for r in results)
+        cyc = node.acct.snapshot()
+        mem = node.node_memory_mb()
+        warm = node.latency.mean("AES:warm")
+        cold = node.latency.mean("AES:cold")
+        print(f"{system:12s} wall={wall:5.2f}s cold(AES)={cold*1e3:7.1f}ms "
+              f"warm(AES)={warm*1e3:7.1f}ms mem={mem.total():7.1f}MB "
+              f"Mcyc={cyc['total']:8.1f} exits={cyc['crossings'].get('vm_exit',0):7d}")
+    except Exception as e:  # noqa: BLE001
+        FAIL.append((system, repr(e)))
+        import traceback; traceback.print_exc()
+    finally:
+        node.shutdown()
+
+sys.exit(1 if FAIL else 0)

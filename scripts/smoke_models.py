@@ -1,0 +1,53 @@
+"""Scratch driver: run every smoke config through train/prefill/decode."""
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, registry
+from repro.models import get_model
+
+FAILURES = []
+
+for arch in ARCH_IDS:
+    cfg = registry.get_smoke(arch)
+    model = get_model(cfg)
+    rng = jax.random.PRNGKey(0)
+    try:
+        params = model.init_params(rng)
+        B, S = 2, 64
+        if cfg.is_encoder_decoder:
+            batch = {
+                "src_embeds": jax.random.normal(rng, (B, S, cfg.d_model), jnp.bfloat16),
+                "tgt_tokens": jax.random.randint(rng, (B, S), 0, cfg.vocab_size),
+                "targets": jax.random.randint(rng, (B, S), 0, cfg.vocab_size),
+            }
+            pf_batch = {"src_embeds": batch["src_embeds"],
+                        "tgt_tokens": batch["tgt_tokens"]}
+        elif cfg.embed_input:
+            batch = {
+                "inputs_embeds": jax.random.normal(rng, (B, S, cfg.d_model), jnp.bfloat16),
+                "targets": jax.random.randint(rng, (B, S), 0, cfg.vocab_size),
+            }
+            pf_batch = {"inputs_embeds": batch["inputs_embeds"]}
+        else:
+            toks = jax.random.randint(rng, (B, S), 0, cfg.vocab_size)
+            batch = {"tokens": toks, "targets": toks}
+            pf_batch = {"tokens": toks}
+
+        (loss, metrics) = jax.jit(model.loss)(params, batch)
+        assert jnp.isfinite(loss), f"{arch}: loss not finite: {loss}"
+
+        logits, cache = jax.jit(model.prefill)(params, pf_batch)
+        assert logits.shape[0] == B and jnp.all(jnp.isfinite(logits)), f"{arch}: prefill bad"
+
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        logits2, cache2 = jax.jit(model.decode_step)(params, cache, tok)
+        assert logits2.shape == (B, 1, cfg.vocab_size), f"{arch}: decode shape {logits2.shape}"
+        assert jnp.all(jnp.isfinite(logits2)), f"{arch}: decode NaN"
+        print(f"OK   {arch:25s} loss={float(loss):.3f}")
+    except Exception as e:
+        FAILURES.append((arch, repr(e)[:500]))
+        print(f"FAIL {arch:25s} {repr(e)[:300]}")
+
+sys.exit(1 if FAILURES else 0)

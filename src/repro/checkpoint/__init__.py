@@ -1,0 +1,4 @@
+from repro.checkpoint.ckpt import (AsyncCheckpointer, restore_checkpoint,
+                                   save_checkpoint)
+
+__all__ = ["AsyncCheckpointer", "restore_checkpoint", "save_checkpoint"]

@@ -1,0 +1,168 @@
+"""Sharded checkpointing with Nexus async writeback.
+
+Checkpoint saves are the training loop's "output write": with the
+coupled design the step loop blocks while state serializes and uploads;
+under Nexus the arrays are handed to the backend (zero-copy views of
+the serialized shards) and the loop proceeds — the §4.2.5 early-release
+optimization, with the same at-least-once discipline:
+
+* one object per (leaf-chunk) shard, keyed by step + leaf path,
+* a manifest object written LAST; restore reads the manifest first, so
+  a crash mid-save can never yield a half-visible checkpoint (atomic
+  commit),
+* `AsyncCheckpointer.wait()` gates on all pending PUT acks — the step
+  loop calls it before declaring a step durable (and before exiting).
+
+Restore is the "input fetch": manifest + shards are prefetched through
+the backend with exact-size hints, overlapped with process/mesh setup.
+"""
+from __future__ import annotations
+
+import io
+import json
+import threading
+
+import jax
+import numpy as np
+
+from repro.core.backend import NexusBackend
+from repro.core.hints import InputHint, OutputHint
+from repro.core.storage import ObjectStore
+
+
+def _flatten(state) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(state)[0]:
+        key = "/".join(
+            getattr(k, "name", None) or str(getattr(k, "key", k)).strip(".")
+            for k in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _serialize(arr: np.ndarray) -> bytes:
+    """Raw little-endian bytes; shape/dtype live in the manifest (np.save
+    cannot represent ml_dtypes like bfloat16)."""
+    return np.ascontiguousarray(arr).tobytes()
+
+
+def _np_dtype(name: str) -> np.dtype:
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def _deserialize(raw: bytes, dtype: str, shape) -> np.ndarray:
+    return np.frombuffer(raw, dtype=_np_dtype(dtype)).reshape(shape)
+
+
+def save_checkpoint(store: ObjectStore, bucket: str, step: int,
+                    state) -> dict:
+    """Synchronous sharded save (the coupled baseline path)."""
+    flat = _flatten(state)
+    manifest = {"step": step, "leaves": {}}
+    for key, arr in flat.items():
+        obj = f"step-{step:08d}/{key}"
+        store.put(bucket, obj, _serialize(arr))
+        manifest["leaves"][key] = {"object": obj, "shape": list(arr.shape),
+                                   "dtype": str(arr.dtype)}
+    store.put(bucket, f"step-{step:08d}/MANIFEST",
+              json.dumps(manifest).encode())
+    store.put(bucket, "LATEST", str(step).encode())
+    return manifest
+
+
+class AsyncCheckpointer:
+    """Nexus-async saves: hand shards to the backend, keep training."""
+
+    def __init__(self, backend: NexusBackend, bucket: str,
+                 tenant: str = "checkpointer"):
+        self.backend = backend
+        self.bucket = bucket
+        self.tenant = tenant
+        self._cred = backend.register_function(tenant, {bucket})
+        self._pending: list = []
+        self._lock = threading.Lock()
+        self.saves = 0
+
+    def save(self, step: int, state) -> None:
+        flat = _flatten(state)
+        manifest = {"step": step, "leaves": {}}
+        tickets = []
+        for key, arr in flat.items():
+            obj = f"step-{step:08d}/{key}"
+            raw = _serialize(arr)
+            slot = self.backend.arenas.get(self.tenant).alloc(len(raw))
+            slot.write(raw)
+            t = self.backend.submit_put(
+                self.tenant, self._cred, OutputHint(self.bucket, obj),
+                slot, invocation_id=f"ckpt-{step}-{key}")
+            tickets.append(t)
+            manifest["leaves"][key] = {
+                "object": obj, "shape": list(arr.shape),
+                "dtype": str(arr.dtype)}
+
+        # the manifest is the commit point: submit it only after every
+        # shard ticket resolves, from a watcher thread (training loop
+        # does NOT block).
+        def _commit():
+            for t in tickets:
+                t.future.result(timeout=60)
+            raw = json.dumps(manifest).encode()
+            slot = self.backend.arenas.get(self.tenant).alloc(len(raw))
+            slot.write(raw)
+            tm = self.backend.submit_put(
+                self.tenant, self._cred,
+                OutputHint(self.bucket, f"step-{step:08d}/MANIFEST"),
+                slot, invocation_id=f"ckpt-{step}-manifest")
+            tm.future.result(timeout=60)
+            self.backend.remote.store.put(self.bucket, "LATEST",
+                                          str(step).encode())
+
+        th = threading.Thread(target=_commit, daemon=True)
+        th.start()
+        with self._lock:
+            self._pending.append(th)
+            self.saves += 1
+
+    def wait(self, timeout: float = 120.0) -> None:
+        with self._lock:
+            pending, self._pending = self._pending, []
+        for th in pending:
+            th.join(timeout)
+            if th.is_alive():
+                raise TimeoutError("checkpoint commit did not finish")
+
+
+def restore_checkpoint(store: ObjectStore, bucket: str,
+                       step: int | None = None,
+                       backend: NexusBackend | None = None):
+    """Restore a flat {path: array} dict. With a backend, shards are
+    prefetched concurrently (hint-driven), else read directly."""
+    if step is None:
+        step = int(store.get(bucket, "LATEST").decode())
+    manifest = json.loads(store.get(bucket, f"step-{step:08d}/MANIFEST"))
+
+    out: dict[str, np.ndarray] = {}
+    if backend is None:
+        for key, meta in manifest["leaves"].items():
+            out[key] = _deserialize(store.get(bucket, meta["object"]),
+                                    meta["dtype"], meta["shape"])
+        return step, out
+
+    tenant = "ckpt-restore"
+    cred = backend.register_function(tenant, {bucket})
+    handles = {}
+    for key, meta in manifest["leaves"].items():
+        size = store.head(bucket, meta["object"]).size
+        handles[key] = backend.prefetch(
+            tenant, cred, InputHint(bucket, meta["object"], size))
+    for key, h in handles.items():
+        meta = manifest["leaves"][key]
+        slot = h.wait()
+        out[key] = _deserialize(bytes(slot.view()), meta["dtype"],
+                                meta["shape"])
+        slot.release()
+    return step, out

@@ -1,0 +1,32 @@
+"""Nexus core — the paper's contribution as a composable library.
+
+Layers (paper section in brackets):
+
+* `metrics`     — cycle/crossing/memory accounting plane (§3, §7.2)
+* `transport`   — TCP vs kernel-bypass RDMA models (§4.3.2)
+* `fabric`      — communication-fabric cost calibration (§3, Figs 2-3)
+* `arena`       — per-tenant zero-copy shared-memory data plane (§4.3.1)
+* `planes`      — vsock control plane, 4 KB message bound (§4.3.1)
+* `streaming`   — bounded circular-buffer fallback (§4.2.3)
+* `hints`       — ingress promotion of data dependencies (§4.2.2)
+* `credentials` — least-privilege scoped tokens, backend-only (§4.3.3)
+* `ratelimit`   — per-client token buckets (§4.4)
+* `storage`     — remote object store + transports + hedging (§6)
+* `backend`     — the shared host I/O daemon (§4)
+* `frontend`    — thin boto3-mirror stub / coupled baseline (§4.3.2)
+* `lifecycle`   — uVM snapshot restore, warm pools, early release (§4.2)
+* `supervisor`  — crash-only restart loop (§5)
+* `runtime`     — worker node: the four system variants (§6-7)
+* `trace`       — Azure-like MMPP arrival generation (§6)
+* `des`         — virtual-time cluster sim for density sweeps (§7.1)
+"""
+from repro.core.backend import NexusBackend
+from repro.core.frontend import BaselineClient, GuestContext, NexusClient
+from repro.core.runtime import SYSTEMS, SystemSpec, WorkerNode
+from repro.core.storage import ObjectStore
+from repro.core.workloads import SUITE
+
+__all__ = [
+    "NexusBackend", "BaselineClient", "GuestContext", "NexusClient",
+    "SYSTEMS", "SystemSpec", "WorkerNode", "ObjectStore", "SUITE",
+]

@@ -1,0 +1,492 @@
+"""Deployment-density discrete-event simulator (paper §7.1, Fig 6).
+
+The end-to-end density experiment needs hundreds of deployed functions
+served for minutes — far beyond what real threads can replay in-process,
+so (exactly like the warm/cold microbenchmarks feed the paper's Fig 7/12)
+this simulator executes the *same cost model* (`fabric`, `transport`,
+`lifecycle` constants) in virtual time over a cluster of worker nodes:
+
+* each node: `cores` FIFO-scheduled cores (vCPU + backend work contend),
+  `mem_gb` of RAM holding instance RSS + the shared backend;
+* per-function instance pools with synchronous AWS-style autoscaling,
+  keep-alive expiry, cold restores;
+* arrivals from the Azure-like MMPP trace generator;
+* the four system variants differ only in *where* phases run and *what
+  overlaps* — the same structural differences the threaded runtime
+  implements with real threads.
+
+SLO (paper): p99 latency < 5x the function's unloaded median; density =
+max deployed functions whose geometric-mean slowdown meets the SLO.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import math
+from collections import defaultdict, deque
+from dataclasses import dataclass, field
+
+from repro.core import fabric as F
+from repro.core import workloads as W
+from repro.core.runtime import SYSTEMS, SystemSpec
+from repro.core.transport import TRANSPORTS
+
+MB = 1024 * 1024
+GHZ = 2100.0                      # Mcycles per second per core
+
+
+def _cpu_s(mcycles: float) -> float:
+    return mcycles / GHZ
+
+
+# --------------------------------------------------------------- event loop
+
+class EventLoop:
+    def __init__(self):
+        self._q: list = []
+        self._seq = itertools.count()
+        self.now = 0.0
+
+    def at(self, t: float, cb, *args) -> None:
+        heapq.heappush(self._q, (t, next(self._seq), cb, args))
+
+    def after(self, dt: float, cb, *args) -> None:
+        self.at(self.now + dt, cb, *args)
+
+    def run(self, until: float) -> None:
+        while self._q and self._q[0][0] <= until:
+            t, _, cb, args = heapq.heappop(self._q)
+            self.now = t
+            cb(*args)
+        self.now = until
+
+
+# --------------------------------------------------------------- resources
+
+class CorePool:
+    """FIFO slot scheduler (cores, backend connection pool, ...).
+
+    `request(d, cb)` = hold one slot for d seconds then call cb.
+    `acquire(cb)` / `release()` = explicit hold across nested waits
+    (e.g. a backend connection held while its CPU slice queues).
+    """
+
+    def __init__(self, loop: EventLoop, slots: int):
+        self.loop = loop
+        self.cores = slots
+        self.busy = 0
+        self._wait: deque = deque()
+        self.busy_integral = 0.0          # slot-seconds consumed
+        self._last = 0.0
+
+    def _account(self):
+        self.busy_integral += self.busy * (self.loop.now - self._last)
+        self._last = self.loop.now
+
+    def acquire(self, granted_cb) -> None:
+        self._account()
+        if self.busy < self.cores:
+            self.busy += 1
+            self.loop.after(0.0, granted_cb)
+        else:
+            self._wait.append(granted_cb)
+
+    def release(self) -> None:
+        self._account()
+        self.busy -= 1
+        if self._wait:
+            self.busy += 1
+            self.loop.after(0.0, self._wait.popleft())
+
+    def request(self, duration: float, done_cb) -> None:
+        def _go():
+            self.loop.after(duration, _done)
+
+        def _done():
+            self.release()
+            done_cb()
+
+        self.acquire(_go)
+
+    def utilization(self, horizon: float) -> float:
+        return self.busy_integral / (self.cores * horizon) if horizon else 0.0
+
+
+@dataclass
+class SimInstance:
+    fn: str
+    node: int
+    rss_mb: float
+    state: str = "warm"               # warm | busy
+    expire_seq: int = 0               # keep-alive generation
+
+
+class SimNode:
+    def __init__(self, loop: EventLoop, cores: int, mem_mb: float,
+                 backend_base_mb: float, backend_workers: int):
+        self.cpu = CorePool(loop, cores)
+        self.mem_cap = mem_mb
+        self.mem_used = backend_base_mb
+        self.mem_peak = self.mem_used
+        self.vms = 0
+        # the shared backend daemon multiplexes I/O through a finite
+        # worker pool — a real contention point at high density (§7.2.1
+        # notes host-user cycles rise 71% as work moves into it).
+        self.backend = CorePool(loop, backend_workers)
+
+
+# -------------------------------------------------------------- simulator
+
+@dataclass
+class SimResult:
+    system: str
+    n_functions: int
+    latencies: dict[str, list[float]]
+    unloaded: dict[str, float]
+    cpu_util: float
+    mem_util: float
+    cold_starts: int
+    completed: int
+    rejected: int
+
+    def slowdowns(self) -> dict[str, float]:
+        out = {}
+        for fn, xs in self.latencies.items():
+            if not xs:
+                continue
+            xs = sorted(xs)
+            p99 = xs[min(int(0.99 * len(xs)), len(xs) - 1)]
+            out[fn] = p99 / self.unloaded[fn]
+        return out
+
+    def geomean_slowdown(self) -> float:
+        s = [v for v in self.slowdowns().values() if v > 0]
+        if not s:
+            return float("inf")
+        return math.exp(sum(math.log(v) for v in s) / len(s))
+
+    def meets_slo(self, factor: float = 5.0) -> bool:
+        return self.completed > 0 and self.geomean_slowdown() < factor
+
+
+class DensitySimulator:
+    """One run: `n_functions` deployed on a cluster for `duration_s`."""
+
+    KEEPALIVE_S = 60.0
+
+    def __init__(self, system: str, n_functions: int, *, seed: int = 0,
+                 nodes: int = 4, cores: int = 28, mem_gb: float = 128.0,
+                 duration_s: float = 90.0, warmup_s: float = 15.0,
+                 mean_rate: float = 1.6, backend_workers: int = 64,
+                 rate_sigma: float = 1.0, max_vms_per_node: int = 280):
+        self.spec: SystemSpec = SYSTEMS[system]
+        self.n_functions = n_functions
+        self.duration_s = duration_s
+        self.warmup_s = warmup_s
+        self.loop = EventLoop()
+        self.max_vms_per_node = max_vms_per_node
+        backend_mb = (0.0 if self.spec.coupled else F.BACKEND_BASE_MB)
+        self.nodes = [SimNode(self.loop, cores, mem_gb * 1024, backend_mb,
+                              backend_workers)
+                      for _ in range(nodes)]
+        self.transport = TRANSPORTS[self.spec.transport]
+
+        # one deployed function = (name, workload); suite cycles round-robin
+        names = list(W.SUITE)
+        self.functions = [f"{names[i % len(names)]}#{i}"
+                          for i in range(n_functions)]
+        self.workload = {f: W.SUITE[f.split('#')[0]] for f in self.functions}
+
+        from repro.core.trace import ArrivalSpec, generate_arrivals, sample_rates
+        specs = sample_rates(self.functions, seed, mean_rate=mean_rate,
+                             sigma=rate_sigma)
+        self.arrivals = {s.function: generate_arrivals(s, duration_s, seed)
+                         for s in specs}
+
+        self.idle: dict[str, list[SimInstance]] = defaultdict(list)
+        self.backlog: dict[str, deque] = defaultdict(deque)
+        self.latencies: dict[str, list[float]] = defaultdict(list)
+        self.cold_starts = 0
+        self.completed = 0
+        self.rejected = 0
+        self.mem_samples: list[float] = []
+
+        mem_variant = ("baseline" if self.spec.coupled else "nexus")
+        self._rss = {f: F.instance_memory(self.workload[f].extra_libs_mb,
+                                          mem_variant).total()
+                     + (0.0 if self.spec.coupled
+                        else F.BACKEND_PER_INSTANCE_MB)
+                     for f in self.functions}
+
+    # ----------------------------------------------------------- cost model
+
+    def _transport_cpu_s(self, nbytes: int) -> float:
+        tr = self.transport
+        mb = nbytes / MB
+        return _cpu_s(tr.host_kernel_mcyc_per_mb * mb
+                      + tr.host_kernel_mcyc_per_msg
+                      + tr.host_user_mcyc_per_mb * mb)
+
+    def _phases(self, w: W.Workload, cold: bool) -> dict[str, float]:
+        """Critical-path segment durations (seconds) for one invocation.
+        *_cpu phases occupy a node core (guest vCPU and backend work
+        contend equally); *_net phases are wire time."""
+        tr = self.transport
+        in_b, out_b = int(w.input_mb * MB), int(w.output_mb * MB)
+        ph: dict[str, float] = {}
+        if self.spec.coupled:
+            mem = F.instance_memory(w.extra_libs_mb, "baseline")
+            get = F.in_guest_op_cost("aws", "py", in_b)
+            put = F.in_guest_op_cost("aws", "py", out_b)
+            rpc_in, rpc_out = (F.rpc_ingress_cost(True),
+                               F.rpc_ingress_cost(True, 1024))
+        else:
+            mem = F.instance_memory(w.extra_libs_mb, "nexus")
+            get = F.remoted_op_cost("aws", in_b)
+            put = F.remoted_op_cost("aws", out_b)
+            rpc_in, rpc_out = (F.rpc_ingress_cost(False),
+                               F.rpc_ingress_cost(False, 1024))
+        ph["restore"] = F.restore_seconds_components(mem) if cold else 0.0
+        ph["rpc"] = _cpu_s(rpc_in.total())
+        ph["fetch_cpu"] = _cpu_s(get.total()) + self._transport_cpu_s(in_b)
+        ph["fetch_net"] = tr.transfer_latency(in_b)
+        ph["compute"] = _cpu_s(w.compute_mcycles)
+        ph["write_cpu"] = _cpu_s(put.total()) + self._transport_cpu_s(out_b)
+        ph["write_net"] = tr.transfer_latency(out_b)
+        ph["reply"] = _cpu_s(rpc_out.total())
+        return ph
+
+    def unloaded_latency(self, fn: str) -> float:
+        """Warm, zero-contention critical path (the SLO denominator).
+        With restore = 0 no overlap exists, so this is the phase sum for
+        every variant — matching `_execute`'s structure exactly."""
+        ph = self._phases(self.workload[fn], cold=False)
+        return (ph["rpc"] + ph["fetch_cpu"] + ph["fetch_net"]
+                + ph["compute"] + ph["write_cpu"] + ph["write_net"]
+                + ph["reply"])
+
+    # ------------------------------------------------------------ placement
+
+    def _place(self, rss_mb: float) -> int | None:
+        best, best_free = None, -1.0
+        for i, n in enumerate(self.nodes):
+            if n.vms >= self.max_vms_per_node:       # overcommit cap (§6)
+                continue
+            free = n.mem_cap - n.mem_used
+            if free >= rss_mb and free > best_free:
+                best, best_free = i, free
+        return best
+
+    # ------------------------------------------------------------ lifecycle
+
+    def _spawn(self, fn: str) -> SimInstance | None:
+        rss = self._rss[fn]
+        node = self._place(rss)
+        if node is None:
+            return None
+        self.nodes[node].mem_used += rss
+        self.nodes[node].vms += 1
+        self.nodes[node].mem_peak = max(self.nodes[node].mem_peak,
+                                        self.nodes[node].mem_used)
+        self.cold_starts += 1
+        return SimInstance(fn, node, rss)
+
+    def _retire(self, inst: SimInstance, seq: int) -> None:
+        if inst.state == "warm" and inst.expire_seq == seq \
+                and inst in self.idle[inst.fn]:
+            self.idle[inst.fn].remove(inst)
+            self.nodes[inst.node].mem_used -= inst.rss_mb
+            self.nodes[inst.node].vms -= 1
+
+    def _release(self, inst: SimInstance) -> None:
+        """Instance finishes guest work; serve backlog or go idle."""
+        if self.backlog[inst.fn]:
+            t_arr = self.backlog[inst.fn].popleft()
+            self._execute(inst, t_arr, cold=False)
+            return
+        inst.state = "warm"
+        inst.expire_seq += 1
+        self.idle[inst.fn].append(inst)
+        self.loop.after(self.KEEPALIVE_S, self._retire, inst,
+                        inst.expire_seq)
+
+    # ------------------------------------------------------------ invocation
+
+    def _arrive(self, fn: str) -> None:
+        idle = self.idle[fn]
+        if idle:
+            inst = idle.pop()
+            inst.state = "busy"
+            inst.expire_seq += 1
+            self._execute(inst, self.loop.now, cold=False)
+            return
+        inst = self._spawn(fn)
+        if inst is None:
+            # cluster memory-full: queue for a warm instance
+            self.backlog[fn].append(self.loop.now)
+            return
+        inst.state = "busy"
+        self._execute(inst, self.loop.now, cold=True)
+
+    def _execute(self, inst: SimInstance, t_arr: float, cold: bool) -> None:
+        fn = inst.fn
+        w = self.workload[fn]
+        ph = self._phases(w, cold)
+        node = self.nodes[inst.node]
+        loop = self.loop
+
+        def finish_response():
+            lat = loop.now - t_arr
+            if t_arr >= self.warmup_s:
+                self.latencies[fn].append(lat)
+            self.completed += 1
+
+        def restore_phase(done_cb):
+            # REAP working-set insertion is host-side page copying: it
+            # burns a core for its duration (cold only).
+            if cold and ph["restore"] > 0:
+                node.cpu.request(ph["restore"], done_cb)
+            else:
+                loop.after(0.0, done_cb)
+
+        # ---- coupled: strict serial chain, VM held through the write.
+        if self.spec.coupled:
+            def s_restore():
+                restore_phase(lambda: node.cpu.request(ph["rpc"], s_fetch))
+
+            def s_fetch():
+                node.cpu.request(ph["fetch_cpu"],
+                                 lambda: loop.after(ph["fetch_net"],
+                                                    s_compute))
+
+            def s_compute():
+                node.cpu.request(ph["compute"], s_write)
+
+            def s_write():
+                node.cpu.request(ph["write_cpu"],
+                                 lambda: loop.after(ph["write_net"],
+                                                    s_reply))
+
+            def s_reply():
+                node.cpu.request(ph["reply"], done)
+
+            def done():
+                finish_response()
+                self._release(inst)
+
+            s_restore()
+            return
+
+        # ---- nexus: backend terminates RPC; prefetch overlaps restore;
+        #      async writeback releases the VM before the write lands.
+        #      Backend storage ops hold a connection-pool slot: for the
+        #      whole op under TCP (the goroutine blocks on the socket),
+        #      for the CPU slice only under RDMA (completion-driven).
+        state = {"restored": False, "fetched": False}
+        bypass = self.transport.kernel_bypass
+
+        def backend_op(cpu_s: float, net_s: float, done_cb) -> None:
+            def granted():
+                def after_cpu():
+                    if bypass:
+                        node.backend.release()
+                        loop.after(net_s, done_cb)
+                    else:
+                        loop.after(net_s, lambda: (node.backend.release(),
+                                                   done_cb()))
+                node.cpu.request(cpu_s, after_cpu)
+            node.backend.acquire(granted)
+
+        def join_then_compute():
+            if state["restored"] and state["fetched"]:
+                node.cpu.request(ph["compute"], after_compute)
+
+        def s_restore_done():
+            state["restored"] = True
+            join_then_compute()
+
+        def s_fetch_done():
+            state["fetched"] = True
+            join_then_compute()
+
+        if self.spec.prefetch:
+            # hinted prefetch truly overlaps the restore: both chains
+            # start at ingress time, compute fires at the join.
+            restore_phase(s_restore_done)
+            node.cpu.request(ph["rpc"], lambda: backend_op(
+                ph["fetch_cpu"], ph["fetch_net"], s_fetch_done))
+        else:
+            # Nexus-TCP: the guest must be up before it can ask for the
+            # fetch — restore -> rpc -> fetch serialization remains.
+            def after_restore():
+                state["restored"] = True
+                node.cpu.request(ph["rpc"], lambda: backend_op(
+                    ph["fetch_cpu"], ph["fetch_net"], s_fetch_done))
+            restore_phase(after_restore)
+
+        def after_compute():
+            if self.spec.async_writeback:
+                self._release(inst)            # EARLY RELEASE
+                backend_op(ph["write_cpu"], ph["write_net"], ack)
+            else:
+                backend_op(ph["write_cpu"], ph["write_net"], sync_ack)
+
+        def ack():
+            node.cpu.request(ph["reply"], finish_response)
+
+        def sync_ack():
+            def done():
+                finish_response()
+                self._release(inst)
+            node.cpu.request(ph["reply"], done)
+
+        # NOTE: under prefetch, a warm instance's fetch still completes
+        # concurrently with RPC dispatch — join handles both orders.
+
+    # ---------------------------------------------------------------- run
+
+    def run(self) -> SimResult:
+        for fn, times in self.arrivals.items():
+            for t in times:
+                self.loop.at(t, self._arrive, fn)
+        # memory sampling
+        def sample():
+            used = sum(n.mem_used for n in self.nodes)
+            cap = sum(n.mem_cap for n in self.nodes)
+            self.mem_samples.append(used / cap)
+            if self.loop.now < self.duration_s - 1.0:
+                self.loop.after(1.0, sample)
+        self.loop.after(self.warmup_s, sample)
+        self.loop.run(self.duration_s + 30.0)   # drain tail
+
+        horizon = self.duration_s + 30.0
+        cpu_util = (sum(n.cpu.busy_integral for n in self.nodes)
+                    / sum(n.cpu.cores for n in self.nodes) / horizon)
+        mem_util = (sum(self.mem_samples) / len(self.mem_samples)
+                    if self.mem_samples else 0.0)
+        base_names = {f: f.split("#")[0] for f in self.functions}
+        unloaded = {f: self.unloaded_latency(f) for f in self.functions}
+        return SimResult(
+            system=self.spec.name, n_functions=self.n_functions,
+            latencies=dict(self.latencies), unloaded=unloaded,
+            cpu_util=cpu_util, mem_util=mem_util,
+            cold_starts=self.cold_starts, completed=self.completed,
+            rejected=self.rejected)
+
+
+def find_density(system: str, *, lo: int = 20, hi: int = 800,
+                 step: int = 20, slo: float = 5.0, seed: int = 0,
+                 **kw) -> tuple[int, list[SimResult]]:
+    """Sweep deployed-function count; return (max n meeting SLO, results)."""
+    results = []
+    best = 0
+    n = lo
+    while n <= hi:
+        r = DensitySimulator(system, n, seed=seed, **kw).run()
+        results.append(r)
+        if r.meets_slo(slo):
+            best = n
+            n += step
+        else:
+            break
+    return best, results

@@ -1,0 +1,151 @@
+"""Guest-side clients: the thin Nexus frontend stub vs the coupled SDK.
+
+`NexusClient` mirrors the boto3 S3 surface (`get_object` / `put_object`)
+in ~100 LoC of guest logic: marshal parameters, one control-plane round
+trip, return a zero-copy view into the tenant arena. All SDK heavy
+lifting (connection pooling, signing, HTTP formatting) happens in the
+backend — the guest never links the cloud SDK, the RPC framework, or a
+TCP stack, and never sees a credential (only the opaque handle).
+
+`BaselineClient` is the coupled design: the full SDK executes in-guest
+(Python), every byte traverses the virtualized network path, and the
+instance blocks on its own writes.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+
+from repro.core import fabric as F
+from repro.core import metrics as M
+from repro.core.backend import BackendCrashed, NexusBackend, PrefetchHandle
+from repro.core.hints import InputHint, OutputHint
+from repro.core.storage import RemoteStorage
+from repro.core.streaming import CircularBuffer
+
+
+@dataclass
+class GuestContext:
+    """What the guest is allowed to hold: opaque identifiers only."""
+
+    tenant: str
+    cred_handle: str
+    invocation_id: str = ""
+    prefetch: PrefetchHandle | None = None
+    state: dict = field(default_factory=dict)
+
+
+class NexusClient:
+    """boto3-compatible frontend stub (paper: 645 LoC Python)."""
+
+    def __init__(self, ctx: GuestContext, backend_ref, acct: M.CycleAccount,
+                 *, max_retries: int = 3):
+        self._ctx = ctx
+        # `backend_ref` is a callable returning the *current* backend —
+        # after a crash the supervisor swaps in a fresh one and the stub
+        # transparently retries (§5).
+        self._backend_ref = backend_ref
+        self._acct = acct
+        self._max_retries = max_retries
+        self.pending_puts: list = []
+
+    @property
+    def _backend(self) -> NexusBackend:
+        return self._backend_ref()
+
+    def _charge_stub_call(self, sdk: str, nbytes: int) -> None:
+        nominal = int(nbytes * self._backend.remote.cost_scale)
+        F.remoted_op_cost(sdk, nominal).charge(self._acct)
+
+    def _retry(self, fn):
+        last: BaseException | None = None
+        for _ in range(self._max_retries):
+            try:
+                return fn()
+            except BackendCrashed as e:
+                last = e
+                threading.Event().wait(0.002)   # supervisor restart window
+        raise last if last else RuntimeError("retry exhausted")
+
+    # ------------------------------------------------------------- boto3 API
+
+    def get_object(self, Bucket: str, Key: str) -> dict:
+        """S3 GET. Fast path: the hinted prefetch already landed the
+        payload in the arena — return the view with zero network work
+        (§4.2.4). Otherwise remote a synchronous fetch to the backend."""
+        pf = self._ctx.prefetch
+        if (pf is not None and pf.hint.bucket == Bucket
+                and pf.hint.key == Key):
+            slot = pf.wait()
+            self._charge_stub_call("aws", 0)     # pointer return: no bytes move
+            return {"Body": slot.view(), "ContentLength": slot.used,
+                    "_slot": slot}
+        slot = self._retry(lambda: self._backend.fetch_sync(
+            self._ctx.tenant, self._ctx.cred_handle, Bucket, Key))
+        self._charge_stub_call("aws", slot.used)
+        return {"Body": slot.view(), "ContentLength": slot.used,
+                "_slot": slot}
+
+    def get_object_streaming(self, Bucket: str, Key: str,
+                             chunk: int = 256 * 1024) -> CircularBuffer:
+        """Opaque-payload fallback: bounded ring, no prefetch overlap."""
+        buf = CircularBuffer(capacity=max(chunk * 4, 1 << 20))
+        self._retry(lambda: self._backend.fetch_stream(
+            self._ctx.tenant, self._ctx.cred_handle, Bucket, Key, buf, chunk))
+        self._charge_stub_call("aws", 0)
+        return buf
+
+    def put_object(self, Bucket: str, Key: str, Body, *,
+                   wait: bool = True):
+        """S3 PUT. Copies the output once into an arena slot (the only
+        copy on the whole path), then delegates to the backend. With
+        ``wait=False`` (Nexus-Async) control returns immediately and the
+        ticket is recorded so the invocation response can gate on it."""
+        def _submit():
+            be = self._backend
+            slot = be.arenas.get(self._ctx.tenant).alloc(max(len(Body), 1))
+            slot.write(Body)
+            return be.submit_put(
+                self._ctx.tenant, self._ctx.cred_handle,
+                OutputHint(Bucket, Key), slot, self._ctx.invocation_id)
+
+        ticket = self._retry(_submit)
+        self._charge_stub_call("aws", len(Body))
+        if wait:
+            return ticket.future.result(timeout=30.0)
+        self.pending_puts.append(ticket)
+        return ticket
+
+
+class BaselineClient:
+    """Coupled design: full boto3-over-TCP inside the guest (§2.2).
+
+    The SDK's cycles execute on the instance's 1 vCPU and therefore sit
+    squarely on the invocation's latency path — they are slept (at the
+    paper's 2.1 GHz) as well as accounted.
+    """
+
+    def __init__(self, remote: RemoteStorage, acct: M.CycleAccount,
+                 lang: str = "py", sleep=None):
+        import time
+        self._remote = remote
+        self._acct = acct
+        self._lang = lang
+        self._sleep = sleep or time.sleep
+
+    def _run_fabric(self, nbytes: int) -> None:
+        nominal = int(nbytes * self._remote.cost_scale)
+        cost = F.in_guest_op_cost("aws", self._lang, nominal)
+        cost.charge(self._acct)
+        self._sleep(cost.total() / 2100.0)
+
+    def get_object(self, Bucket: str, Key: str) -> dict:
+        data = self._remote.get(Bucket, Key)
+        self._run_fabric(len(data))
+        # the guest SDK deserializes into its own buffers: one extra copy
+        body = bytearray(data)
+        return {"Body": memoryview(body), "ContentLength": len(data)}
+
+    def put_object(self, Bucket: str, Key: str, Body):
+        self._run_fabric(len(Body))
+        return self._remote.put(Bucket, Key, bytes(Body))

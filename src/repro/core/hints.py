@@ -1,0 +1,71 @@
+"""Ingress routing hints (paper §4.2.2).
+
+Modern orchestration frameworks already parse incoming event payloads to
+route requests. Nexus's ingress layer promotes deterministic data
+dependencies found in the trigger event (target bucket/key/size) into
+RPC metadata headers *before* the invocation reaches the worker node —
+zero user-code changes. 96% of surveyed functions have such
+deterministic inputs; the rest take the streaming fallback.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class InputHint:
+    bucket: str
+    key: str
+    size_bytes: int | None       # None -> size opaque (streaming fallback)
+
+    @property
+    def prefetchable(self) -> bool:
+        return self.size_bytes is not None
+
+
+@dataclass(frozen=True)
+class OutputHint:
+    bucket: str
+    key: str
+
+
+def extract_hints(event: dict | str) -> tuple[InputHint | None, OutputHint | None]:
+    """Parse a trigger event (S3-notification / Step-Functions style JSON)
+    and promote data dependencies to metadata. Returns (None, None) for
+    opaque events — the platform then uses the streaming fallback."""
+    if isinstance(event, str):
+        try:
+            event = json.loads(event)
+        except json.JSONDecodeError:
+            return None, None
+
+    inp = out = None
+    # S3 event notification shape
+    records = event.get("Records") or []
+    if records and "s3" in records[0]:
+        s3 = records[0]["s3"]
+        inp = InputHint(
+            bucket=s3["bucket"]["name"],
+            key=s3["object"]["key"],
+            size_bytes=s3["object"].get("size"))
+    # workflow-style direct payload reference
+    if "input" in event and isinstance(event["input"], dict):
+        i = event["input"]
+        if "bucket" in i and "key" in i:
+            inp = InputHint(i["bucket"], i["key"], i.get("size"))
+    if "output" in event and isinstance(event["output"], dict):
+        o = event["output"]
+        if "bucket" in o and "key" in o:
+            out = OutputHint(o["bucket"], o["key"])
+    return inp, out
+
+
+def make_event(in_bucket: str, in_key: str, size: int | None,
+               out_bucket: str, out_key: str) -> dict:
+    """Build a deterministic-input trigger event (test/benchmark helper)."""
+    return {
+        "input": {"bucket": in_bucket, "key": in_key,
+                  **({"size": size} if size is not None else {})},
+        "output": {"bucket": out_bucket, "key": out_key},
+    }

@@ -1,0 +1,174 @@
+"""Function-instance lifecycle: snapshot restore, warm pool, release.
+
+An instance is the unit the paper colocates by the hundred: a microVM
+restored from a REAP snapshot, executing one invocation at a time on a
+1-vCPU budget. Restore time scales with the recorded working-set pages
+(paper Fig 13) — which is exactly where offloading the fabric pays at
+cold-start time: a leaner RSS means fewer pages to insert.
+
+`InstancePool` implements the warm pool + on-demand scaling the paper's
+synchronous AWS-Lambda-style autoscaler uses, and the *early release*
+that async writeback unlocks (§4.2.5): a Nexus instance returns to the
+pool as soon as compute finishes, not when the output write completes.
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+import time
+from dataclasses import dataclass, field
+
+from repro.core import fabric as F
+from repro.core import metrics as M
+from repro.core.workloads import Workload
+
+_iid = itertools.count()
+
+
+@dataclass
+class RestoreBreakdown:
+    create_s: float = 0.0
+    ws_insert_s: float = 0.0
+    ws_pages: int = 0
+
+    @property
+    def total_s(self) -> float:
+        return self.create_s + self.ws_insert_s
+
+
+class FunctionInstance:
+    """One microVM hosting one function; executes invocations serially."""
+
+    def __init__(self, workload: Workload, system: str,
+                 acct: M.CycleAccount, sleep=time.sleep):
+        self.id = next(_iid)
+        self.workload = workload
+        self.system = system                       # memory-variant label
+        self.acct = acct
+        self._sleep = sleep
+        self._busy = threading.Lock()
+        self.state = "cold"
+        mem_variant = "baseline" if system == "baseline" else (
+            "nexus-sdk-only" if system == "nexus-sdk-only" else "nexus")
+        self.memory = F.instance_memory(workload.extra_libs_mb, mem_variant)
+        self.restore_info: RestoreBreakdown | None = None
+
+    @property
+    def rss_mb(self) -> float:
+        return self.memory.total()
+
+    def restore(self) -> RestoreBreakdown:
+        """Snapshot restore (REAP): create uVM + insert working set."""
+        pages = F.working_set_pages_components(self.memory)
+        bd = RestoreBreakdown(
+            create_s=F.SNAPSHOT_FIXED_S,
+            ws_insert_s=pages * F.RESTORE_US_PER_PAGE * 1e-6,
+            ws_pages=pages)
+        self._sleep(bd.total_s)
+        # page-fault handling burns host-kernel cycles + exits
+        self.acct.charge(M.HOST_KERNEL, pages * 2.0e-3)
+        self.acct.cross(M.VM_EXIT, pages // 8)     # REAP batches faults
+        self.state = "warm"
+        self.restore_info = bd
+        return bd
+
+    def acquire(self) -> bool:
+        """Claim the instance for one invocation (1 vCPU => serial)."""
+        ok = self._busy.acquire(blocking=False)
+        if ok:
+            self.state = "busy"
+        return ok
+
+    def release(self) -> None:
+        self.state = "warm"
+        self._busy.release()
+
+    def compute(self, view: memoryview) -> bytes:
+        """Run the user handler: real bytes + modeled vCPU occupancy."""
+        t0 = time.monotonic()
+        out = self.workload.handler(view)
+        real = time.monotonic() - t0
+        # modeled vCPU time at the paper's 2.1 GHz: Mcycles / 2100 = seconds
+        modeled = self.workload.compute_mcycles / 2100.0
+        remaining = modeled - real
+        if remaining > 0:
+            self._sleep(remaining)
+        self.acct.charge(M.GUEST_USER, self.workload.compute_mcycles)
+        # busy-guest exits (syscalls/GC/timers) that offloading can't remove
+        exits = max(int(modeled * F.COMPUTE_EXITS_PER_SEC), 1)
+        self.acct.cross(M.VM_EXIT, exits)
+        self.acct.cross(M.VCPU_WAKEUP,
+                        int(exits * F.COMPUTE_WAKEUPS_PER_EXIT))
+        return out
+
+
+class InstancePool:
+    """Per-function pool with warm reuse and on-demand cold starts."""
+
+    def __init__(self, workload: Workload, system: str,
+                 acct: M.CycleAccount, sleep=time.sleep,
+                 max_instances: int = 64):
+        self.workload = workload
+        self.system = system
+        self.acct = acct
+        self._sleep = sleep
+        self.max_instances = max_instances
+        self._lock = threading.Lock()
+        self._instances: list[FunctionInstance] = []
+        self.cold_starts = 0
+        self.warm_hits = 0
+
+    def instances(self) -> list[FunctionInstance]:
+        with self._lock:
+            return list(self._instances)
+
+    def has_warm(self) -> bool:
+        with self._lock:
+            return any(i.state == "warm" for i in self._instances)
+
+    def total_rss_mb(self) -> float:
+        return sum(i.rss_mb for i in self.instances())
+
+    def acquire(self) -> tuple[FunctionInstance, bool]:
+        """Returns (instance, was_cold). Restores a new uVM if needed."""
+        with self._lock:
+            for inst in self._instances:
+                if inst.state == "warm" and inst.acquire():
+                    self.warm_hits += 1
+                    return inst, False
+            if len(self._instances) >= self.max_instances:
+                raise RuntimeError(
+                    f"{self.workload.name}: instance cap reached")
+            inst = FunctionInstance(self.workload, self.system, self.acct,
+                                    self._sleep)
+            assert inst.acquire()
+            self._instances.append(inst)
+            self.cold_starts += 1
+        inst.restore()          # outside the pool lock: restores overlap
+        return inst, True
+
+    def start_restore_async(self) -> "tuple[FunctionInstance, threading.Event]":
+        """Begin restoring a fresh instance in the background (used by
+        Nexus to overlap restore with input prefetch, §4.2.1)."""
+        with self._lock:
+            inst = FunctionInstance(self.workload, self.system, self.acct,
+                                    self._sleep)
+            assert inst.acquire()
+            self._instances.append(inst)
+            self.cold_starts += 1
+        done = threading.Event()
+
+        def _run():
+            inst.restore()
+            done.set()
+
+        threading.Thread(target=_run, daemon=True).start()
+        return inst, done
+
+    def scale_down(self, keep: int = 0) -> int:
+        with self._lock:
+            idle = [i for i in self._instances if i.state == "warm"]
+            drop = idle[keep:]
+            for i in drop:
+                self._instances.remove(i)
+            return len(drop)

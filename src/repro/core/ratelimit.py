@@ -1,0 +1,68 @@
+"""Per-SDK-client token-bucket rate limiting (paper §4.4).
+
+Mirrors the baseline's per-virtio-thread fixed transmission rate
+(600 Mbps-class, as on AWS Lambda) inside the Nexus backend, via the
+same semantics as golang.org/x/time/rate: a bucket refilled at `rate`
+bytes/s with `burst` capacity; `reserve(n)` returns the delay the caller
+must wait before the transfer may proceed. If a function holds several
+SDK clients, its budget is divided equally among them (§4.4).
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+MBPS = 1024 * 1024 / 8          # bytes/s per Mbit/s
+DEFAULT_RATE_MBPS = 600.0
+
+
+class TokenBucket:
+    def __init__(self, rate_bps: float, burst_bytes: float | None = None,
+                 clock=time.monotonic):
+        self.rate = float(rate_bps)
+        self.burst = float(burst_bytes if burst_bytes is not None
+                           else rate_bps * 0.25)      # 250 ms of burst
+        self._tokens = self.burst
+        self._last = clock()
+        self._clock = clock
+        self._lock = threading.Lock()
+
+    def _refill(self, now: float) -> None:
+        self._tokens = min(self.burst,
+                           self._tokens + (now - self._last) * self.rate)
+        self._last = now
+
+    def reserve(self, nbytes: int) -> float:
+        """Debit `nbytes`; return seconds the caller must delay (>= 0)."""
+        with self._lock:
+            now = self._clock()
+            self._refill(now)
+            self._tokens -= nbytes
+            if self._tokens >= 0:
+                return 0.0
+            return -self._tokens / self.rate
+
+    def throttle(self, nbytes: int, sleep=time.sleep) -> float:
+        d = self.reserve(nbytes)
+        if d > 0:
+            sleep(d)
+        return d
+
+
+class ClientLimiter:
+    """Per-function budget split across its SDK clients (§4.4)."""
+
+    def __init__(self, total_rate_mbps: float = DEFAULT_RATE_MBPS):
+        self._total = total_rate_mbps * MBPS
+        self._buckets: dict[str, TokenBucket] = {}
+        self._lock = threading.Lock()
+
+    def bucket(self, client: str) -> TokenBucket:
+        with self._lock:
+            if client not in self._buckets:
+                self._buckets[client] = TokenBucket(1.0)   # placeholder rate
+                per = self._total / len(self._buckets)
+                for b in self._buckets.values():
+                    b.rate = per
+                    b.burst = per * 0.25
+            return self._buckets[client]

@@ -1,0 +1,307 @@
+"""Worker-node runtime: the anatomy of an invocation (paper §4.2).
+
+Implements the four evaluated systems on one `WorkerNode`:
+
+* ``baseline``     — coupled: guest gRPC server + in-guest boto3; strict
+                     restore -> fetch -> compute -> write serialization.
+* ``nexus-tcp``    — fabric offloaded to the shared backend over TCP;
+                     fetch/write still synchronous w.r.t. the instance.
+* ``nexus-async``  — + hinted input prefetch overlapped with restore,
+                     async output write + early instance release.
+* ``nexus``        — nexus-async atop RDMA (kernel-bypass transport).
+
+Every invocation is executed by real threads over real bytes: restores
+overlap with prefetches because two threads really run concurrently;
+zero-copy is real (`memoryview` into the tenant arena). Latencies are
+modeled constants (slept); cycles/crossings are accounted per §3's
+calibration. ``byte_scale`` shrinks *real* payload bytes to keep Python
+hashing off the critical path while hints/costs use nominal sizes.
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+import time
+import uuid
+from concurrent.futures import Future, ThreadPoolExecutor
+from dataclasses import dataclass, field
+
+from repro.core import fabric as F
+from repro.core import metrics as M
+from repro.core.backend import NexusBackend
+from repro.core.frontend import BaselineClient, GuestContext, NexusClient
+from repro.core.hints import InputHint, OutputHint, extract_hints, make_event
+from repro.core.lifecycle import InstancePool
+from repro.core.storage import FaultPlan, ObjectStore, RemoteStorage
+from repro.core.supervisor import Supervisor
+from repro.core.workloads import SUITE, Workload
+
+MB = 1024 * 1024
+
+
+@dataclass(frozen=True)
+class SystemSpec:
+    name: str
+    offload_sdk: bool
+    offload_rpc: bool
+    prefetch: bool
+    async_writeback: bool
+    transport: str
+
+    @property
+    def coupled(self) -> bool:
+        return not self.offload_sdk
+
+
+SYSTEMS: dict[str, SystemSpec] = {
+    "baseline":    SystemSpec("baseline", False, False, False, False, "tcp"),
+    "nexus-tcp":   SystemSpec("nexus-tcp", True, True, False, False, "tcp"),
+    "nexus-async": SystemSpec("nexus-async", True, True, True, True, "tcp"),
+    "nexus":       SystemSpec("nexus", True, True, True, True, "rdma"),
+    # memory-figure-only variant (Fig 3): SDK offloaded, RPC kept in guest
+    "nexus-sdk-only": SystemSpec("nexus-sdk-only", True, False, False, False,
+                                 "tcp"),
+}
+
+
+@dataclass
+class InvocationResult:
+    invocation_id: str
+    function: str
+    cold: bool
+    latency_s: float
+    breakdown: dict[str, float] = field(default_factory=dict)
+    output_etag: int | None = None
+
+
+class WorkerNode:
+    """One worker node running a system variant over the workload suite."""
+
+    def __init__(self, system: str, *, store: ObjectStore | None = None,
+                 byte_scale: float = 1 / 32, workers: int = 32,
+                 faults: FaultPlan | None = None,
+                 hedge_after_s: float | None = None,
+                 max_instances_per_fn: int = 64):
+        self.spec = SYSTEMS[system]
+        self.acct = M.CycleAccount()
+        self.latency = M.LatencyTrace()
+        self.byte_scale = byte_scale
+        self.store = store if store is not None else ObjectStore()
+        self.remote = RemoteStorage(
+            self.store, self.spec.transport, self.acct,
+            hedge_after_s=hedge_after_s, faults=faults,
+            cost_scale=1.0 / byte_scale)
+        self._pools: dict[str, InstancePool] = {}
+        self._creds: dict[str, str] = {}
+        self._ingress = ThreadPoolExecutor(max_workers=workers,
+                                           thread_name_prefix="ingress")
+        self._inv_counter = itertools.count()
+        self._max_instances = max_instances_per_fn
+
+        if not self.spec.coupled:
+            self.supervisor = Supervisor(self._make_backend)
+            self.supervisor.start()
+        else:
+            self.supervisor = None
+
+    # ------------------------------------------------------------- plumbing
+
+    def _make_backend(self) -> NexusBackend:
+        # arena registry + token vault live with the node/orchestrator
+        # and are re-attached across backend restarts (crash-only, §5).
+        if not hasattr(self, "_arenas"):
+            from repro.core.arena import ArenaRegistry
+            from repro.core.credentials import TokenManager
+            self._arenas = ArenaRegistry()
+            self._tokens = TokenManager()
+        return NexusBackend(self.remote, self.acct,
+                            transport_name=self.spec.transport,
+                            arenas=self._arenas, tokens=self._tokens)
+
+    @property
+    def backend(self) -> NexusBackend | None:
+        return self.supervisor.backend if self.supervisor else None
+
+    def deploy(self, fn_name: str) -> None:
+        w = SUITE[fn_name]
+        self._pools[fn_name] = InstancePool(
+            w, self.spec.name, self.acct,
+            max_instances=self._max_instances)
+        if self.supervisor:
+            self._creds[fn_name] = self.backend.register_function(
+                fn_name, {"in", "out"})
+
+    def seed_input(self, fn_name: str, key: str | None = None) -> str:
+        """Stage the function's nominal input object in remote storage."""
+        w = SUITE[fn_name]
+        key = key or f"{fn_name}-input"
+        real = max(int(w.input_mb * MB * self.byte_scale), 1024)
+        self.store.put("in", key, bytes(bytearray(real)))
+        return key
+
+    # ------------------------------------------------------------- metrics
+
+    def node_memory_mb(self) -> M.MemoryAccount:
+        acct = M.MemoryAccount()
+        n = 0
+        for pool in self._pools.values():
+            for inst in pool.instances():
+                n += 1
+                for comp, mb in inst.memory.components.items():
+                    acct.add(comp, mb)
+        if self.backend is not None:
+            acct.add("nexus_backend", self.backend.memory_mb(n))
+        return acct
+
+    # ----------------------------------------------------------- invocation
+
+    def invoke(self, fn_name: str, *, input_key: str | None = None,
+               opaque: bool = False) -> "Future[InvocationResult]":
+        """Submit one invocation; returns the caller's response future.
+        The future resolves only after outputs are durably written
+        (at-least-once, §4.2.5) — even under async writeback."""
+        inv_id = f"{fn_name}-{next(self._inv_counter)}-{uuid.uuid4().hex[:6]}"
+        input_key = input_key or f"{fn_name}-input"
+        w = SUITE[fn_name]
+        size_hint = (None if opaque or not w.deterministic_input
+                     else self.store.head("in", input_key).size)
+        event = make_event("in", input_key, size_hint, "out", f"{inv_id}-out")
+        if self.spec.coupled:
+            return self._ingress.submit(self._run_baseline, w, inv_id, event)
+        return self._ingress.submit(self._run_nexus, w, inv_id, event)
+
+    # --------------------------------------------------- coupled (baseline)
+
+    def _run_baseline(self, w: Workload, inv_id: str,
+                      event: dict) -> InvocationResult:
+        t0 = time.monotonic()
+        bd: dict[str, float] = {}
+        pool = self._pools[w.name]
+
+        # 1. cold path: the RPC server cannot accept until the VM is up.
+        t = time.monotonic()
+        inst, cold = pool.acquire()
+        bd["restore"] = time.monotonic() - t
+
+        # 2. RPC arrives at the guest gRPC server.
+        F.rpc_ingress_cost(in_guest=True).charge(self.acct)
+        inp, out = extract_hints(event)        # hints exist but are unused
+
+        client = BaselineClient(self.remote, self.acct)
+        try:
+            # 3. in-guest fetch (blocking).
+            t = time.monotonic()
+            obj = client.get_object(Bucket=inp.bucket, Key=inp.key)
+            bd["fetch"] = time.monotonic() - t
+
+            # 4. compute.
+            t = time.monotonic()
+            result = inst.compute(obj["Body"])
+            bd["compute"] = time.monotonic() - t
+
+            # 5. in-guest write (blocking) — VM held captive.
+            t = time.monotonic()
+            real_out = result[:max(int(w.output_mb * MB * self.byte_scale), 1)]
+            meta = client.put_object(Bucket=out.bucket, Key=out.key,
+                                     Body=real_out)
+            bd["write"] = time.monotonic() - t
+
+            # 6. respond through the same guest RPC path.
+            F.rpc_ingress_cost(in_guest=True, nbytes=1024).charge(self.acct)
+        finally:
+            inst.release()
+
+        lat = time.monotonic() - t0
+        self.latency.record(f"{w.name}:{'cold' if cold else 'warm'}", lat)
+        return InvocationResult(inv_id, w.name, cold, lat, bd, meta.etag)
+
+    # ------------------------------------------------------------- nexus
+
+    def _run_nexus(self, w: Workload, inv_id: str,
+                   event: dict) -> InvocationResult:
+        t0 = time.monotonic()
+        bd: dict[str, float] = {}
+        pool = self._pools[w.name]
+        be = self.backend
+        cred = self._creds[w.name]
+
+        # 1. backend terminates the RPC natively; hints promoted by ingress.
+        be.terminate_rpc()
+        inp, out = extract_hints(event)
+
+        ctx = GuestContext(tenant=w.name, cred_handle=cred,
+                           invocation_id=inv_id)
+
+        # 2. provision instance and (optionally) prefetch IN PARALLEL.
+        #    A cold VM first needs the backend to establish its per-VM
+        #    storage connections (paper Fig 12 "Add Server": QP setup
+        #    dominates under RDMA) — serial with the fetch, overlapped
+        #    with the restore.
+        t = time.monotonic()
+        cold_expected = not self._pools[w.name].has_warm()
+        prefetching = (self.spec.prefetch and inp is not None
+                       and inp.prefetchable)
+        if prefetching:
+            if cold_expected:
+                ctx.prefetch = be.prefetch(
+                    w.name, cred, inp,
+                    pre_connect=f"{w.name}#vm-{inv_id}")
+            else:
+                ctx.prefetch = be.prefetch(w.name, cred, inp)
+        elif cold_expected:
+            be.connection_setup(f"{w.name}#vm-{inv_id}")
+
+        inst, cold = pool.acquire()            # restore overlaps prefetch
+        bd["restore"] = time.monotonic() - t
+
+        client = NexusClient(ctx, lambda: self.supervisor.backend, self.acct)
+        try:
+            # 3. guest fetch: pointer-return if prefetched, remoted sync GET
+            #    otherwise. Size-opaque inputs use the streaming fallback
+            #    (§4.2.3): no exactly-sized region can be pre-mapped.
+            t = time.monotonic()
+            if inp is None or not inp.prefetchable:
+                buf = client.get_object_streaming(Bucket="in",
+                                                  Key=event["input"]["key"])
+                body: memoryview | bytes = buf.read_all()
+                slot = None
+            else:
+                obj = client.get_object(Bucket=inp.bucket, Key=inp.key)
+                body, slot = obj["Body"], obj.get("_slot")
+            bd["fetch"] = time.monotonic() - t
+
+            # 4. compute on the zero-copy view.
+            t = time.monotonic()
+            result = inst.compute(body)
+            bd["compute"] = time.monotonic() - t
+            if slot is not None:
+                slot.release()
+
+            # 5. output write. Async: hand off + early release (§4.2.5).
+            t = time.monotonic()
+            real_out = result[:max(int(w.output_mb * MB * self.byte_scale), 1)]
+            ticket = client.put_object(
+                Bucket=out.bucket, Key=out.key, Body=real_out,
+                wait=not self.spec.async_writeback)
+            bd["write_handoff"] = time.monotonic() - t
+        finally:
+            inst.release()                     # early release happens HERE
+        bd["vm_busy"] = time.monotonic() - t0
+
+        # 6. response released only after the write is acked.
+        if self.spec.async_writeback:
+            etag = ticket.future.result(timeout=30.0)
+        else:
+            etag = ticket
+        bd["write_ack"] = time.monotonic() - t0 - bd["vm_busy"]
+
+        lat = time.monotonic() - t0
+        self.latency.record(f"{w.name}:{'cold' if cold else 'warm'}", lat)
+        return InvocationResult(inv_id, w.name, cold, lat, bd, etag)
+
+    # ------------------------------------------------------------ teardown
+
+    def shutdown(self) -> None:
+        self._ingress.shutdown(wait=True)
+        if self.supervisor:
+            self.supervisor.stop()

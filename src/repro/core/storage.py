@@ -1,0 +1,156 @@
+"""Remote object storage (MinIO-stand-in) + transport-modeled access.
+
+`ObjectStore` is the cluster's remote storage service: a thread-safe
+versioned KV of real bytes (the paper's 4 dedicated MinIO nodes — never
+the bottleneck, so service time is bandwidth + base latency only).
+
+`RemoteStorage` is what a worker-side fabric talks to: it applies the
+chosen transport's latency (really slept) and cycle costs (accounted),
+plus optional hedged reads for straggler mitigation — a second request
+is issued if the first exceeds the hedge threshold, first response wins
+(framework-scale fault-tolerance feature; off in paper-faithful runs).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass
+
+from repro.core import metrics as M
+from repro.core.transport import TransportSpec, TRANSPORTS
+
+MB = 1024 * 1024
+
+
+class StorageError(KeyError):
+    pass
+
+
+@dataclass
+class ObjectMeta:
+    size: int
+    etag: int          # version counter
+
+
+class ObjectStore:
+    """The remote, shared object store (lives off the worker node)."""
+
+    def __init__(self):
+        self._data: dict[str, bytes] = {}
+        self._meta: dict[str, ObjectMeta] = {}
+        self._lock = threading.RLock()
+        self.gets = 0
+        self.puts = 0
+
+    @staticmethod
+    def _key(bucket: str, key: str) -> str:
+        return f"{bucket}/{key}"
+
+    def put(self, bucket: str, key: str, data: bytes) -> ObjectMeta:
+        k = self._key(bucket, key)
+        with self._lock:
+            etag = self._meta[k].etag + 1 if k in self._meta else 1
+            self._data[k] = bytes(data)
+            self._meta[k] = ObjectMeta(len(data), etag)
+            self.puts += 1
+            return self._meta[k]
+
+    def get(self, bucket: str, key: str) -> bytes:
+        k = self._key(bucket, key)
+        with self._lock:
+            if k not in self._data:
+                raise StorageError(f"NoSuchKey: {k}")
+            self.gets += 1
+            return self._data[k]
+
+    def head(self, bucket: str, key: str) -> ObjectMeta:
+        k = self._key(bucket, key)
+        with self._lock:
+            if k not in self._meta:
+                raise StorageError(f"NoSuchKey: {k}")
+            return self._meta[k]
+
+    def delete(self, bucket: str, key: str) -> None:
+        k = self._key(bucket, key)
+        with self._lock:
+            self._data.pop(k, None)
+            self._meta.pop(k, None)
+
+
+@dataclass
+class FaultPlan:
+    """Deterministic fault injection for resilience tests/benchmarks."""
+
+    slow_every: int = 0            # every Nth op is a straggler
+    slow_factor: float = 8.0
+    fail_every: int = 0            # every Nth op raises (transient)
+
+
+class RemoteStorage:
+    """Worker-side access path to the store over a modeled transport."""
+
+    def __init__(self, store: ObjectStore, transport: TransportSpec | str,
+                 acct: M.CycleAccount, *, hedge_after_s: float | None = None,
+                 faults: FaultPlan | None = None, sleep=time.sleep,
+                 cost_scale: float = 1.0):
+        self.store = store
+        self.transport = (TRANSPORTS[transport]
+                          if isinstance(transport, str) else transport)
+        self.acct = acct
+        # benchmarks shrink REAL payload bytes (hash cost) by byte_scale;
+        # cost_scale (= 1/byte_scale) restores NOMINAL sizes for every
+        # latency/cycle/crossing model so the physics stay full-size.
+        self.cost_scale = cost_scale
+        self.hedge_after_s = hedge_after_s
+        self.faults = faults or FaultPlan()
+        self._sleep = sleep
+        self._op_counter = 0
+        self._lock = threading.Lock()
+        self.hedges_fired = 0
+        self.transient_failures = 0
+
+    def _next_op(self) -> int:
+        with self._lock:
+            self._op_counter += 1
+            return self._op_counter
+
+    def _service_time(self, nbytes: int, op_no: int) -> float:
+        t = self.transport.transfer_latency(int(nbytes * self.cost_scale))
+        if self.faults.slow_every and op_no % self.faults.slow_every == 0:
+            t *= self.faults.slow_factor
+        return t
+
+    def _maybe_fail(self, op_no: int) -> None:
+        if self.faults.fail_every and op_no % self.faults.fail_every == 0:
+            self.transient_failures += 1
+            raise ConnectionError(f"transient storage failure (op {op_no})")
+
+    def get(self, bucket: str, key: str) -> bytes:
+        op = self._next_op()
+        self._maybe_fail(op)
+        data = self.store.get(bucket, key)
+        t = self._service_time(len(data), op)
+        if self.hedge_after_s is not None and t > self.hedge_after_s:
+            # hedged read: fire a duplicate request; it completes at the
+            # un-slowed service time, and the first response wins.
+            self.hedges_fired += 1
+            t = min(t, self.hedge_after_s
+                    + self.transport.transfer_latency(
+                        int(len(data) * self.cost_scale)))
+        self._sleep(t)
+        self.transport.charge_transfer(self.acct,
+                                       int(len(data) * self.cost_scale))
+        return data
+
+    def put(self, bucket: str, key: str, data) -> ObjectMeta:
+        op = self._next_op()
+        self._maybe_fail(op)
+        nbytes = len(data)
+        self._sleep(self._service_time(nbytes, op))
+        self.transport.charge_transfer(self.acct,
+                                       int(nbytes * self.cost_scale))
+        return self.store.put(bucket, key, bytes(data))
+
+    def head(self, bucket: str, key: str) -> ObjectMeta:
+        self._sleep(self.transport.base_latency_s)
+        return self.store.head(bucket, key)

@@ -1,0 +1,63 @@
+"""Crash-only backend supervision (paper §5).
+
+The backend is stateless by design: if the daemon faults, a host
+supervisor rapidly restarts it while frontend stubs transparently retry
+their requests, converting potential failures into transient latency
+spikes. The idempotency table is intentionally lost on restart —
+retried writes re-execute, preserving at-least-once semantics.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Callable
+
+from repro.core.backend import NexusBackend
+
+
+class Supervisor:
+    def __init__(self, factory: Callable[[], NexusBackend],
+                 poll_interval_s: float = 0.001,
+                 restart_delay_s: float = 0.002):
+        self._factory = factory
+        self._poll = poll_interval_s
+        self._restart_delay = restart_delay_s
+        self._backend = factory()
+        self._running = False
+        self._thread: threading.Thread | None = None
+        self.restarts = 0
+        self._lock = threading.Lock()
+
+    @property
+    def backend(self) -> NexusBackend:
+        with self._lock:
+            return self._backend
+
+    def start(self) -> None:
+        self._running = True
+        self._thread = threading.Thread(target=self._watch, daemon=True,
+                                        name="nexus-supervisor")
+        self._thread.start()
+
+    def _watch(self) -> None:
+        while self._running:
+            be = self.backend
+            if not be.alive:
+                time.sleep(self._restart_delay)     # restart cost
+                fresh = self._factory()
+                with self._lock:
+                    # carry over arena registry? NO — crash-only: fresh
+                    # state; frontends re-drive in-flight transfers.
+                    self._backend = fresh
+                self.restarts += 1
+            time.sleep(self._poll)
+
+    def kill_backend(self) -> None:
+        """Fault injection entry point used by tests/benchmarks."""
+        self.backend.crash()
+
+    def stop(self) -> None:
+        self._running = False
+        if self._thread:
+            self._thread.join(timeout=1.0)
+        self.backend.shutdown()

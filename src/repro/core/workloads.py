@@ -1,0 +1,89 @@
+"""vSwarm-like workload suite (paper §6).
+
+Ten Python functions ordered from most I/O-intensive to most
+compute-intensive, with compute-to-I/O time ratios spanning ~10%..90%.
+Each workload declares its storage traffic (input/output object sizes),
+its pure-compute cost, and extra resident libraries (e.g. PyTorch for
+CNN/RNN). `handler` is a *real* function body executed by the threaded
+runtime — it computes over the (zero-copy) payload view so that
+correctness of the data plane is exercised, scaled so wall time stays
+in the low milliseconds.
+"""
+from __future__ import annotations
+
+import hashlib
+import zlib
+from dataclasses import dataclass
+from typing import Callable
+
+MB = 1024 * 1024
+
+
+@dataclass(frozen=True)
+class Workload:
+    name: str
+    input_mb: float              # object GET size
+    output_mb: float             # object PUT size
+    compute_mcycles: float       # user-logic cost per invocation
+    extra_libs_mb: float         # resident libs beyond the base runtime
+    handler: Callable[[memoryview], bytes]
+    # deterministic input hint available at ingress (paper: 96% of fns)
+    deterministic_input: bool = True
+
+    @property
+    def io_mb(self) -> float:
+        return self.input_mb + self.output_mb
+
+
+def _digest_n(view: memoryview, out_mb: float, rounds: int = 1) -> bytes:
+    """Hash the payload `rounds` times, expand digest to out_mb bytes."""
+    h = hashlib.sha256()
+    for _ in range(rounds):
+        h.update(view)
+    block = h.digest() * 1024                      # 32 KB
+    reps = max(int(out_mb * MB) // len(block), 1)
+    return block * reps
+
+
+def _crc_reduce(view: memoryview, out_mb: float) -> bytes:
+    crc = zlib.crc32(view) & 0xFFFFFFFF
+    block = crc.to_bytes(4, "little") * 8192       # 32 KB
+    return block * max(int(out_mb * MB) // len(block), 1)
+
+
+def _wl(name, input_mb, output_mb, compute, libs, out_fn=None, **kw):
+    fn = out_fn or (lambda v, o=output_mb: _digest_n(v, o))
+    return Workload(name, input_mb, output_mb, compute, libs, fn, **kw)
+
+
+# Compute budgets in Mcycles; at 2.1 GHz, 100 Mcycles ~= 48 ms.
+# I/O share decreases top to bottom (paper order: ST-R most I/O-heavy).
+SUITE: dict[str, Workload] = {w.name: w for w in [
+    # name      in_MB out_MB compute libs
+    _wl("ST-R", 18.0, 6.0, 14.0, 55.0,
+        out_fn=lambda v: _crc_reduce(v, 6.0)),          # stacking reducer
+    _wl("LR-S", 9.0, 0.3, 11.0, 68.0),                  # sklearn-ish infer
+    _wl("AES", 4.0, 4.0, 36.0, 28.0,
+        out_fn=lambda v: _digest_n(v, 4.0, rounds=2)),  # encryption
+    _wl("WEB", 1.2, 0.4, 30.0, 36.0),                   # templated web
+    _wl("ST-T", 12.0, 4.0, 95.0, 55.0),                 # stacking trainer
+    _wl("RNN", 0.8, 0.2, 82.0, 78.0),                   # RNN serving (torch)
+    _wl("MAP", 3.0, 3.0, 88.0, 32.0),                    # JSON map
+    _wl("RED", 3.0, 1.0, 92.0, 32.0),                    # JSON reduce
+    _wl("CNN", 1.5, 0.1, 210.0, 82.0),                  # CNN serving (torch)
+    _wl("IR", 2.5, 1.8, 185.0, 59.0),                   # image resize
+]}
+
+NAMES = list(SUITE)
+
+
+def compute_io_ratio(w: Workload, io_mcycles_per_mb: float = 12.0) -> float:
+    """Approximate compute share of (compute + baseline-I/O) cycles."""
+    io = w.io_mb * io_mcycles_per_mb
+    return w.compute_mcycles / (w.compute_mcycles + io)
+
+
+#: a balanced deployment mix (paper: each function contributes equally
+#: to CPU utilization -> weight inversely to per-invocation cost).
+def balanced_mix() -> list[str]:
+    return list(NAMES)

@@ -1,0 +1,3 @@
+from repro.data.pipeline import DataPipeline, SyntheticCorpus
+
+__all__ = ["DataPipeline", "SyntheticCorpus"]

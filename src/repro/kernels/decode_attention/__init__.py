@@ -1,0 +1,5 @@
+from repro.kernels.decode_attention.kernel import flash_decode
+from repro.kernels.decode_attention.ops import decode_mha
+from repro.kernels.decode_attention.ref import decode_ref
+
+__all__ = ["flash_decode", "decode_mha", "decode_ref"]

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the flash-decoding kernel (ring-cache masking)."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_ref(q, k_cache, v_cache, slot_pos, pos, *, window: int = 0):
+    """q: (B, H, 1, hd); caches: (B, K, W, hd); slot_pos: (B, W);
+    pos: (B,). Returns (B, H, 1, hd)."""
+    B, H, _, hd = q.shape
+    K, W = k_cache.shape[1], k_cache.shape[2]
+    G = H // K
+    qg = q.reshape(B, K, G, hd).astype(jnp.float32) / math.sqrt(hd)
+    s = jnp.einsum("bkgd,bkwd->bkgw", qg, k_cache.astype(jnp.float32))
+    valid = (slot_pos >= 0) & (slot_pos <= pos[:, None])
+    if window > 0:
+        valid &= (pos[:, None] - slot_pos) < window
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-30)
+    o = jnp.einsum("bkgw,bkwd->bkgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, H, 1, hd).astype(q.dtype)

@@ -1,0 +1,144 @@
+"""Flash-attention prefill kernel (causal + GQA + sliding window).
+
+TPU-native blocking: the grid is (batch, q_heads, q_blocks, kv_blocks)
+with the kv dimension innermost and sequential ("arbitrary"), so the
+online-softmax state (m, l, acc) lives in VMEM scratch across kv steps
+and the output tile is written exactly once, on the last kv block the
+q block actually visits. Q/K/V tiles are BlockSpec'd into VMEM at
+(block_q, head_dim) / (block_k, head_dim); the MXU sees
+(block_q x head_dim) @ (head_dim x block_k) matmuls — hardware-aligned
+for block sizes that are multiples of 128 and head_dim in {64, 128}.
+
+GQA is expressed in the index maps: q head h reads kv head h // group
+— no KV replication in HBM. Sliding windows bound which kv blocks can
+contribute; fully-masked blocks are skipped with @pl.when so SWA
+prefill does O(S * W) work, not O(S^2).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                 scale: float, block_q: int, block_k: int, seq_len: int,
+                 window: int, causal: bool):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    q_base = qi * block_q
+    k_base = ki * block_k
+
+    # --- static-shape mask bounds for this (q block, kv block) pair
+    q_pos = q_base + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    k_pos = k_base + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = k_pos < seq_len
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= (q_pos - k_pos) < window
+
+    # can this kv block contribute at all? (trace-time arithmetic where
+    # possible keeps the skip cheap; runtime pl.when elides the matmuls)
+    relevant = k_base < seq_len
+    if causal:
+        relevant &= k_base <= q_base + block_q - 1
+    if window > 0:
+        relevant &= (q_base - (k_base + block_k - 1)) < window
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(relevant)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32) * scale      # (bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)              # (bk, hd)
+        v = v_ref[0, 0].astype(jnp.float32)              # (bk, hd)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = jnp.where(mask, s, NEG_INF)                  # (bq, bk)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1)
+        acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                        + jax.lax.dot_general(
+                            p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _write():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[...] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)[None, None]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "block_q", "block_k",
+                              "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = True):
+    """q: (B, H, Sq, hd); k, v: (B, K, Sk, hd) with H = K * G.
+
+    Returns (B, H, Sq, hd) in q.dtype. `window` > 0 = sliding window.
+    `interpret=True` runs the kernel body on CPU (validation); on TPU
+    pass interpret=False.
+    """
+    B, H, Sq, hd = q.shape
+    K, Sk = k.shape[1], k.shape[2]
+    G = H // K
+    scale = 1.0 / math.sqrt(hd)
+
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    pad_q = (-Sq) % block_q
+    pad_k = (-Sk) % block_k
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    nq = q.shape[2] // block_q
+    nk = k.shape[2] // block_k
+
+    grid = (B, H, nq, nk)
+    kernel = functools.partial(
+        _attn_kernel, scale=scale, block_q=block_q, block_k=block_k,
+        seq_len=Sk, window=window, causal=causal)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd),
+                         lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, qi, ki, G=G: (b, h // G, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, qi, ki, G=G: (b, h // G, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd),
+                               lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, nq * block_q, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),       # m: running max
+            pltpu.VMEM((block_q,), jnp.float32),       # l: running sum
+            pltpu.VMEM((block_q, hd), jnp.float32),    # acc: running out
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :Sq]

@@ -1,0 +1,5 @@
+from repro.kernels.ssm_scan.kernel import ssm_scan
+from repro.kernels.ssm_scan.ops import selective_scan
+from repro.kernels.ssm_scan.ref import ssm_scan_ref
+
+__all__ = ["ssm_scan", "selective_scan", "ssm_scan_ref"]

@@ -1,0 +1,22 @@
+"""jit'd public wrapper for the selective scan."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.ssm_scan.kernel import ssm_scan
+from repro.kernels.ssm_scan.ref import ssm_scan_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def selective_scan(dt, xr, Bmat, Cmat, A, h0, *,
+                   use_kernel: bool | str = "auto", chunk: int = 128,
+                   block_d: int = 128):
+    if use_kernel == "auto":
+        use_kernel = _on_tpu()
+    if use_kernel:
+        return ssm_scan(dt, xr, Bmat, Cmat, A, h0, chunk=chunk,
+                        block_d=block_d, interpret=not _on_tpu())
+    return ssm_scan_ref(dt, xr, Bmat, Cmat, A, h0)

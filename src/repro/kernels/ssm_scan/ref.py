@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the selective scan: naive sequential recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssm_scan_ref(dt, xr, Bmat, Cmat, A, h0):
+    """dt, xr: (B, S, di); Bmat, Cmat: (B, S, N); A: (di, N);
+    h0: (B, di, N). Returns (y (B, S, di), h_final)."""
+    def step(h, xs):
+        dt_t, xr_t, b_t, c_t = xs                       # (B,di),(B,di),(B,N)
+        da = jnp.exp(dt_t[..., None] * A)               # (B, di, N)
+        dbx = (dt_t * xr_t)[..., None] * b_t[:, None, :]
+        h = h * da + dbx
+        y = jnp.sum(h * c_t[:, None, :], axis=-1)       # (B, di)
+        return h, y
+
+    xs = (dt.transpose(1, 0, 2), xr.transpose(1, 0, 2),
+          Bmat.transpose(1, 0, 2), Cmat.transpose(1, 0, 2))
+    h_final, ys = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    return ys.transpose(1, 0, 2), h_final

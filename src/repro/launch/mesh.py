@@ -1,0 +1,37 @@
+"""Production mesh construction.
+
+A FUNCTION (not module-level state) so importing this module never
+touches jax device initialization — the dry-run driver sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before any jax
+import; tests and benches see the real single CPU device.
+
+Mesh shapes (TPU v5e-class pods):
+* single-pod:  (data=16, model=16)            — 256 chips
+* multi-pod:   (pod=2, data=16, model=16)     — 512 chips, 2 pods
+The `pod` axis carries only data parallelism (DP all-reduce over DCN);
+`data` is intra-pod FSDP; `model` is tensor/expert parallelism over ICI.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(devices: int | None = None) -> jax.sharding.Mesh:
+    """Tiny mesh over whatever devices exist (tests on 1 CPU device)."""
+    n = devices or len(jax.devices())
+    return jax.make_mesh((1, n), ("data", "model"))
+
+
+def data_axes(mesh: jax.sharding.Mesh) -> tuple[str, ...]:
+    """Axes that carry the batch dimension (pod included if present)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def model_axis_size(mesh: jax.sharding.Mesh) -> int:
+    return mesh.shape["model"]

@@ -1,0 +1,212 @@
+"""GSPMD sharding rules for params, optimizer state, batches and caches.
+
+Scheme (DESIGN.md §3): 2-D param sharding —
+* the *feature/contracting-adjacent* large dim over ``model`` (TP/EP),
+* the other large dim over the batch axes (``(pod,) data``) = FSDP/ZeRO-3,
+* optimizer moments inherit the param specs (ZeRO-3),
+* activations: batch over ``(pod, data)``, features over ``model``.
+
+Every rule is divisibility-guarded: a mesh axis is only assigned to a
+tensor dim it divides evenly (e.g. kv_heads=8 cannot shard over
+model=16 -> replicated; yi-34b's 56 heads shard over the flattened
+H*head_dim dim instead). This is what makes ALL 40 (arch x shape) cells
+lower and compile on the same fixed production mesh.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import data_axes
+
+
+def _fits(dim: int, mesh: Mesh, axes) -> bool:
+    """Mesh axes (str or tuple) divide `dim` evenly."""
+    if axes is None:
+        return True
+    if isinstance(axes, str):
+        axes = (axes,)
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return dim % size == 0
+
+
+def _guard(spec: tuple, shape: tuple[int, ...], mesh: Mesh) -> P:
+    """Drop any axis assignment that does not divide its dim."""
+    out = []
+    for dim, axes in zip(shape, spec):
+        out.append(axes if _fits(dim, mesh, axes) else None)
+    return P(*out)
+
+
+# --------------------------------------------------------------- param rules
+#
+# Path-pattern -> (spec template, using 'F' for the FSDP axes tuple and
+# 'M' for the model axis; None = replicated). Templates are matched
+# against '/'-joined tree paths; first match wins. Leading layer-stack
+# axes are handled by padding the template with None on the left.
+
+_PARAM_RULES: list[tuple[str, tuple]] = [
+    # embeddings / heads: vocab over model (TP vocab), feature over FSDP
+    (r"embed$",               ("M", "F")),
+    (r"lm_head$",             ("F", "M")),
+    # attention projections (D, H*hd) / (H*hd, D)
+    (r"attn/w[qkv]$",         ("F", "M")),
+    (r"attn/wo$",             ("M", "F")),
+    (r"xattn/w[qkv]$",        ("F", "M")),
+    (r"xattn/wo$",            ("M", "F")),
+    (r"attn/b[qkv]$",         ("M",)),
+    (r"attn/[qk]_norm$",      (None,)),
+    # dense MLP (D, F) / (F, D)
+    (r"mlp/w_(gate|up)$",     ("F", "M")),
+    (r"mlp/w_down$",          ("M", "F")),
+    # MoE: experts over model (EP), expert-internal dims FSDP
+    (r"moe/router$",          ("F", None)),
+    (r"moe/w_(gate|up)$",     ("M", "F", None)),
+    (r"moe/w_down$",          ("M", None, "F")),
+    # Mamba: d_inner over model, D over FSDP
+    (r"mamba/in_proj$",       ("F", "M")),
+    (r"mamba/out_proj$",      ("M", "F")),
+    (r"mamba/x_proj$",        ("M", None)),
+    (r"mamba/dt_proj$",       (None, "M")),
+    (r"mamba/(conv_w)$",      (None, "M")),
+    (r"mamba/(conv_b|dt_bias|D_skip)$", ("M",)),
+    (r"mamba/A_log$",         ("M", None)),
+    # norms and anything 1-D: replicated
+    (r".*",                   None),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if isinstance(k, jax.tree_util.DictKey):
+            parts.append(str(k.key))
+        elif isinstance(k, jax.tree_util.SequenceKey):
+            parts.append(str(k.idx))
+        elif isinstance(k, jax.tree_util.GetAttrKey):
+            parts.append(k.name)            # dataclass field (TrainState)
+        else:
+            parts.append(str(k).strip("."))
+    return "/".join(parts)
+
+
+def param_spec(path: str, shape: tuple[int, ...], mesh: Mesh) -> P:
+    fsdp = data_axes(mesh)
+    # MoE expert weights: EP over `model` when E divides it; otherwise
+    # TP *within* each (replicated) expert — shard the FFN width so the
+    # model axis does 1/16th of the expert compute instead of repeating
+    # it (SPerf cell B iteration 3).
+    m = re.search(r"moe/w_(gate|up|down)$", path)
+    if m and len(shape) >= 3 and shape[-3] % mesh.shape["model"] != 0:
+        if m.group(1) == "down":                  # (E, F, D)
+            return _guard((None, "model", fsdp), shape, mesh)
+        return _guard((None, fsdp, "model"), shape, mesh)  # (E, D, F)
+    for pat, template in _PARAM_RULES:
+        if re.search(pat, path):
+            if template is None:
+                return P()
+            tpl = [fsdp if t == "F" else ("model" if t == "M" else None)
+                   for t in template]
+            # stacked-layer (or stacked-expert) leading axes -> None
+            pad = len(shape) - len(tpl)
+            tpl = [None] * pad + tpl
+            return _guard(tuple(tpl), shape, mesh)
+    return P()
+
+
+def param_shardings(param_shapes: Any, mesh: Mesh) -> Any:
+    """Tree of NamedShardings matching an eval_shape(init_params) tree."""
+    def one(path, leaf):
+        return NamedSharding(mesh, param_spec(_path_str(path), leaf.shape,
+                                              mesh))
+    return jax.tree_util.tree_map_with_path(one, param_shapes)
+
+
+def state_shardings(state_shapes: Any, mesh: Mesh) -> Any:
+    """TrainState: step replicated; params/mu/nu/err share param specs."""
+    def one(path, leaf):
+        p = _path_str(path)
+        if p.startswith(("params/", "mu/", "nu/", "err/")):
+            sub = p.split("/", 1)[1]
+            return NamedSharding(mesh, param_spec(sub, leaf.shape, mesh))
+        return NamedSharding(mesh, P())
+    return jax.tree_util.tree_map_with_path(one, state_shapes)
+
+
+# --------------------------------------------------------------- batch rules
+
+def batch_spec(path: str, shape: tuple[int, ...], mesh: Mesh) -> P:
+    """Token/embedding batches: batch dim over (pod, data)."""
+    fsdp = data_axes(mesh)
+    spec: list = [fsdp if _fits(shape[0], mesh, fsdp) else None]
+    spec += [None] * (len(shape) - 1)
+    return P(*spec)
+
+
+def batch_shardings(batch_shapes: Any, mesh: Mesh) -> Any:
+    def one(path, leaf):
+        return NamedSharding(mesh, batch_spec(_path_str(path), leaf.shape,
+                                              mesh))
+    return jax.tree_util.tree_map_with_path(one, batch_shapes)
+
+
+# --------------------------------------------------------------- cache rules
+
+def cache_spec(path: str, shape: tuple[int, ...], mesh: Mesh,
+               kind: str = "decode") -> P:
+    """Decode caches (leading layer axis, then batch):
+
+    * attention k/v (L, B, W, K, hd): batch over FSDP axes; HEAD_DIM over
+      `model`. W-sharding was the paper-faithful baseline but makes the
+      ring write a dynamic update on a sharded axis — GSPMD lowers that
+      to a full-cache masked rewrite per layer (measured 100x decode HBM
+      blowup, §Perf llama3 iteration); hd-sharding keeps writes
+      partition-local at the cost of one small score all-reduce.
+    * cross k/v likewise; ssm conv/ssm states: d_inner over `model`.
+    * slot_pos (B, W): replicated W, batch over FSDP.
+    """
+    fsdp = data_axes(mesh)
+    leaf = path.split("/")[-1]
+    if leaf in ("k", "v", "cross_k", "cross_v"):
+        if kind == "prefill":
+            # prefill writes the whole window sequentially: W-sharding
+            # fits HBM and costs nothing (no ring writes yet); the one
+            # reshard to the decode layout is paid per REQUEST.
+            return _guard((None, fsdp, "model", None, None), shape, mesh)
+        return _guard((None, fsdp, None, None, "model"), shape, mesh)
+    if leaf == "conv":
+        return _guard((None, fsdp, None, "model"), shape, mesh)
+    if leaf == "ssm":
+        return _guard((None, fsdp, "model", None), shape, mesh)
+    if leaf == "slot_pos":
+        return _guard((fsdp, None), shape, mesh)
+    if leaf == "pos":
+        return _guard((fsdp,), shape, mesh)
+    # scalars / counters
+    return P()
+
+
+def cache_shardings(cache_shapes: Any, mesh: Mesh,
+                    kind: str = "decode") -> Any:
+    def one(path, leaf):
+        return NamedSharding(mesh, cache_spec(_path_str(path), leaf.shape,
+                                              mesh, kind))
+    return jax.tree_util.tree_map_with_path(one, cache_shapes)
+
+
+# ----------------------------------------------------------------- logits
+
+def logits_sharding(mesh: Mesh, shape: tuple[int, ...] | None = None
+                    ) -> NamedSharding:
+    """(B, S, V) logits: batch over FSDP axes, vocab over model —
+    divisibility-guarded (long_500k has B=1; internvl2's vocab is odd)."""
+    fsdp = data_axes(mesh)
+    if shape is None:
+        return NamedSharding(mesh, P(fsdp, None, "model"))
+    return NamedSharding(mesh, _guard((fsdp, None, "model"), shape, mesh))

@@ -1,0 +1,63 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input.
+
+Weak-type-correct, shardable, zero allocation — exactly what
+`jit(...).lower()` needs to validate the full-scale configs without
+touching device memory. Shapes come from the assignment's four regimes;
+modality-frontend archs (vlm/audio) get precomputed embedding specs per
+the assignment's STUB rule.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import kv_cache as kvc
+
+SDS = jax.ShapeDtypeStruct
+
+
+def train_batch_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.is_encoder_decoder:
+        # audio frontend stub: precomputed frame embeddings, 1 frame/token
+        return {
+            "src_embeds": SDS((B, S, cfg.d_model), jnp.bfloat16),
+            "tgt_tokens": SDS((B, S), jnp.int32),
+            "targets": SDS((B, S), jnp.int32),
+        }
+    if cfg.embed_input:
+        return {
+            "inputs_embeds": SDS((B, S, cfg.d_model), jnp.bfloat16),
+            "targets": SDS((B, S), jnp.int32),
+        }
+    return {
+        "tokens": SDS((B, S), jnp.int32),
+        "targets": SDS((B, S), jnp.int32),
+    }
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.is_encoder_decoder:
+        return {
+            "src_embeds": SDS((B, S, cfg.d_model), jnp.bfloat16),
+            "tgt_tokens": SDS((B, S), jnp.int32),
+        }
+    if cfg.embed_input:
+        return {"inputs_embeds": SDS((B, S, cfg.d_model), jnp.bfloat16)}
+    return {"tokens": SDS((B, S), jnp.int32)}
+
+
+def decode_cache_specs(cfg: ModelConfig, shape: InputShape):
+    """Abstract decode cache for a seq_len-deep context (no allocation)."""
+    B, S = shape.global_batch, shape.seq_len
+    return jax.eval_shape(lambda: kvc.init_cache(cfg, B, S))
+
+
+def decode_token_spec(cfg: ModelConfig, shape: InputShape):
+    return SDS((shape.global_batch, 1), jnp.int32)
+
+
+def param_specs(model):
+    return model.param_shapes()

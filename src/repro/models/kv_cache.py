@@ -1,0 +1,84 @@
+"""KV / SSM cache containers.
+
+Caches are plain pytrees with leading layer axis (stacked, so the layer
+scan carries them). Sliding-window archs use a ring buffer of width
+``window``; ``slot_pos`` tracks the absolute position stored in each
+slot (-1 = empty), which makes masking exact for both full and ring
+caches and supports per-sequence positions (continuous batching).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cache_width(cfg, seq_len: int) -> int:
+    """Ring-buffer width: full seq for dense, window-bounded for SWA."""
+    if cfg.sliding_window:
+        return min(seq_len, cfg.sliding_window)
+    return seq_len
+
+
+def init_attn_cache(cfg, batch, seq_len, num_layers=None, dtype=jnp.bfloat16):
+    L = num_layers if num_layers is not None else cfg.num_layers
+    W = cache_width(cfg, seq_len)
+    K, hd = cfg.num_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((L, batch, W, K, hd), dtype),
+        "v": jnp.zeros((L, batch, W, K, hd), dtype),
+    }
+
+
+def init_ssm_cache(cfg, batch, num_layers=None, dtype=jnp.bfloat16):
+    L = num_layers if num_layers is not None else cfg.num_layers
+    di, N, c = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    return {
+        "conv": jnp.zeros((L, batch, c - 1, di), dtype),
+        "ssm": jnp.zeros((L, batch, di, N), jnp.float32),
+    }
+
+
+def init_cache(cfg, batch, seq_len, dtype=jnp.bfloat16):
+    """Full decode cache for one model instance."""
+    cache = {"pos": jnp.zeros((batch,), jnp.int32)}
+    if cfg.family in ("dense", "vlm", "moe", "audio"):
+        cache.update(init_attn_cache(cfg, batch, seq_len, dtype=dtype))
+        W = cache_width(cfg, seq_len)
+        cache["slot_pos"] = jnp.full((batch, W), -1, jnp.int32)
+    if cfg.family == "ssm":
+        cache.update(init_ssm_cache(cfg, batch, dtype=dtype))
+    if cfg.family == "hybrid":
+        cache.update(init_attn_cache(cfg, batch, seq_len, dtype=dtype))
+        W = cache_width(cfg, seq_len)
+        cache["slot_pos"] = jnp.full((batch, W), -1, jnp.int32)
+        cache.update(init_ssm_cache(cfg, batch, dtype=dtype))
+    if cfg.is_encoder_decoder:
+        # cross-attention K/V over the (encoded) source sequence
+        cache["cross_k"] = jnp.zeros(
+            (cfg.num_layers, batch, seq_len, cfg.num_kv_heads, cfg.head_dim), dtype)
+        cache["cross_v"] = jnp.zeros_like(cache["cross_k"])
+    return cache
+
+
+def write_prefill_entries(cache_k, k, positions):
+    """Write prefill K (B, S, K, hd) into a ring cache (B, W, K, hd)."""
+    W = cache_k.shape[1]
+    S = k.shape[1]
+    if S <= W:
+        return cache_k.at[:, :S].set(k)
+    # keep the last W positions (ring layout: slot = pos % W)
+    tail = k[:, S - W:]
+    slots = (jnp.arange(S - W, S) % W).astype(jnp.int32)
+    return cache_k.at[:, slots].set(tail)
+
+
+def prefill_slot_pos(seq_len, width, batch):
+    """slot_pos after a prefill of ``seq_len`` tokens into width-W ring."""
+    if seq_len <= width:
+        pos = jnp.where(jnp.arange(width) < seq_len,
+                        jnp.arange(width), -1)
+    else:
+        slots = jnp.arange(width)
+        last = seq_len - 1
+        # slot s holds the largest position p <= last with p % W == s
+        pos = last - ((last - slots) % width)
+    return jnp.broadcast_to(pos.astype(jnp.int32), (batch, width))

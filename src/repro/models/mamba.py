@@ -1,0 +1,159 @@
+"""Mamba-1 selective-SSM block (Falcon-Mamba / Hymba SSM branch).
+
+The selective scan is computed chunk-wise: an outer ``lax.scan`` over
+sequence chunks carries the recurrent state, and an inner
+``lax.associative_scan`` parallelizes within the chunk. This keeps the
+materialized (B, chunk, d_inner, N) tensors VMEM/HBM-friendly — the same
+blocking the Pallas kernel (kernels/ssm_scan) uses on TPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, shard_hint, split_rngs
+
+SCAN_CHUNK = 128
+
+
+def init_mamba(rng, cfg, dtype):
+    D, di, N, R, c = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank, cfg.ssm_conv
+    r = split_rngs(rng, 6)
+    # S4D-real initialization for A: A_log = log(1..N) per channel
+    a_init = jnp.tile(jnp.log(jnp.arange(1, N + 1, dtype=jnp.float32)), (di, 1))
+    return {
+        "in_proj": dense_init(r[0], (D, 2 * di), 0, dtype),
+        "conv_w": dense_init(r[1], (c, di), 0, dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": dense_init(r[2], (di, R + 2 * N), 0, dtype),
+        "dt_proj": dense_init(r[3], (R, di), 0, dtype),
+        "dt_bias": jnp.full((di,), -4.6, dtype),   # softplus^-1(0.01)
+        "A_log": a_init,                            # (di, N) fp32
+        "D_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(r[4], (di, D), 0, dtype),
+    }
+
+
+def _causal_conv(x, w, b, conv_state=None):
+    """Depthwise causal conv1d. x: (B, S, di); w: (c, di).
+
+    conv_state: (B, c-1, di) previous tail, or None for zero history.
+    Returns (y, new_state).
+    """
+    B, S, di = x.shape
+    c = w.shape[0]
+    if conv_state is None:
+        conv_state = jnp.zeros((B, c - 1, di), x.dtype)
+    xx = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)  # (B, S+c-1, di)
+    y = sum(xx[:, i:i + S] * w[i] for i in range(c)) + b
+    new_state = xx[:, xx.shape[1] - (c - 1):]          # last c-1 inputs
+    return y, new_state
+
+
+def ssm_scan_chunked(dt, xr, Bmat, Cmat, A, h0, chunk=SCAN_CHUNK,
+                     inner_remat=False):
+    """Selective scan h_t = exp(dt_t*A)*h_{t-1} + dt_t*B_t*x_t, emitting
+    y_t = <h_t, C_t> — WITHOUT ever materializing (B, S, di, N).
+
+    The (B, chunk, di, N) discretized tensors exist only inside one step
+    of the outer chunk scan (the same working-set bound the Pallas
+    kernel's VMEM tiling enforces on TPU); an inner associative scan
+    parallelizes within the chunk.
+
+    dt: (B, S, di) fp32; xr: (B, S, di); Bmat, Cmat: (B, S, N) fp32;
+    A: (di, N) fp32 negative; h0: (B, di, N) fp32.
+    Returns (y (B, S, di) fp32, h_final (B, di, N)).
+    """
+    B, S, di = dt.shape
+    N = A.shape[1]
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        xr = jnp.pad(xr, ((0, 0), (0, pad), (0, 0)))
+        Bmat = jnp.pad(Bmat, ((0, 0), (0, pad), (0, 0)))
+        Cmat = jnp.pad(Cmat, ((0, 0), (0, pad), (0, 0)))
+    n = dt.shape[1] // chunk
+
+    def to_chunks(t):
+        return t.reshape(B, n, chunk, -1).transpose(1, 0, 2, 3)
+
+    dt_c, xr_c, B_c, C_c = map(to_chunks, (dt, xr, Bmat, Cmat))
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 + a2, b1 * jnp.exp(a2) + b2
+
+    def chunk_step(h, xs):
+        dtc, xrc, bc, cc = xs                          # (B, chunk, ...)
+        da = dtc[..., None] * A                        # (B,chunk,di,N) <= 0
+        dbx = (dtc * xrc.astype(jnp.float32))[..., None] * bc[:, :, None, :]
+        a_cum, b_cum = jax.lax.associative_scan(combine, (da, dbx), axis=1)
+        h_all = b_cum + h[:, None] * jnp.exp(a_cum)
+        y = jnp.einsum("bsdn,bsn->bsd", h_all, cc)     # (B, chunk, di)
+        return h_all[:, -1], y
+
+    body = jax.checkpoint(chunk_step) if inner_remat else chunk_step
+    h_final, y_chunks = jax.lax.scan(body, h0, (dt_c, xr_c, B_c, C_c))
+    y = y_chunks.transpose(1, 0, 2, 3).reshape(B, n * chunk, di)
+    return y[:, :S], h_final
+
+
+def mamba_layer(p, cfg, x, state=None):
+    """Full-sequence Mamba block. x: (B, S, D).
+
+    state: {'conv': (B,c-1,di), 'ssm': (B,di,N)} or None.
+    Returns (y (B,S,D), new_state).
+    """
+    B, S, D = x.shape
+    di, N, R = cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+    xz = x @ p["in_proj"]                              # (B,S,2di)
+    xr, z = jnp.split(xz, 2, axis=-1)
+    conv_in = state["conv"] if state is not None else None
+    xr, conv_state = _causal_conv(xr, p["conv_w"], p["conv_b"], conv_in)
+    xr = shard_hint(jax.nn.silu(xr), "batch", None, "model")
+
+    proj = (xr @ p["x_proj"]).astype(jnp.float32)      # (B,S,R+2N)
+    dt_r, Bmat, Cmat = jnp.split(proj, [R, R + N], axis=-1)
+    dt = jax.nn.softplus(dt_r @ p["dt_proj"].astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))  # (B,S,di)
+    dt = shard_hint(dt, "batch", None, "model")
+    A = -jnp.exp(p["A_log"])                           # (di,N) negative
+
+    h0 = (state["ssm"] if state is not None
+          else jnp.zeros((B, di, N), jnp.float32))
+    y, h_final = ssm_scan_chunked(dt, xr, Bmat, Cmat, A, h0,
+                                  inner_remat=cfg.inner_remat)
+    y = y + p["D_skip"] * xr.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    return out, {"conv": conv_state.astype(jnp.bfloat16), "ssm": h_final}
+
+
+def mamba_decode_step(p, cfg, x, state):
+    """One-token Mamba step. x: (B, 1, D). O(1) in context length."""
+    B, _, D = x.shape
+    di, N, R = cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+    xz = x[:, 0] @ p["in_proj"]                        # (B, 2di)
+    xr, z = jnp.split(xz, 2, axis=-1)
+
+    conv = state["conv"].astype(xr.dtype)              # (B, c-1, di)
+    window = jnp.concatenate([conv, xr[:, None]], axis=1)  # (B, c, di)
+    xr = jnp.einsum("bcd,cd->bd", window, p["conv_w"]) + p["conv_b"]
+    new_conv = window[:, 1:]
+    xr = jax.nn.silu(xr)
+
+    proj = (xr @ p["x_proj"]).astype(jnp.float32)      # (B, R+2N)
+    dt_r, Bmat, Cmat = jnp.split(proj, [R, R + N], axis=-1)
+    dt = jax.nn.softplus(dt_r @ p["dt_proj"].astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))  # (B, di)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt[..., None] * A)                    # (B, di, N)
+    dBx = (dt * xr.astype(jnp.float32))[..., None] * Bmat[:, None, :]
+    h = state["ssm"] * dA + dBx                        # (B, di, N)
+    y = jnp.einsum("bdn,bn->bd", h, Cmat)
+    y = y + p["D_skip"] * xr.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = (y @ p["out_proj"])[:, None]
+    return out, {"conv": new_conv.astype(jnp.bfloat16), "ssm": h}

@@ -1,0 +1,130 @@
+"""AdamW + cosine schedule + clipping + optional gradient compression.
+
+fp32 first/second moments over bf16 params (mixed-precision training
+convention). Optimizer state is a plain pytree mirroring the params, so
+it inherits the params' shardings (ZeRO-3: moments sharded identically
+to the FSDP-sharded params).
+
+`compress_grads`/`decompress_grads` implement int8 error-feedback
+quantization for the cross-pod (DCN-bound) data-parallel all-reduce —
+the distributed-optimization knob for multi-pod training. The error
+accumulator rides in the TrainState so compression noise is unbiased
+over steps.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class TrainState:
+    step: jax.Array
+    params: Any
+    mu: Any                      # fp32 first moment
+    nu: Any                      # fp32 second moment
+    err: Any | None = None       # compression error feedback (optional)
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def lr(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = s / jnp.maximum(warmup, 1)
+        prog = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return base_lr * jnp.where(s < warmup, warm, cos)
+    return lr
+
+
+def adamw_init(params, *, compression: bool = False) -> TrainState:
+    zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return TrainState(
+        step=jnp.zeros((), jnp.int32),
+        params=params,
+        mu=jax.tree.map(zeros32, params),
+        nu=jax.tree.map(zeros32, params),
+        err=jax.tree.map(zeros32, params) if compression else None,
+    )
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def compress_grads(grads, err):
+    """int8 block-quantize with error feedback. Returns (q, scales, err')."""
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+        return q, scale, g32 - q.astype(jnp.float32) * scale
+    qs, scales, errs = [], [], []
+    leaves, treedef = jax.tree.flatten(grads)
+    eleaves = jax.tree.leaves(err)
+    for g, e in zip(leaves, eleaves):
+        q, s, ne = one(g, e)
+        qs.append(q); scales.append(s); errs.append(ne)
+    return (jax.tree.unflatten(treedef, qs),
+            jax.tree.unflatten(treedef, scales),
+            jax.tree.unflatten(treedef, errs))
+
+
+def decompress_grads(q, scales):
+    return jax.tree.map(lambda qq, s: qq.astype(jnp.float32) * s, q, scales)
+
+
+def adamw_update(state: TrainState, grads, lr, *, b1=0.9, b2=0.95,
+                 eps=1e-8, weight_decay=0.1, clip_norm=1.0) -> TrainState:
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-12))
+    step = state.step + 1
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mh, vh = m / bc1, v / bc2
+        delta = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, state.params, grads, state.mu, state.nu)
+    params = jax.tree.map(lambda t: t[0], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    mu = jax.tree.map(lambda t: t[1], out,
+                      is_leaf=lambda t: isinstance(t, tuple))
+    nu = jax.tree.map(lambda t: t[2], out,
+                      is_leaf=lambda t: isinstance(t, tuple))
+    return TrainState(step=step, params=params, mu=mu, nu=nu, err=state.err)
+
+
+def make_train_step(model, *, base_lr=3e-4, warmup=100, total=10_000,
+                    weight_decay=0.1, clip_norm=1.0):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+    lr_fn = cosine_schedule(base_lr, warmup, total)
+
+    def train_step(state: TrainState, batch):
+        def loss_fn(p):
+            loss, metrics = model.loss(p, batch)
+            return loss, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state.params)
+        # schedule indexed by the step being TAKEN (1-based): warmup
+        # starts at lr/warmup, not 0, so step 0 is never a no-op.
+        new_state = adamw_update(state, grads, lr_fn(state.step + 1),
+                                 weight_decay=weight_decay,
+                                 clip_norm=clip_norm)
+        metrics = dict(metrics)
+        metrics["loss"] = loss
+        metrics["grad_norm"] = global_norm(grads)
+        return new_state, metrics
+
+    return train_step

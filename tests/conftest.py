@@ -1,0 +1,10 @@
+import os
+import sys
+
+# Tests must see the real single CPU device (the 512-device override is
+# exclusively for launch/dryrun.py, per the assignment).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+# make the repo root importable so tests can reach `benchmarks.*`
+# regardless of how pytest was invoked
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))

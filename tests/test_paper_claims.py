@@ -1,0 +1,70 @@
+"""Regression tests pinning the reproduction to the paper's claims.
+
+These are the quantitative anchors from EXPERIMENTS.md §Paper-validation
+— if a refactor of the cost model or runtime moves any of them out of
+band, the reproduction is broken and this file says so precisely.
+"""
+import pytest
+
+from repro.core import fabric as F
+from repro.core import workloads as W
+
+MB = 1024 * 1024
+
+
+class TestFig2CycleModel:
+    def test_sdk_multipliers(self):
+        """Fig 2b at the 1 MB measurement point."""
+        for sdk, lang, mult in [("minio", "py", 3.0), ("minio", "go", 5.0),
+                                ("aws", "py", 6.0), ("aws", "go", 13.0)]:
+            base = F.fabric_op_mcycles("tcp", lang, MB)
+            got = F.fabric_op_mcycles(sdk, lang, MB) / base
+            assert got == pytest.approx(mult, rel=0.02), (sdk, lang)
+
+    def test_vm_amplification_is_2x(self):
+        for sdk in ("tcp", "minio", "aws"):
+            native = F.fabric_op_mcycles(sdk, "py", MB)
+            vm = F.in_guest_op_cost(sdk, "py", MB).total()
+            assert vm / native == pytest.approx(2.0, rel=0.01)
+
+    def test_go_backend_beats_guest_python_at_scale(self):
+        """The offload premise: guest (amplified py) > host (native go)."""
+        for nbytes in (MB, 8 * MB, 32 * MB):
+            guest = F.in_guest_op_cost("aws", "py", nbytes).total()
+            host = F.fabric_op_mcycles("aws", "go", nbytes)
+            assert guest > 1.8 * host
+
+
+class TestFig3MemoryModel:
+    def test_mean_footprints_match_paper(self):
+        """169 / 140 / 134 MB across the suite (ours: 169 / 139 / 131)."""
+        def mean(system):
+            return sum(F.instance_memory(w.extra_libs_mb, system).total()
+                       for w in W.SUITE.values()) / len(W.SUITE)
+
+        assert mean("baseline") == pytest.approx(169, abs=4)
+        assert mean("nexus-sdk-only") == pytest.approx(140, abs=4)
+        assert mean("nexus") == pytest.approx(134, abs=4)
+
+    def test_fabric_share_near_quarter(self):
+        acct = F.instance_memory(52.5, "baseline")
+        assert 0.20 <= acct.share("cloud_sdk", "rpc_lib") <= 0.30
+
+    def test_working_set_reduction_near_31pct(self):
+        """Fig 13: fabric pages are hot — removing 22% of RSS cuts ~31%
+        of the recorded working set."""
+        base = F.working_set_pages_components(
+            F.instance_memory(52.5, "baseline"))
+        nexus = F.working_set_pages_components(
+            F.instance_memory(52.5, "nexus"))
+        assert 1 - nexus / base == pytest.approx(0.31, abs=0.04)
+
+
+class TestSuiteShape:
+    def test_ten_workloads_io_ordering(self):
+        """Paper §6: ten functions, ST-R most I/O-heavy, IR/CNN most
+        compute-heavy, ratios spanning ~10-90%."""
+        assert len(W.SUITE) == 10
+        ratios = [W.compute_io_ratio(w) for w in W.SUITE.values()]
+        assert ratios[0] < 0.2                   # ST-R
+        assert max(ratios[-2:]) > 0.8            # CNN / IR
