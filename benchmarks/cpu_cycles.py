@@ -57,6 +57,12 @@ def virtualization_amplification() -> list[dict]:
         rows.append({"fabric": sdk, "native_mcyc": round(native, 1),
                      "vm_mcyc": round(vm, 1),
                      "amplification": round(vm / native, 2)})
+    # the wasm variant's in-process fabric: native cycles, 1.0x by
+    # construction — the floor the amplification is measured against
+    wasm = F.in_process_op_cost("minio", "go", MB).total()
+    rows.append({"fabric": "minio (wasm, in-process)",
+                 "native_mcyc": round(wasm, 1), "vm_mcyc": round(wasm, 1),
+                 "amplification": 1.0})
     return rows
 
 

@@ -13,7 +13,11 @@ from repro.core.des import DensitySimulator, find_density
 
 from benchmarks.common import pct, save_json, table
 
-SYSTEMS_ORDER = ("baseline", "nexus-tcp", "nexus-async", "nexus")
+# + nexus-prefetch-only: same fetch overlap as nexus-async but no early
+# release — its density gap vs nexus-async isolates §4.2.5's VM-holding
+# effect, a sweep the PhasePlan layer gives us for one spec entry.
+SYSTEMS_ORDER = ("baseline", "nexus-tcp", "nexus-prefetch-only",
+                 "nexus-async", "nexus")
 
 
 def run(quick: bool = False) -> dict:

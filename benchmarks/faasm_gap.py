@@ -1,53 +1,23 @@
 """Paper Fig. 14 — Faasm (WASM hypervisor) case study on AES.
 
-Models the ecosystem-incompatible lower bound: a WASM sandbox with no
-guest OS, no virtualization boundary (no exits), the fabric compiled
+The ecosystem-incompatible lower bound: a WASM sandbox with no guest
+OS, no virtualization boundary (no exits), the fabric compiled
 in-process (C++ ~ Go cost class), but (per the paper's footnote) heavy
 host-kernel page-fault activity from the Faabric control plane that
 bootstraps sandboxes. The question Fig 14 answers: how much of that
 efficiency does Nexus recover while keeping full compatibility?
+
+Since the PhasePlan refactor the WASM point is a first-class system
+variant (`SYSTEMS["wasm"]`, calibrated by the `fabric.WASM_*` /
+`FAABRIC_*` constants) executed by the same threaded runtime as every
+other system — this benchmark just measures all three and reports the
+gaps.
 """
 from __future__ import annotations
 
-from repro.core import fabric as F
-from repro.core import metrics as M
 from repro.core.runtime import WorkerNode
-from repro.core.workloads import SUITE
 
-from benchmarks.common import pct, save_json, table
-
-MB = 1024 * 1024
-
-#: Faasm model constants (paper footnotes: the AES workload is a C++
-#: port — WASM-compiled native code, ~2x the Python handler's speed —
-#: and Faabric's sandbox bootstrap page-faults heavily in the kernel,
-#: which is why Faasm's TOTAL cycles exceed Nexus despite lower latency).
-CPP_COMPUTE_SCALE = 0.5            # C++ AES vs the Python handler
-WASM_JIT_OVERHEAD = 1.12           # WASM-JIT vs native C++
-FAABRIC_KERNEL_MCYC = 75.0         # page-fault storm per invocation
-WASM_RUNTIME_MB = 20.0             # runtime + module memory
-WASM_WORKLOAD_SCALE = 0.35         # no interpreter heap bloat
-SANDBOX_DISPATCH_S = 0.003         # Faabric scheduling hop
-
-
-def faasm_invocation(fn: str) -> dict:
-    w = SUITE[fn]
-    in_b, out_b = int(w.input_mb * MB), int(w.output_mb * MB)
-    get = F.fabric_op_mcycles("minio", "go", in_b)    # in-process C++ fabric
-    put = F.fabric_op_mcycles("minio", "go", out_b)
-    compute = w.compute_mcycles * CPP_COMPUTE_SCALE * WASM_JIT_OVERHEAD
-    user = get + put + compute
-    kernel = FAABRIC_KERNEL_MCYC                      # Faabric page faults
-    mem = WASM_RUNTIME_MB + w.extra_libs_mb * WASM_WORKLOAD_SCALE
-    from repro.core.transport import TCP
-    wire = TCP.transfer_latency(in_b) + TCP.transfer_latency(out_b)
-    return {"user_mcyc": user, "kernel_mcyc": kernel,
-            "total_mcyc": user + kernel, "memory_mb": mem,
-            # latency parity with the threaded runtime's convention:
-            # compute occupies the sandbox; fabric cycles are host work
-            # accounted (not serialized); page faults hit Faabric's
-            # control-plane threads off the request path.
-            "latency_s": (compute / 2100.0 + wire + SANDBOX_DISPATCH_S)}
+from benchmarks.common import save_json, table
 
 
 def measured(system: str, fn: str = "AES", reps: int = 6) -> dict:
@@ -61,8 +31,10 @@ def measured(system: str, fn: str = "AES", reps: int = 6) -> dict:
             node.invoke(fn).result(timeout=60)
         after = node.acct.snapshot()
         cyc = (after["total"] - before["total"]) / reps
+        exits = (after["crossings"].get("vm_exit", 0)
+                 - before["crossings"].get("vm_exit", 0)) / reps
         mem = node._pools[fn].instances()[0].rss_mb
-        return {"total_mcyc": cyc, "memory_mb": mem,
+        return {"total_mcyc": cyc, "memory_mb": mem, "vm_exits": exits,
                 "latency_s": node.latency.mean(f"{fn}:warm")}
     finally:
         node.shutdown()
@@ -70,24 +42,21 @@ def measured(system: str, fn: str = "AES", reps: int = 6) -> dict:
 
 def run() -> dict:
     rows = []
-    for system in ("baseline", "nexus"):
+    for system in ("baseline", "nexus", "wasm"):
         m = measured(system)
         rows.append({"system": system,
                      "latency_ms": round(m["latency_s"] * 1e3, 2),
                      "cycles_Mcyc": round(m["total_mcyc"], 1),
-                     "memory_MB": round(m["memory_mb"], 1)})
-    fa = faasm_invocation("AES")
-    rows.append({"system": "faasm (model)",
-                 "latency_ms": round(fa["latency_s"] * 1e3, 2),
-                 "cycles_Mcyc": round(fa["total_mcyc"], 1),
-                 "memory_MB": round(fa["memory_mb"], 1)})
+                     "memory_MB": round(m["memory_mb"], 1),
+                     "vm_exits": round(m["vm_exits"])})
 
     nexus, faasm = rows[1], rows[2]
     gap_cyc = (nexus["cycles_Mcyc"] / faasm["cycles_Mcyc"] - 1) * 100
     mem_ratio = nexus["memory_MB"] / faasm["memory_MB"]
 
-    print(table(rows, ["system", "latency_ms", "cycles_Mcyc", "memory_MB"],
-                title="Fig 14: AES under baseline / Nexus / Faasm "
+    print(table(rows, ["system", "latency_ms", "cycles_Mcyc", "memory_MB",
+                       "vm_exits"],
+                title="Fig 14: AES under baseline / Nexus / wasm variant "
                       f"(cycle gap {gap_cyc:+.0f}% vs paper 20-25%; "
                       f"memory ratio {mem_ratio:.1f}x vs paper 3.5x)"))
 

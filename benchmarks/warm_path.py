@@ -16,7 +16,11 @@ from repro.core.workloads import NAMES
 
 from benchmarks.common import pct, save_json, table
 
-SYSTEMS_ORDER = ("baseline", "nexus-tcp", "nexus-async", "nexus")
+# paper's four systems + the two data-only variants the PhasePlan layer
+# makes free: prefetch-without-async-writeback and the Faasm/WASM
+# reference point (Fig 14's latency lower bound).
+SYSTEMS_ORDER = ("baseline", "nexus-tcp", "nexus-async", "nexus",
+                 "nexus-prefetch-only", "wasm")
 
 
 def measure(system: str, reps: int = 6) -> dict:

@@ -3,6 +3,8 @@
 Layers (paper section in brackets):
 
 * `metrics`     — cycle/crossing/memory accounting plane (§3, §7.2)
+* `plan`        — SystemSpec -> PhasePlan compiler: the one declarative
+                  cost/structure model both executors interpret (§4.2)
 * `transport`   — TCP vs kernel-bypass RDMA models (§4.3.2)
 * `fabric`      — communication-fabric cost calibration (§3, Figs 2-3)
 * `arena`       — per-tenant zero-copy shared-memory data plane (§4.3.1)
@@ -22,11 +24,13 @@ Layers (paper section in brackets):
 """
 from repro.core.backend import NexusBackend
 from repro.core.frontend import BaselineClient, GuestContext, NexusClient
-from repro.core.runtime import SYSTEMS, SystemSpec, WorkerNode
+from repro.core.plan import PhasePlan, SYSTEMS, SystemSpec, compile_plan
+from repro.core.runtime import WorkerNode
 from repro.core.storage import ObjectStore
 from repro.core.workloads import SUITE
 
 __all__ = [
     "NexusBackend", "BaselineClient", "GuestContext", "NexusClient",
-    "SYSTEMS", "SystemSpec", "WorkerNode", "ObjectStore", "SUITE",
+    "PhasePlan", "SYSTEMS", "SystemSpec", "compile_plan",
+    "WorkerNode", "ObjectStore", "SUITE",
 ]

@@ -3,17 +3,22 @@
 The end-to-end density experiment needs hundreds of deployed functions
 served for minutes — far beyond what real threads can replay in-process,
 so (exactly like the warm/cold microbenchmarks feed the paper's Fig 7/12)
-this simulator executes the *same cost model* (`fabric`, `transport`,
-`lifecycle` constants) in virtual time over a cluster of worker nodes:
+this simulator executes the *same cost model* in virtual time over a
+cluster of worker nodes. Structure comes from exactly one place: the
+compiled `plan.PhasePlan` for the system variant. The walker in
+`_execute` maps the plan's resource tags onto simulated resources —
 
-* each node: `cores` FIFO-scheduled cores (vCPU + backend work contend),
-  `mem_gb` of RAM holding instance RSS + the shared backend;
-* per-function instance pools with synchronous AWS-style autoscaling,
-  keep-alive expiry, cold restores;
-* arrivals from the Azure-like MMPP trace generator;
-* the four system variants differ only in *where* phases run and *what
-  overlaps* — the same structural differences the threaded runtime
-  implements with real threads.
+* ``guest_core`` / ``backend_worker`` — one of the node's FIFO cores
+  (guest vCPU and backend work contend equally); ``backend_worker``
+  phases additionally hold a slot of the shared daemon's finite
+  connection pool for their backend group (released per the transport's
+  kernel-bypass rule);
+* ``wire`` / ``none`` — pure virtual latency;
+
+and fires the plan's release/response barriers where they land. The
+threaded runtime interprets the identical graph with real threads, so
+variant behaviour cannot drift between the two executors; per-phase
+durations come from `plan.phase_durations` — the same calibration.
 
 SLO (paper): p99 latency < 5x the function's unloaded median; density =
 max deployed functions whose geometric-mean slowdown meets the SLO.
@@ -24,19 +29,13 @@ import heapq
 import itertools
 import math
 from collections import defaultdict, deque
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 from repro.core import fabric as F
+from repro.core import plan as P
 from repro.core import workloads as W
-from repro.core.runtime import SYSTEMS, SystemSpec
+from repro.core.plan import SYSTEMS, SystemSpec, compile_plan
 from repro.core.transport import TRANSPORTS
-
-MB = 1024 * 1024
-GHZ = 2100.0                      # Mcycles per second per core
-
-
-def _cpu_s(mcycles: float) -> float:
-    return mcycles / GHZ
 
 
 # --------------------------------------------------------------- event loop
@@ -190,6 +189,19 @@ class DensitySimulator:
                               backend_workers)
                       for _ in range(nodes)]
         self.transport = TRANSPORTS[self.spec.transport]
+        # one structural source of truth: the compiled plan per coldness
+        # (+ the plan-derived lookups _execute needs, hoisted off the
+        # per-invocation hot path)
+        self._plans = {cold: compile_plan(self.spec, cold=cold)
+                       for cold in (False, True)}
+        bypass = self.transport.kernel_bypass
+        self._walk = {}
+        for cold, p in self._plans.items():
+            groups = p.backend_groups()
+            self._walk[cold] = (
+                {members[0]: g for g, members in groups.items()},
+                {g: p.slot_release_phase(g, bypass) for g in groups})
+        self._durs: dict[tuple[str, bool], dict[str, float]] = {}
 
         # one deployed function = (name, workload); suite cycles round-robin
         names = list(W.SUITE)
@@ -211,59 +223,25 @@ class DensitySimulator:
         self.rejected = 0
         self.mem_samples: list[float] = []
 
-        mem_variant = ("baseline" if self.spec.coupled else "nexus")
         self._rss = {f: F.instance_memory(self.workload[f].extra_libs_mb,
-                                          mem_variant).total()
+                                          self.spec.memory_variant).total()
                      + (0.0 if self.spec.coupled
                         else F.BACKEND_PER_INSTANCE_MB)
                      for f in self.functions}
 
     # ----------------------------------------------------------- cost model
 
-    def _transport_cpu_s(self, nbytes: int) -> float:
-        tr = self.transport
-        mb = nbytes / MB
-        return _cpu_s(tr.host_kernel_mcyc_per_mb * mb
-                      + tr.host_kernel_mcyc_per_msg
-                      + tr.host_user_mcyc_per_mb * mb)
-
-    def _phases(self, w: W.Workload, cold: bool) -> dict[str, float]:
-        """Critical-path segment durations (seconds) for one invocation.
-        *_cpu phases occupy a node core (guest vCPU and backend work
-        contend equally); *_net phases are wire time."""
-        tr = self.transport
-        in_b, out_b = int(w.input_mb * MB), int(w.output_mb * MB)
-        ph: dict[str, float] = {}
-        if self.spec.coupled:
-            mem = F.instance_memory(w.extra_libs_mb, "baseline")
-            get = F.in_guest_op_cost("aws", "py", in_b)
-            put = F.in_guest_op_cost("aws", "py", out_b)
-            rpc_in, rpc_out = (F.rpc_ingress_cost(True),
-                               F.rpc_ingress_cost(True, 1024))
-        else:
-            mem = F.instance_memory(w.extra_libs_mb, "nexus")
-            get = F.remoted_op_cost("aws", in_b)
-            put = F.remoted_op_cost("aws", out_b)
-            rpc_in, rpc_out = (F.rpc_ingress_cost(False),
-                               F.rpc_ingress_cost(False, 1024))
-        ph["restore"] = F.restore_seconds_components(mem) if cold else 0.0
-        ph["rpc"] = _cpu_s(rpc_in.total())
-        ph["fetch_cpu"] = _cpu_s(get.total()) + self._transport_cpu_s(in_b)
-        ph["fetch_net"] = tr.transfer_latency(in_b)
-        ph["compute"] = _cpu_s(w.compute_mcycles)
-        ph["write_cpu"] = _cpu_s(put.total()) + self._transport_cpu_s(out_b)
-        ph["write_net"] = tr.transfer_latency(out_b)
-        ph["reply"] = _cpu_s(rpc_out.total())
-        return ph
+    def _durations(self, base_name: str, cold: bool) -> dict[str, float]:
+        key = (base_name, cold)
+        if key not in self._durs:
+            self._durs[key] = P.phase_durations(
+                self.spec, W.SUITE[base_name], cold)
+        return self._durs[key]
 
     def unloaded_latency(self, fn: str) -> float:
-        """Warm, zero-contention critical path (the SLO denominator).
-        With restore = 0 no overlap exists, so this is the phase sum for
-        every variant — matching `_execute`'s structure exactly."""
-        ph = self._phases(self.workload[fn], cold=False)
-        return (ph["rpc"] + ph["fetch_cpu"] + ph["fetch_net"]
-                + ph["compute"] + ph["write_cpu"] + ph["write_net"]
-                + ph["reply"])
+        """Warm, zero-contention critical path (the SLO denominator) —
+        the warm plan's critical path, by construction."""
+        return P.unloaded_latency(self.spec, self.workload[fn])
 
     # ------------------------------------------------------------ placement
 
@@ -329,11 +307,16 @@ class DensitySimulator:
         self._execute(inst, self.loop.now, cold=True)
 
     def _execute(self, inst: SimInstance, t_arr: float, cold: bool) -> None:
+        """Walk the compiled plan in virtual time — the generic
+        interpreter. No per-variant branches: edges, resource tags,
+        backend groups, and barriers all come from the plan."""
         fn = inst.fn
-        w = self.workload[fn]
-        ph = self._phases(w, cold)
+        p = self._plans[cold]
+        durs = self._durations(fn.split("#")[0], cold)
         node = self.nodes[inst.node]
         loop = self.loop
+        group_head, slot_release = self._walk[cold]
+        remaining = {ph.name: len(ph.after) for ph in p.phases}
 
         def finish_response():
             lat = loop.now - t_arr
@@ -341,107 +324,41 @@ class DensitySimulator:
                 self.latencies[fn].append(lat)
             self.completed += 1
 
-        def restore_phase(done_cb):
-            # REAP working-set insertion is host-side page copying: it
-            # burns a core for its duration (cold only).
-            if cold and ph["restore"] > 0:
-                node.cpu.request(ph["restore"], done_cb)
-            else:
-                loop.after(0.0, done_cb)
-
-        # ---- coupled: strict serial chain, VM held through the write.
-        if self.spec.coupled:
-            def s_restore():
-                restore_phase(lambda: node.cpu.request(ph["rpc"], s_fetch))
-
-            def s_fetch():
-                node.cpu.request(ph["fetch_cpu"],
-                                 lambda: loop.after(ph["fetch_net"],
-                                                    s_compute))
-
-            def s_compute():
-                node.cpu.request(ph["compute"], s_write)
-
-            def s_write():
-                node.cpu.request(ph["write_cpu"],
-                                 lambda: loop.after(ph["write_net"],
-                                                    s_reply))
-
-            def s_reply():
-                node.cpu.request(ph["reply"], done)
-
-            def done():
-                finish_response()
+        def phase_done(name: str) -> None:
+            ph = p.phase(name)
+            g = ph.backend_group
+            if g is not None and slot_release[g] == name:
+                node.backend.release()
+            if name == p.release_after:
                 self._release(inst)
-
-            s_restore()
-            return
-
-        # ---- nexus: backend terminates RPC; prefetch overlaps restore;
-        #      async writeback releases the VM before the write lands.
-        #      Backend storage ops hold a connection-pool slot: for the
-        #      whole op under TCP (the goroutine blocks on the socket),
-        #      for the CPU slice only under RDMA (completion-driven).
-        state = {"restored": False, "fetched": False}
-        bypass = self.transport.kernel_bypass
-
-        def backend_op(cpu_s: float, net_s: float, done_cb) -> None:
-            def granted():
-                def after_cpu():
-                    if bypass:
-                        node.backend.release()
-                        loop.after(net_s, done_cb)
-                    else:
-                        loop.after(net_s, lambda: (node.backend.release(),
-                                                   done_cb()))
-                node.cpu.request(cpu_s, after_cpu)
-            node.backend.acquire(granted)
-
-        def join_then_compute():
-            if state["restored"] and state["fetched"]:
-                node.cpu.request(ph["compute"], after_compute)
-
-        def s_restore_done():
-            state["restored"] = True
-            join_then_compute()
-
-        def s_fetch_done():
-            state["fetched"] = True
-            join_then_compute()
-
-        if self.spec.prefetch:
-            # hinted prefetch truly overlaps the restore: both chains
-            # start at ingress time, compute fires at the join.
-            restore_phase(s_restore_done)
-            node.cpu.request(ph["rpc"], lambda: backend_op(
-                ph["fetch_cpu"], ph["fetch_net"], s_fetch_done))
-        else:
-            # Nexus-TCP: the guest must be up before it can ask for the
-            # fetch — restore -> rpc -> fetch serialization remains.
-            def after_restore():
-                state["restored"] = True
-                node.cpu.request(ph["rpc"], lambda: backend_op(
-                    ph["fetch_cpu"], ph["fetch_net"], s_fetch_done))
-            restore_phase(after_restore)
-
-        def after_compute():
-            if self.spec.async_writeback:
-                self._release(inst)            # EARLY RELEASE
-                backend_op(ph["write_cpu"], ph["write_net"], ack)
-            else:
-                backend_op(ph["write_cpu"], ph["write_net"], sync_ack)
-
-        def ack():
-            node.cpu.request(ph["reply"], finish_response)
-
-        def sync_ack():
-            def done():
+            if name == p.respond_after:
                 finish_response()
-                self._release(inst)
-            node.cpu.request(ph["reply"], done)
+            for succ in p.successors(name):
+                remaining[succ] -= 1
+                if remaining[succ] == 0:
+                    start(succ)
 
-        # NOTE: under prefetch, a warm instance's fetch still completes
-        # concurrently with RPC dispatch — join handles both orders.
+        def start(name: str) -> None:
+            ph = p.phase(name)
+            d = durs.get(name, 0.0)
+
+            def execute():
+                if d <= 0.0:
+                    loop.after(0.0, phase_done, name)
+                elif ph.resource in (P.GUEST_CORE, P.BACKEND_WORKER):
+                    # guest vCPU and backend work contend on node cores
+                    node.cpu.request(d, lambda: phase_done(name))
+                else:                      # WIRE / NONE: pure latency
+                    loop.after(d, phase_done, name)
+
+            if group_head.get(name) is not None:
+                node.backend.acquire(execute)   # slot held across group
+            else:
+                execute()
+
+        for ph in p.phases:
+            if remaining[ph.name] == 0:
+                start(ph.name)
 
     # ---------------------------------------------------------------- run
 
@@ -464,7 +381,6 @@ class DensitySimulator:
                     / sum(n.cpu.cores for n in self.nodes) / horizon)
         mem_util = (sum(self.mem_samples) / len(self.mem_samples)
                     if self.mem_samples else 0.0)
-        base_names = {f: f.split("#")[0] for f in self.functions}
         unloaded = {f: self.unloaded_latency(f) for f in self.functions}
         return SimResult(
             system=self.spec.name, n_functions=self.n_functions,

@@ -28,6 +28,9 @@ from repro.core import metrics as M
 
 MB = 1024 * 1024
 
+#: the paper's testbed clock (2.1 GHz Xeon): Mcycles per second per core.
+GHZ_MCYC_PER_S = 2100.0
+
 # ------------------------------------------------------- cycle calibration
 #
 # Per-operation fabric cost = fixed (connection mgmt, auth, signing,
@@ -150,6 +153,30 @@ def remoted_op_cost(sdk: str, nbytes: int, backend_lang: str = "go") -> FabricCo
     )
 
 
+def in_process_op_cost(sdk: str, lang: str, nbytes: int) -> FabricCost:
+    """WASM-hypervisor reference point (paper Fig 14, Faasm): the fabric
+    is compiled into the sandbox (C++ ~ Go cost class) and there is no
+    virtualization boundary — native cycles, zero amplification, zero
+    exits. Faabric's sandbox-bootstrap page-fault storm is charged
+    separately, per invocation (`FAABRIC_KERNEL_MCYC`)."""
+    return FabricCost(guest_user=fabric_op_mcycles(sdk, lang, nbytes))
+
+
+# --------------------------------------------------- Faasm/WASM calibration
+# Paper Fig 14 footnotes: the AES workload is a C++ port (WASM-compiled
+# native code ~2x the Python handler's speed, less ~12% WASM-JIT tax);
+# Faabric's sandbox bootstrap page-faults heavily in the host kernel,
+# which is why Faasm's TOTAL cycles exceed Nexus despite lower latency.
+
+CPP_COMPUTE_SCALE = 0.5        # C++ handler vs the Python reference
+WASM_JIT_OVERHEAD = 1.12       # WASM-JIT vs native C++
+WASM_COMPUTE_SCALE = CPP_COMPUTE_SCALE * WASM_JIT_OVERHEAD
+FAABRIC_KERNEL_MCYC = 75.0     # page-fault storm per invocation
+WASM_RUNTIME_MB = 20.0         # runtime + module memory
+WASM_WORKLOAD_SCALE = 0.35     # no interpreter heap bloat
+SANDBOX_DISPATCH_S = 0.003     # Faabric scheduling hop per invocation
+
+
 def rpc_ingress_cost(in_guest: bool, nbytes: int = 4096) -> FabricCost:
     """Invocation RPC handling (gRPC server) per request.
 
@@ -193,9 +220,14 @@ def instance_memory(workload_mb: float, system: str) -> M.MemoryAccount:
     """Per-instance RSS under a given system variant.
 
     system: 'baseline' | 'nexus-sdk-only' | 'nexus' (full fabric offload;
-    async/rdma variants have identical per-instance footprints).
+    async/rdma variants have identical per-instance footprints) |
+    'wasm' (no guest OS or interpreter: sandbox runtime + module only).
     """
     acct = M.MemoryAccount()
+    if system == "wasm":
+        acct.add("wasm_runtime", WASM_RUNTIME_MB)
+        acct.add("workload", workload_mb * WASM_WORKLOAD_SCALE)
+        return acct
     acct.add("guest_os", GUEST_OS_MB)
     acct.add("runtime", RUNTIME_BASE_MB)
     acct.add("workload", workload_mb)
@@ -224,6 +256,7 @@ WS_FRACTION = 0.62          # fallback uniform fraction
 _WS_BY_COMPONENT = {
     "guest_os": 0.50, "runtime": 0.70, "rpc_lib": 0.92, "cloud_sdk": 0.92,
     "frontend_stub": 0.92, "vsock_shim": 0.92, "workload": 0.55,
+    "wasm_runtime": 0.92,          # module instantiation touches it all
 }
 RESTORE_US_PER_PAGE = 1.9   # disk read + map + fault cost per page
 SNAPSHOT_FIXED_S = 0.012    # uVM create + vcpu resume

@@ -118,26 +118,34 @@ class NexusClient:
 
 
 class BaselineClient:
-    """Coupled design: full boto3-over-TCP inside the guest (§2.2).
+    """Coupled design: the full SDK executes with the handler (§2.2).
 
     The SDK's cycles execute on the instance's 1 vCPU and therefore sit
     squarely on the invocation's latency path — they are slept (at the
-    paper's 2.1 GHz) as well as accounted.
+    paper's 2.1 GHz) as well as accounted. With ``virtualized=False``
+    (the Faasm/WASM reference point) the fabric is compiled in-process:
+    native cycles, no VM amplification, no exits.
     """
 
     def __init__(self, remote: RemoteStorage, acct: M.CycleAccount,
-                 lang: str = "py", sleep=None):
+                 lang: str = "py", sleep=None, *, sdk: str = "aws",
+                 virtualized: bool = True):
         import time
         self._remote = remote
         self._acct = acct
         self._lang = lang
+        self._sdk = sdk
+        self._virtualized = virtualized
         self._sleep = sleep or time.sleep
 
     def _run_fabric(self, nbytes: int) -> None:
         nominal = int(nbytes * self._remote.cost_scale)
-        cost = F.in_guest_op_cost("aws", self._lang, nominal)
+        if self._virtualized:
+            cost = F.in_guest_op_cost(self._sdk, self._lang, nominal)
+        else:
+            cost = F.in_process_op_cost(self._sdk, self._lang, nominal)
         cost.charge(self._acct)
-        self._sleep(cost.total() / 2100.0)
+        self._sleep(cost.total() / F.GHZ_MCYC_PER_S)
 
     def get_object(self, Bucket: str, Key: str) -> dict:
         data = self._remote.get(Bucket, Key)

@@ -20,6 +20,7 @@ from dataclasses import dataclass, field
 
 from repro.core import fabric as F
 from repro.core import metrics as M
+from repro.core.plan import SystemSpec
 from repro.core.workloads import Workload
 
 _iid = itertools.count()
@@ -39,18 +40,20 @@ class RestoreBreakdown:
 class FunctionInstance:
     """One microVM hosting one function; executes invocations serially."""
 
-    def __init__(self, workload: Workload, system: str,
+    def __init__(self, workload: Workload, spec: SystemSpec,
                  acct: M.CycleAccount, sleep=time.sleep):
         self.id = next(_iid)
         self.workload = workload
-        self.system = system                       # memory-variant label
+        self.spec = spec
         self.acct = acct
         self._sleep = sleep
         self._busy = threading.Lock()
         self.state = "cold"
-        mem_variant = "baseline" if system == "baseline" else (
-            "nexus-sdk-only" if system == "nexus-sdk-only" else "nexus")
-        self.memory = F.instance_memory(workload.extra_libs_mb, mem_variant)
+        # the memory variant (and with it the snapshot working set) is
+        # spec data — adding a system variant cannot silently fall back
+        # to the wrong footprint.
+        self.memory = F.instance_memory(workload.extra_libs_mb,
+                                        spec.memory_variant)
         self.restore_info: RestoreBreakdown | None = None
 
     @property
@@ -65,9 +68,11 @@ class FunctionInstance:
             ws_insert_s=pages * F.RESTORE_US_PER_PAGE * 1e-6,
             ws_pages=pages)
         self._sleep(bd.total_s)
-        # page-fault handling burns host-kernel cycles + exits
+        # page-fault handling burns host-kernel cycles + exits (no VM
+        # boundary -> no exits for the wasm sandbox)
         self.acct.charge(M.HOST_KERNEL, pages * 2.0e-3)
-        self.acct.cross(M.VM_EXIT, pages // 8)     # REAP batches faults
+        if self.spec.virtualized:
+            self.acct.cross(M.VM_EXIT, pages // 8)  # REAP batches faults
         self.state = "warm"
         self.restore_info = bd
         return bd
@@ -88,28 +93,31 @@ class FunctionInstance:
         t0 = time.monotonic()
         out = self.workload.handler(view)
         real = time.monotonic() - t0
-        # modeled vCPU time at the paper's 2.1 GHz: Mcycles / 2100 = seconds
-        modeled = self.workload.compute_mcycles / 2100.0
+        # modeled vCPU time at the paper's 2.1 GHz, scaled by the spec's
+        # handler cost class (e.g. the wasm variant's C++ ports).
+        mcycles = self.workload.compute_mcycles * self.spec.compute_scale
+        modeled = mcycles / F.GHZ_MCYC_PER_S
         remaining = modeled - real
         if remaining > 0:
             self._sleep(remaining)
-        self.acct.charge(M.GUEST_USER, self.workload.compute_mcycles)
+        self.acct.charge(M.GUEST_USER, mcycles)
         # busy-guest exits (syscalls/GC/timers) that offloading can't remove
-        exits = max(int(modeled * F.COMPUTE_EXITS_PER_SEC), 1)
-        self.acct.cross(M.VM_EXIT, exits)
-        self.acct.cross(M.VCPU_WAKEUP,
-                        int(exits * F.COMPUTE_WAKEUPS_PER_EXIT))
+        if self.spec.virtualized:
+            exits = max(int(modeled * F.COMPUTE_EXITS_PER_SEC), 1)
+            self.acct.cross(M.VM_EXIT, exits)
+            self.acct.cross(M.VCPU_WAKEUP,
+                            int(exits * F.COMPUTE_WAKEUPS_PER_EXIT))
         return out
 
 
 class InstancePool:
     """Per-function pool with warm reuse and on-demand cold starts."""
 
-    def __init__(self, workload: Workload, system: str,
+    def __init__(self, workload: Workload, spec: SystemSpec,
                  acct: M.CycleAccount, sleep=time.sleep,
                  max_instances: int = 64):
         self.workload = workload
-        self.system = system
+        self.spec = spec
         self.acct = acct
         self._sleep = sleep
         self.max_instances = max_instances
@@ -139,7 +147,7 @@ class InstancePool:
             if len(self._instances) >= self.max_instances:
                 raise RuntimeError(
                     f"{self.workload.name}: instance cap reached")
-            inst = FunctionInstance(self.workload, self.system, self.acct,
+            inst = FunctionInstance(self.workload, self.spec, self.acct,
                                     self._sleep)
             assert inst.acquire()
             self._instances.append(inst)
@@ -151,7 +159,7 @@ class InstancePool:
         """Begin restoring a fresh instance in the background (used by
         Nexus to overlap restore with input prefetch, §4.2.1)."""
         with self._lock:
-            inst = FunctionInstance(self.workload, self.system, self.acct,
+            inst = FunctionInstance(self.workload, self.spec, self.acct,
                                     self._sleep)
             assert inst.acquire()
             self._instances.append(inst)

@@ -1,0 +1,399 @@
+"""Invocation PhasePlan: one declarative cost model for both executors.
+
+The paper's core claim (§4.2, §7) is that Nexus's wins come from
+*structural* differences in where invocation phases run and what
+overlaps. This module makes those structures **data**: a `SystemSpec`
+compiles into a `PhasePlan` — a DAG of phases with resource tags and
+release/response barriers — and the two executors merely *interpret*
+that graph:
+
+* `runtime.WorkerNode` maps phases onto real threads and backend calls
+  (real bytes, real arenas, real crash injection);
+* `des.DensitySimulator` walks the identical graph in virtual time with
+  `CorePool` contention.
+
+"Prefetch overlaps restore" and "async writeback releases the VM before
+the ack" are edges and barriers here — not control flow in two
+executors. Adding a system variant means adding a `SystemSpec` entry,
+nothing else.
+
+Phases (paper §4.2 anatomy of an invocation):
+
+    restore    — snapshot restore / sandbox bootstrap (0 when warm)
+    rpc_in     — invocation RPC termination (guest gRPC vs backend-native)
+    connect    — per-VM storage connection setup (cold only; 'Add Server')
+    fetch_cpu  — input fabric cycles (SDK + stub + transport CPU)
+    fetch_net  — input wire time
+    compute    — user handler on the instance vCPU
+    write_cpu  — output fabric cycles
+    write_net  — output wire time
+    reply      — response RPC egress
+
+Resource tags say what a phase consumes:
+
+    guest_core     — one worker-node core for the duration
+    backend_worker — a backend connection-pool slot *and* a core (the
+                     shared daemon's work contends on the same cores)
+    wire           — pure latency (network / handshake wait)
+    none           — pure latency off every resource (scheduler hops)
+
+Barriers:
+
+    release_after — completing this phase returns the instance to the
+                    warm pool (early release under async writeback §4.2.5)
+    respond_after — completing this phase resolves the caller's future
+                    (always gated on the durable write, at-least-once)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from functools import lru_cache
+
+from repro.core import fabric as F
+from repro.core.transport import TRANSPORTS
+from repro.core.workloads import Workload
+
+MB = 1024 * 1024
+
+# ------------------------------------------------------------ resource tags
+
+GUEST_CORE = "guest_core"
+BACKEND_WORKER = "backend_worker"
+WIRE = "wire"
+NONE = "none"
+
+RESOURCES = (GUEST_CORE, BACKEND_WORKER, WIRE, NONE)
+
+#: canonical phase -> breakdown group (what the threaded runtime reports;
+#: the *_cpu/*_net split only exists where time is virtual).
+PHASE_GROUP = {
+    "restore": "restore", "rpc_in": "rpc_in", "connect": "connect",
+    "fetch_cpu": "fetch", "fetch_net": "fetch",
+    "compute": "compute",
+    "write_cpu": "write", "write_net": "write",
+    "reply": "reply",
+}
+
+
+# -------------------------------------------------------------- system spec
+
+@dataclass(frozen=True)
+class SystemSpec:
+    """A system variant as pure data — the only thing a new variant adds.
+
+    The four paper systems + the memory-figure sdk-only point, plus:
+    * ``nexus-prefetch-only`` — hinted prefetch without async writeback
+      (isolates §4.2.2 from §4.2.5);
+    * ``wasm`` — Faasm-style reference point (paper Fig 14): no guest OS,
+      no virtualization boundary, fabric compiled in-process, sandbox
+      scheduler hop instead of an RPC server.
+    """
+
+    name: str
+    offload_sdk: bool = False        # storage fabric in the shared backend
+    offload_rpc: bool = False        # invocation RPC terminated natively
+    prefetch: bool = False           # hinted input prefetch overlaps restore
+    async_writeback: bool = False    # output write releases the VM early
+    transport: str = "tcp"           # bulk transport: 'tcp' | 'rdma'
+    virtualized: bool = True         # False => no VM boundary (wasm)
+    sdk: str = "aws"                 # storage SDK cost class (fabric table)
+    guest_lang: str = "py"           # language cost class of in-guest code
+    compute_scale: float = 1.0       # handler speed vs Python reference
+    dispatch_s: float = 0.0          # per-invocation scheduler hop (wasm)
+    mem_variant: str | None = None   # fabric.instance_memory key override
+
+    @property
+    def coupled(self) -> bool:
+        return not self.offload_sdk
+
+    @property
+    def memory_variant(self) -> str:
+        if self.mem_variant is not None:
+            return self.mem_variant
+        if not self.offload_sdk:
+            return "baseline"
+        if not self.offload_rpc:
+            return "nexus-sdk-only"
+        return "nexus"
+
+
+SYSTEMS: dict[str, SystemSpec] = {s.name: s for s in [
+    SystemSpec("baseline"),
+    SystemSpec("nexus-tcp", offload_sdk=True, offload_rpc=True),
+    SystemSpec("nexus-async", offload_sdk=True, offload_rpc=True,
+               prefetch=True, async_writeback=True),
+    SystemSpec("nexus", offload_sdk=True, offload_rpc=True,
+               prefetch=True, async_writeback=True, transport="rdma"),
+    # memory-figure-only variant (Fig 3): SDK offloaded, RPC kept in guest
+    SystemSpec("nexus-sdk-only", offload_sdk=True, offload_rpc=False),
+    # prefetch without early release: isolates §4.2.2 from §4.2.5
+    SystemSpec("nexus-prefetch-only", offload_sdk=True, offload_rpc=True,
+               prefetch=True, async_writeback=False),
+    # Faasm-style WASM point (Fig 14): in-process C++-class fabric, no VM
+    # boundary, Faabric scheduler hop; paper claims Nexus lands within
+    # ~20-25% of its cycle cost at full ecosystem compatibility.
+    SystemSpec("wasm", virtualized=False, sdk="minio", guest_lang="go",
+               compute_scale=F.WASM_COMPUTE_SCALE,
+               dispatch_s=F.SANDBOX_DISPATCH_S, mem_variant="wasm"),
+]}
+
+
+# -------------------------------------------------------------- phase graph
+
+@dataclass(frozen=True)
+class Phase:
+    name: str
+    resource: str
+    after: tuple[str, ...] = ()
+    backend_group: str | None = None     # backend slot held across group
+
+
+@dataclass(frozen=True)
+class PhasePlan:
+    """Compiled, validated phase DAG for one (SystemSpec, cold?) pair."""
+
+    system: str
+    cold: bool
+    phases: tuple[Phase, ...]
+    release_after: str                   # phase completing -> release VM
+    respond_after: str                   # phase completing -> respond
+    _by_name: dict = field(default_factory=dict, repr=False, compare=False)
+
+    def __post_init__(self):
+        object.__setattr__(self, "_by_name",
+                           {p.name: p for p in self.phases})
+        self._validate()
+
+    # ------------------------------------------------------------ queries
+
+    def phase(self, name: str) -> Phase:
+        return self._by_name[name]
+
+    @property
+    def phase_names(self) -> tuple[str, ...]:
+        return tuple(p.name for p in self.phases)
+
+    def successors(self, name: str) -> tuple[str, ...]:
+        return tuple(p.name for p in self.phases if name in p.after)
+
+    def topo_order(self) -> tuple[str, ...]:
+        """Deterministic topological order (declaration order is one)."""
+        return self.phase_names
+
+    def backend_groups(self) -> dict[str, tuple[str, ...]]:
+        """group -> its phases in topological order."""
+        out: dict[str, list[str]] = {}
+        for p in self.phases:
+            if p.backend_group:
+                out.setdefault(p.backend_group, []).append(p.name)
+        return {g: tuple(v) for g, v in out.items()}
+
+    def slot_release_phase(self, group: str, kernel_bypass: bool) -> str:
+        """Where a backend group's connection-pool slot is released:
+        after its last CPU slice under kernel-bypass (completion-driven),
+        after the wire completes under TCP (the goroutine blocks)."""
+        members = self.backend_groups()[group]
+        if kernel_bypass:
+            cpu = [n for n in members
+                   if self.phase(n).resource == BACKEND_WORKER]
+            if cpu:
+                return cpu[-1]
+        return members[-1]
+
+    # ------------------------------------------------- breakdown groups
+
+    def groups(self) -> tuple[tuple[str, tuple[str, ...]], ...]:
+        """Breakdown groups in topological order: (group, phases).
+        The threaded runtime executes/reports at this granularity."""
+        out: list[tuple[str, list[str]]] = []
+        for p in self.phases:
+            g = PHASE_GROUP[p.name]
+            if out and out[-1][0] == g:
+                out[-1][1].append(p.name)
+            else:
+                out.append((g, [p.name]))
+        return tuple((g, tuple(v)) for g, v in out)
+
+    def group_names(self) -> tuple[str, ...]:
+        return tuple(g for g, _ in self.groups())
+
+    def group_deps(self) -> dict[str, tuple[str, ...]]:
+        """Dependency edges lifted to breakdown-group granularity."""
+        owner = {}
+        for g, members in self.groups():
+            for m in members:
+                owner[m] = g
+        deps: dict[str, set] = {g: set() for g, _ in self.groups()}
+        for p in self.phases:
+            for dep in p.after:
+                if owner[dep] != owner[p.name]:
+                    deps[owner[p.name]].add(owner[dep])
+        return {g: tuple(sorted(v)) for g, v in deps.items()}
+
+    @property
+    def release_group(self) -> str:
+        return PHASE_GROUP[self.release_after]
+
+    @property
+    def respond_group(self) -> str:
+        return PHASE_GROUP[self.respond_after]
+
+    # ----------------------------------------------------------- analysis
+
+    def critical_path(self, durations: dict[str, float]) -> float:
+        """Longest path through the DAG — the zero-contention latency.
+        `unloaded_latency` in the density simulator is this, warm."""
+        finish: dict[str, float] = {}
+        for p in self.phases:             # phases are topologically sorted
+            start = max((finish[d] for d in p.after), default=0.0)
+            finish[p.name] = start + durations.get(p.name, 0.0)
+        return max(finish.values()) if finish else 0.0
+
+    # --------------------------------------------------------- validation
+
+    def _validate(self) -> None:
+        names = set()
+        for p in self.phases:
+            if p.name in names:
+                raise ValueError(f"{self.system}: duplicate phase {p.name}")
+            if p.resource not in RESOURCES:
+                raise ValueError(f"{self.system}: bad resource "
+                                 f"{p.resource!r} on {p.name}")
+            for dep in p.after:
+                if dep not in names:     # deps must precede: topo by decl
+                    raise ValueError(
+                        f"{self.system}: phase {p.name!r} depends on "
+                        f"{dep!r} which is absent or declared later")
+            names.add(p.name)
+        for barrier in (self.release_after, self.respond_after):
+            if barrier not in names:
+                raise ValueError(f"{self.system}: barrier on unknown "
+                                 f"phase {barrier!r}")
+
+
+# ---------------------------------------------------------------- compiler
+
+def compile_plan(spec: SystemSpec, cold: bool = True) -> PhasePlan:
+    """Compile a SystemSpec into its PhasePlan (cached: both executors
+    interpret the same object)."""
+    return _compile_plan(spec, bool(cold))
+
+
+@lru_cache(maxsize=None)
+def _compile_plan(spec: SystemSpec, cold: bool) -> PhasePlan:
+    """Compile a SystemSpec into its PhasePlan.
+
+    Structural rules (each a paper mechanism, applied as data):
+    * in-guest RPC termination needs the VM up (restore -> rpc_in);
+      backend-native termination does not (§4.2.1);
+    * cold starts on an offloaded fabric first establish the new VM's
+      storage connections — serial with the fetch, overlapped with the
+      restore (§4.2.4, Fig 12 'Add Server');
+    * without prefetch the *guest* issues the fetch (restore -> fetch);
+      with hinted prefetch the fetch chain starts at ingress and joins
+      restore only at compute (§4.2.2);
+    * async writeback moves the release barrier from reply to compute
+      while the response still gates on the durable write (§4.2.5).
+    """
+    if (spec.prefetch or spec.async_writeback) and not spec.offload_sdk:
+        raise ValueError(
+            f"{spec.name}: prefetch/async writeback are backend "
+            f"mechanisms — they require offload_sdk=True")
+    has_connect = cold and spec.offload_sdk
+    rpc_deps = ("restore",) if not spec.offload_rpc else ()
+
+    fetch_deps = ["rpc_in"]
+    if has_connect:
+        fetch_deps.append("connect")
+    if not spec.prefetch:
+        fetch_deps.append("restore")
+
+    offl = spec.offload_sdk
+    phases = [
+        Phase("restore", GUEST_CORE),
+        Phase("rpc_in", GUEST_CORE if spec.virtualized else NONE,
+              after=rpc_deps),
+    ]
+    if has_connect:
+        phases.append(Phase("connect", WIRE, after=("rpc_in",)))
+    phases += [
+        Phase("fetch_cpu", BACKEND_WORKER if offl else GUEST_CORE,
+              after=tuple(fetch_deps),
+              backend_group="fetch" if offl else None),
+        Phase("fetch_net", WIRE, after=("fetch_cpu",),
+              backend_group="fetch" if offl else None),
+        Phase("compute", GUEST_CORE, after=("fetch_net", "restore")),
+        Phase("write_cpu", BACKEND_WORKER if offl else GUEST_CORE,
+              after=("compute",),
+              backend_group="write" if offl else None),
+        Phase("write_net", WIRE, after=("write_cpu",),
+              backend_group="write" if offl else None),
+        Phase("reply", GUEST_CORE if spec.virtualized else NONE,
+              after=("write_net",)),
+    ]
+    return PhasePlan(
+        system=spec.name, cold=cold, phases=tuple(phases),
+        release_after="compute" if spec.async_writeback else "reply",
+        respond_after="reply")
+
+
+# -------------------------------------------------------------- cost model
+
+def _cpu_s(mcycles: float) -> float:
+    return mcycles / F.GHZ_MCYC_PER_S
+
+
+def _transport_cpu_s(spec: SystemSpec, nbytes: int) -> float:
+    tr = TRANSPORTS[spec.transport]
+    mb = nbytes / MB
+    return _cpu_s(tr.host_kernel_mcyc_per_mb * mb
+                  + tr.host_kernel_mcyc_per_msg
+                  + tr.host_user_mcyc_per_mb * mb)
+
+
+def _op_cpu_s(spec: SystemSpec, nbytes: int) -> float:
+    """Fabric CPU seconds for one GET/PUT of nbytes under `spec`."""
+    if spec.offload_sdk:
+        fabric = F.remoted_op_cost(spec.sdk, nbytes).total()
+    elif spec.virtualized:
+        fabric = F.in_guest_op_cost(spec.sdk, spec.guest_lang, nbytes).total()
+    else:                                # wasm: fabric compiled in-process
+        fabric = F.in_process_op_cost(spec.sdk, spec.guest_lang,
+                                      nbytes).total()
+    return _cpu_s(fabric) + _transport_cpu_s(spec, nbytes)
+
+
+def _rpc_cpu_s(spec: SystemSpec, nbytes: int = 4096) -> float:
+    if not spec.virtualized:
+        return 0.0                       # folded into the dispatch hop
+    return _cpu_s(F.rpc_ingress_cost(not spec.offload_rpc, nbytes).total())
+
+
+def phase_durations(spec: SystemSpec, w: Workload,
+                    cold: bool) -> dict[str, float]:
+    """Modeled duration (seconds) of every phase in `compile_plan(spec,
+    cold)` — the single cost model the density simulator executes and
+    the SLO denominator is derived from."""
+    tr = TRANSPORTS[spec.transport]
+    in_b, out_b = w.input_bytes, w.output_bytes
+    mem = F.instance_memory(w.extra_libs_mb, spec.memory_variant)
+    d = {
+        "restore": (F.restore_seconds_components(mem) if cold else 0.0),
+        "rpc_in": spec.dispatch_s + _rpc_cpu_s(spec),
+        "fetch_cpu": _op_cpu_s(spec, in_b),
+        "fetch_net": tr.transfer_latency(in_b),
+        "compute": _cpu_s(w.compute_mcycles * spec.compute_scale),
+        "write_cpu": _op_cpu_s(spec, out_b),
+        "write_net": tr.transfer_latency(out_b),
+        "reply": _rpc_cpu_s(spec, 1024),
+    }
+    if cold and spec.offload_sdk:
+        d["connect"] = tr.setup_latency_s
+    return d
+
+
+def unloaded_latency(spec: SystemSpec, w: Workload) -> float:
+    """Warm, zero-contention critical path (the paper's SLO denominator)
+    — by construction the plan's critical path with restore = 0."""
+    return compile_plan(spec, cold=False).critical_path(
+        phase_durations(spec, w, cold=False))

@@ -1,21 +1,20 @@
 """Worker-node runtime: the anatomy of an invocation (paper §4.2).
 
-Implements the four evaluated systems on one `WorkerNode`:
+One `WorkerNode` executes every system variant in `plan.SYSTEMS` by
+interpreting its compiled `PhasePlan` with REAL threads over REAL
+bytes: restores overlap with prefetches because two threads really run
+concurrently; zero-copy is real (`memoryview` into the tenant arena);
+crashes really kill the backend mid-flight. Latencies are modeled
+constants (slept); cycles/crossings are accounted per §3's calibration.
+``byte_scale`` shrinks *real* payload bytes to keep Python hashing off
+the critical path while hints/costs use nominal sizes.
 
-* ``baseline``     — coupled: guest gRPC server + in-guest boto3; strict
-                     restore -> fetch -> compute -> write serialization.
-* ``nexus-tcp``    — fabric offloaded to the shared backend over TCP;
-                     fetch/write still synchronous w.r.t. the instance.
-* ``nexus-async``  — + hinted input prefetch overlapped with restore,
-                     async output write + early instance release.
-* ``nexus``        — nexus-async atop RDMA (kernel-bypass transport).
-
-Every invocation is executed by real threads over real bytes: restores
-overlap with prefetches because two threads really run concurrently;
-zero-copy is real (`memoryview` into the tenant arena). Latencies are
-modeled constants (slept); cycles/crossings are accounted per §3's
-calibration. ``byte_scale`` shrinks *real* payload bytes to keep Python
-hashing off the critical path while hints/costs use nominal sizes.
+There is deliberately NO per-variant control flow here: phase ordering,
+overlap, and the release/response barriers all come from
+`plan.compile_plan(spec)`. Each breakdown group maps to one *action*
+(how the phase does its work — in-guest SDK vs backend call vs sandbox
+hop — selected by `SystemSpec` capability fields); *when* an action may
+run is the plan's dependency edges, walked by `_PlanRun`.
 """
 from __future__ import annotations
 
@@ -24,44 +23,24 @@ import threading
 import time
 import uuid
 from concurrent.futures import Future, ThreadPoolExecutor
-from dataclasses import dataclass, field
 
 from repro.core import fabric as F
 from repro.core import metrics as M
 from repro.core.backend import NexusBackend
 from repro.core.frontend import BaselineClient, GuestContext, NexusClient
-from repro.core.hints import InputHint, OutputHint, extract_hints, make_event
+from repro.core.hints import extract_hints, make_event
 from repro.core.lifecycle import InstancePool
+from repro.core.plan import SYSTEMS, SystemSpec, PhasePlan, compile_plan
 from repro.core.storage import FaultPlan, ObjectStore, RemoteStorage
 from repro.core.supervisor import Supervisor
 from repro.core.workloads import SUITE, Workload
 
+__all__ = ["SYSTEMS", "SystemSpec", "WorkerNode", "InvocationResult"]
+
 MB = 1024 * 1024
 
 
-@dataclass(frozen=True)
-class SystemSpec:
-    name: str
-    offload_sdk: bool
-    offload_rpc: bool
-    prefetch: bool
-    async_writeback: bool
-    transport: str
-
-    @property
-    def coupled(self) -> bool:
-        return not self.offload_sdk
-
-
-SYSTEMS: dict[str, SystemSpec] = {
-    "baseline":    SystemSpec("baseline", False, False, False, False, "tcp"),
-    "nexus-tcp":   SystemSpec("nexus-tcp", True, True, False, False, "tcp"),
-    "nexus-async": SystemSpec("nexus-async", True, True, True, True, "tcp"),
-    "nexus":       SystemSpec("nexus", True, True, True, True, "rdma"),
-    # memory-figure-only variant (Fig 3): SDK offloaded, RPC kept in guest
-    "nexus-sdk-only": SystemSpec("nexus-sdk-only", True, False, False, False,
-                                 "tcp"),
-}
+from dataclasses import dataclass, field, replace
 
 
 @dataclass
@@ -72,6 +51,120 @@ class InvocationResult:
     latency_s: float
     breakdown: dict[str, float] = field(default_factory=dict)
     output_etag: int | None = None
+
+
+class _Invocation:
+    """Mutable state one invocation's phase actions thread through."""
+
+    def __init__(self, w: Workload, inv_id: str, event: dict,
+                 cold_expected: bool, t0: float):
+        self.w = w
+        self.inv_id = inv_id
+        self.event = event
+        self.inp, self.out = extract_hints(event)
+        self.cold_expected = cold_expected
+        self.t0 = t0
+        self.inst = None
+        self.cold = False
+        self.client = None
+        self.gctx: GuestContext | None = None
+        self.body = None
+        self.slot = None
+        self.result: bytes | None = None
+        self.etag: int | None = None
+        self.vm_busy: float | None = None
+        self._rel_lock = threading.Lock()
+        self._released = False
+
+    def release_instance(self) -> None:
+        """Idempotent release barrier — fired where the plan says."""
+        with self._rel_lock:
+            if self._released or self.inst is None:
+                return
+            self._released = True
+        self.vm_busy = time.monotonic() - self.t0
+        self.inst.release()
+
+
+class _PlanRun:
+    """Walk one compiled plan's breakdown groups on real threads.
+
+    Each group runs as soon as its plan dependencies complete; parallel
+    branches (prefetch vs restore) get real threads; barriers fire as
+    completion hooks. Per-group wall time is recorded as the breakdown.
+    """
+
+    def __init__(self, plan: PhasePlan, actions: dict, ctx: _Invocation):
+        self._plan = plan
+        self._actions = actions
+        self._ctx = ctx
+        self._deps = plan.group_deps()
+        self._order = plan.group_names()
+        self._hooks: dict[str, callable] = {}
+        self.breakdown: dict[str, float] = {}
+        self._lock = threading.Lock()
+        self._started: set[str] = set()
+        self._done: set[str] = set()
+        self._active = 0
+        self._error: BaseException | None = None
+        self._finished = threading.Event()
+
+    def on_complete(self, group: str, hook) -> None:
+        self._hooks[group] = hook
+
+    def run(self) -> dict[str, float]:
+        roots = [g for g in self._order if not self._deps[g]]
+        for g in roots[1:]:
+            threading.Thread(target=self._chain, args=(g,),
+                             daemon=True).start()
+        self._chain(roots[0])
+        if not self._finished.wait(timeout=120.0):
+            raise TimeoutError(
+                f"plan run stalled ({self._plan.system}): "
+                f"done={sorted(self._done)} of {self._order}")
+        if self._error is not None:
+            raise self._error
+        return self.breakdown
+
+    def _chain(self, group: str | None) -> None:
+        while group is not None:
+            with self._lock:
+                if group in self._started or self._error is not None:
+                    return
+                self._started.add(group)
+                self._active += 1
+            t0 = time.monotonic()
+            try:
+                self._actions[group](self._ctx)
+            except BaseException as e:              # noqa: BLE001
+                with self._lock:
+                    self._active -= 1
+                    if self._error is None:
+                        self._error = e
+                    if self._active == 0:
+                        self._finished.set()
+                return
+            self.breakdown[group] = time.monotonic() - t0
+            hook = self._hooks.get(group)
+            if hook is not None:
+                hook()
+            with self._lock:
+                self._active -= 1
+                self._done.add(group)
+                if self._error is not None:
+                    if self._active == 0:
+                        self._finished.set()
+                    return
+                if len(self._done) == len(self._order):
+                    self._finished.set()
+                    return
+                ready = [g for g in self._order
+                         if g not in self._started
+                         and all(d in self._done for d in self._deps[g])]
+            for g in ready[1:]:
+                threading.Thread(target=self._chain, args=(g,),
+                                 daemon=True).start()
+            group = ready[0] if ready else None
 
 
 class WorkerNode:
@@ -97,6 +190,16 @@ class WorkerNode:
                                            thread_name_prefix="ingress")
         self._inv_counter = itertools.count()
         self._max_instances = max_instances_per_fn
+        #: breakdown-group name -> action; *structure* lives in the plan.
+        self._actions = {
+            "restore": self._act_restore,
+            "rpc_in": self._act_rpc_in,
+            "connect": self._act_connect,
+            "fetch": self._act_fetch,
+            "compute": self._act_compute,
+            "write": self._act_write,
+            "reply": self._act_reply,
+        }
 
         if not self.spec.coupled:
             self.supervisor = Supervisor(self._make_backend)
@@ -125,8 +228,7 @@ class WorkerNode:
     def deploy(self, fn_name: str) -> None:
         w = SUITE[fn_name]
         self._pools[fn_name] = InstancePool(
-            w, self.spec.name, self.acct,
-            max_instances=self._max_instances)
+            w, self.spec, self.acct, max_instances=self._max_instances)
         if self.supervisor:
             self._creds[fn_name] = self.backend.register_function(
                 fn_name, {"in", "out"})
@@ -166,138 +268,132 @@ class WorkerNode:
         size_hint = (None if opaque or not w.deterministic_input
                      else self.store.head("in", input_key).size)
         event = make_event("in", input_key, size_hint, "out", f"{inv_id}-out")
-        if self.spec.coupled:
-            return self._ingress.submit(self._run_baseline, w, inv_id, event)
-        return self._ingress.submit(self._run_nexus, w, inv_id, event)
+        return self._ingress.submit(self._run, w, inv_id, event)
 
-    # --------------------------------------------------- coupled (baseline)
-
-    def _run_baseline(self, w: Workload, inv_id: str,
-                      event: dict) -> InvocationResult:
+    def _run(self, w: Workload, inv_id: str, event: dict) -> InvocationResult:
         t0 = time.monotonic()
-        bd: dict[str, float] = {}
         pool = self._pools[w.name]
+        cold_expected = not pool.has_warm()
+        ctx = _Invocation(w, inv_id, event, cold_expected, t0)
+        # the *effective* spec for this invocation is still pure data:
+        # a size-opaque input cannot be prefetched (§4.2.3), so its plan
+        # is the variant's no-prefetch graph — the streaming fallback is
+        # issued by the guest and correctly serializes after the restore.
+        spec = self.spec
+        if spec.prefetch and (ctx.inp is None or not ctx.inp.prefetchable):
+            spec = replace(spec, prefetch=False)
+        plan = compile_plan(spec, cold=cold_expected)
+        self._make_client(ctx)
 
-        # 1. cold path: the RPC server cannot accept until the VM is up.
-        t = time.monotonic()
-        inst, cold = pool.acquire()
-        bd["restore"] = time.monotonic() - t
-
-        # 2. RPC arrives at the guest gRPC server.
-        F.rpc_ingress_cost(in_guest=True).charge(self.acct)
-        inp, out = extract_hints(event)        # hints exist but are unused
-
-        client = BaselineClient(self.remote, self.acct)
+        run = _PlanRun(plan, self._actions, ctx)
+        run.on_complete(plan.release_group, ctx.release_instance)
         try:
-            # 3. in-guest fetch (blocking).
-            t = time.monotonic()
-            obj = client.get_object(Bucket=inp.bucket, Key=inp.key)
-            bd["fetch"] = time.monotonic() - t
-
-            # 4. compute.
-            t = time.monotonic()
-            result = inst.compute(obj["Body"])
-            bd["compute"] = time.monotonic() - t
-
-            # 5. in-guest write (blocking) — VM held captive.
-            t = time.monotonic()
-            real_out = result[:max(int(w.output_mb * MB * self.byte_scale), 1)]
-            meta = client.put_object(Bucket=out.bucket, Key=out.key,
-                                     Body=real_out)
-            bd["write"] = time.monotonic() - t
-
-            # 6. respond through the same guest RPC path.
-            F.rpc_ingress_cost(in_guest=True, nbytes=1024).charge(self.acct)
+            bd = dict(run.run())
         finally:
-            inst.release()
+            ctx.release_instance()       # exactly-once, also on failure
+        if ctx.vm_busy is not None:
+            bd["vm_busy"] = ctx.vm_busy
 
         lat = time.monotonic() - t0
-        self.latency.record(f"{w.name}:{'cold' if cold else 'warm'}", lat)
-        return InvocationResult(inv_id, w.name, cold, lat, bd, meta.etag)
+        self.latency.record(f"{w.name}:{'cold' if ctx.cold else 'warm'}",
+                            lat)
+        return InvocationResult(inv_id, w.name, ctx.cold, lat, bd, ctx.etag)
 
-    # ------------------------------------------------------------- nexus
-
-    def _run_nexus(self, w: Workload, inv_id: str,
-                   event: dict) -> InvocationResult:
-        t0 = time.monotonic()
-        bd: dict[str, float] = {}
-        pool = self._pools[w.name]
-        be = self.backend
-        cred = self._creds[w.name]
-
-        # 1. backend terminates the RPC natively; hints promoted by ingress.
-        be.terminate_rpc()
-        inp, out = extract_hints(event)
-
-        ctx = GuestContext(tenant=w.name, cred_handle=cred,
-                           invocation_id=inv_id)
-
-        # 2. provision instance and (optionally) prefetch IN PARALLEL.
-        #    A cold VM first needs the backend to establish its per-VM
-        #    storage connections (paper Fig 12 "Add Server": QP setup
-        #    dominates under RDMA) — serial with the fetch, overlapped
-        #    with the restore.
-        t = time.monotonic()
-        cold_expected = not self._pools[w.name].has_warm()
-        prefetching = (self.spec.prefetch and inp is not None
-                       and inp.prefetchable)
-        if prefetching:
-            if cold_expected:
-                ctx.prefetch = be.prefetch(
-                    w.name, cred, inp,
-                    pre_connect=f"{w.name}#vm-{inv_id}")
-            else:
-                ctx.prefetch = be.prefetch(w.name, cred, inp)
-        elif cold_expected:
-            be.connection_setup(f"{w.name}#vm-{inv_id}")
-
-        inst, cold = pool.acquire()            # restore overlaps prefetch
-        bd["restore"] = time.monotonic() - t
-
-        client = NexusClient(ctx, lambda: self.supervisor.backend, self.acct)
-        try:
-            # 3. guest fetch: pointer-return if prefetched, remoted sync GET
-            #    otherwise. Size-opaque inputs use the streaming fallback
-            #    (§4.2.3): no exactly-sized region can be pre-mapped.
-            t = time.monotonic()
-            if inp is None or not inp.prefetchable:
-                buf = client.get_object_streaming(Bucket="in",
-                                                  Key=event["input"]["key"])
-                body: memoryview | bytes = buf.read_all()
-                slot = None
-            else:
-                obj = client.get_object(Bucket=inp.bucket, Key=inp.key)
-                body, slot = obj["Body"], obj.get("_slot")
-            bd["fetch"] = time.monotonic() - t
-
-            # 4. compute on the zero-copy view.
-            t = time.monotonic()
-            result = inst.compute(body)
-            bd["compute"] = time.monotonic() - t
-            if slot is not None:
-                slot.release()
-
-            # 5. output write. Async: hand off + early release (§4.2.5).
-            t = time.monotonic()
-            real_out = result[:max(int(w.output_mb * MB * self.byte_scale), 1)]
-            ticket = client.put_object(
-                Bucket=out.bucket, Key=out.key, Body=real_out,
-                wait=not self.spec.async_writeback)
-            bd["write_handoff"] = time.monotonic() - t
-        finally:
-            inst.release()                     # early release happens HERE
-        bd["vm_busy"] = time.monotonic() - t0
-
-        # 6. response released only after the write is acked.
-        if self.spec.async_writeback:
-            etag = ticket.future.result(timeout=30.0)
+    def _make_client(self, ctx: _Invocation) -> None:
+        spec = self.spec
+        if spec.coupled:
+            ctx.client = BaselineClient(
+                self.remote, self.acct, lang=spec.guest_lang,
+                sdk=spec.sdk, virtualized=spec.virtualized)
         else:
-            etag = ticket
-        bd["write_ack"] = time.monotonic() - t0 - bd["vm_busy"]
+            ctx.gctx = GuestContext(tenant=ctx.w.name,
+                                    cred_handle=self._creds[ctx.w.name],
+                                    invocation_id=ctx.inv_id)
+            ctx.client = NexusClient(ctx.gctx,
+                                     lambda: self.supervisor.backend,
+                                     self.acct)
 
-        lat = time.monotonic() - t0
-        self.latency.record(f"{w.name}:{'cold' if cold else 'warm'}", lat)
-        return InvocationResult(inv_id, w.name, cold, lat, bd, etag)
+    # --------------------------------------------------------- phase actions
+    #
+    # Actions say HOW a phase does its work for this spec's capabilities;
+    # the plan's edges say WHEN it may run and what overlaps.
+
+    def _act_restore(self, ctx: _Invocation) -> None:
+        ctx.inst, ctx.cold = self._pools[ctx.w.name].acquire()
+        if ctx.cold and not ctx.cold_expected and self.spec.offload_sdk:
+            # a racing invocation stole the predicted warm instance, so
+            # this one restored fresh under the warm plan (no connect
+            # phase): pay the per-VM connection setup here, serially —
+            # conservative, and the VM never runs without its storage
+            # connections.
+            self.backend.connection_setup(f"{ctx.w.name}#vm-{ctx.inv_id}")
+
+    def _act_rpc_in(self, ctx: _Invocation) -> None:
+        spec = self.spec
+        if spec.offload_rpc:
+            self.backend.terminate_rpc()        # backend-native (§4.2.1)
+        elif spec.virtualized:
+            F.rpc_ingress_cost(in_guest=True).charge(self.acct)
+        else:
+            # wasm: Faabric scheduler hop + sandbox-bootstrap page faults
+            self.acct.charge(M.HOST_KERNEL, F.FAABRIC_KERNEL_MCYC)
+            time.sleep(spec.dispatch_s)
+
+    def _act_connect(self, ctx: _Invocation) -> None:
+        # per-VM storage connection setup (the 'Add Server' cold-start
+        # term) — a cold-plan-only phase, overlapped with the restore
+        # and serialized before the fetch by the plan's edges.
+        self.backend.connection_setup(f"{ctx.w.name}#vm-{ctx.inv_id}")
+
+    def _act_fetch(self, ctx: _Invocation) -> None:
+        spec, inp = self.spec, ctx.inp
+        if spec.coupled:
+            obj = ctx.client.get_object(Bucket=inp.bucket, Key=inp.key)
+            ctx.body = obj["Body"]
+            return
+        if inp is None or not inp.prefetchable:
+            # size-opaque inputs use the streaming fallback (§4.2.3):
+            # no exactly-sized region can be pre-mapped.
+            buf = ctx.client.get_object_streaming(
+                Bucket="in", Key=ctx.event["input"]["key"])
+            ctx.body = buf.read_all()
+            return
+        if spec.prefetch:
+            ctx.gctx.prefetch = self.backend.prefetch(
+                ctx.w.name, self._creds[ctx.w.name], inp)
+        obj = ctx.client.get_object(Bucket=inp.bucket, Key=inp.key)
+        ctx.body, ctx.slot = obj["Body"], obj.get("_slot")
+
+    def _act_compute(self, ctx: _Invocation) -> None:
+        ctx.result = ctx.inst.compute(ctx.body)
+        if ctx.slot is not None:
+            ctx.slot.release()
+            ctx.slot = None
+
+    def _act_write(self, ctx: _Invocation) -> None:
+        w, spec = ctx.w, self.spec
+        real_out = ctx.result[:max(int(w.output_mb * MB * self.byte_scale),
+                                   1)]
+        if spec.coupled:
+            meta = ctx.client.put_object(Bucket=ctx.out.bucket,
+                                         Key=ctx.out.key, Body=real_out)
+            ctx.etag = meta.etag
+            return
+        ticket = ctx.client.put_object(
+            Bucket=ctx.out.bucket, Key=ctx.out.key, Body=real_out,
+            wait=not spec.async_writeback)
+        if spec.async_writeback:
+            # the VM was already released at the plan's barrier; the
+            # group (and with it the response) still gates on the ack.
+            ctx.etag = ticket.future.result(timeout=30.0)
+        else:
+            ctx.etag = ticket
+
+    def _act_reply(self, ctx: _Invocation) -> None:
+        if not self.spec.virtualized:
+            return                     # folded into the dispatch hop
+        F.rpc_ingress_cost(in_guest=not self.spec.offload_rpc,
+                           nbytes=1024).charge(self.acct)
 
     # ------------------------------------------------------------ teardown
 

@@ -34,6 +34,15 @@ class Workload:
     def io_mb(self) -> float:
         return self.input_mb + self.output_mb
 
+    @property
+    def input_bytes(self) -> int:
+        """Nominal GET size — what every cost model charges for."""
+        return int(self.input_mb * MB)
+
+    @property
+    def output_bytes(self) -> int:
+        return int(self.output_mb * MB)
+
 
 def _digest_n(view: memoryview, out_mb: float, rounds: int = 1) -> bytes:
     """Hash the payload `rounds` times, expand digest to out_mb bytes."""

@@ -40,7 +40,13 @@ def _guard(spec: tuple, shape: tuple[int, ...], mesh: Mesh) -> P:
     """Drop any axis assignment that does not divide its dim."""
     out = []
     for dim, axes in zip(shape, spec):
-        out.append(axes if _fits(dim, mesh, axes) else None)
+        if not _fits(dim, mesh, axes):
+            axes = None
+        if isinstance(axes, tuple) and len(axes) == 1:
+            # normalize ('x',) -> 'x': identical partitioning, but only
+            # new-JAX PartitionSpec equality collapses the two forms
+            axes = axes[0]
+        out.append(axes)
     return P(*out)
 
 

@@ -1,0 +1,171 @@
+"""Compatibility layer over JAX mesh-API drift (0.4.x <-> >= 0.5).
+
+The model code targets the current mesh-context API:
+
+* ``jax.sharding.get_abstract_mesh()`` / ``AxisType`` / ``axis_types``
+* ``jax.set_mesh(mesh)`` as the ambient-mesh context manager
+* ``jax.shard_map(f, in_specs=..., out_specs=...)`` using the ambient mesh
+
+On JAX 0.4.x none of these exist: the ambient mesh lives in
+``jax._src.mesh.thread_resources`` (set by ``with mesh:``), every axis
+is effectively ``Auto``, and shard_map lives in ``jax.experimental``
+with a mandatory positional mesh. This module presents the new surface
+on both, and installs ``jax.set_mesh`` / ``jax.shard_map`` shims into
+the ``jax`` namespace when absent so call sites (and tests) can use the
+one modern spelling.
+
+Import it before touching any mesh API:  ``from repro.models import
+jax_compat as jc`` then ``jc.get_abstract_mesh()`` etc.
+"""
+from __future__ import annotations
+
+import contextlib
+import enum
+from functools import partial
+
+import jax
+
+__all__ = ["AxisType", "get_abstract_mesh", "auto_axis_names",
+           "set_mesh", "shard_map", "with_sharding_constraint",
+           "cost_analysis"]
+
+
+def cost_analysis(compiled) -> dict:
+    """`Compiled.cost_analysis()` returns a per-device *list* of dicts
+    on 0.4.x and a plain dict on newer JAX — normalize to the dict."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        return ca[0] if ca else {}
+    return ca
+
+
+# ----------------------------------------------------------------- AxisType
+
+if hasattr(jax.sharding, "AxisType"):
+    AxisType = jax.sharding.AxisType
+else:
+    class AxisType(enum.Enum):          # 0.4.x: GSPMD axes are all Auto
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+
+# ------------------------------------------------------------- ambient mesh
+
+class _MeshView:
+    """Read-only adapter giving a 0.4.x physical mesh the AbstractMesh
+    query surface the model code relies on (axis_names / shape /
+    axis_types)."""
+
+    def __init__(self, mesh):
+        self._mesh = mesh
+
+    @property
+    def axis_names(self) -> tuple:
+        return tuple(self._mesh.axis_names)
+
+    @property
+    def shape(self):
+        return dict(self._mesh.shape)
+
+    @property
+    def axis_types(self) -> tuple:
+        # axes bound by an enclosing shard_map trace are Manual there;
+        # everything else in a 0.4.x mesh context is GSPMD-Auto
+        bound = _bound_axis_names()
+        return tuple(AxisType.Manual if a in bound else AxisType.Auto
+                     for a in self._mesh.axis_names)
+
+    @property
+    def empty(self) -> bool:
+        return not self.axis_names
+
+
+def get_abstract_mesh():
+    """The ambient mesh, or an empty view outside any mesh context.
+    Callers test ``mesh.axis_names`` exactly as with the modern API."""
+    fn = getattr(jax.sharding, "get_abstract_mesh", None)
+    if fn is not None:
+        return fn()
+    from jax._src.mesh import thread_resources
+    return _MeshView(thread_resources.env.physical_mesh)
+
+
+def _bound_axis_names() -> set:
+    """Axis names bound by an enclosing shard_map/pmap trace (0.4.x:
+    the abstract mesh cannot mark them Manual, but the axis env sees
+    them)."""
+    try:
+        from jax._src import core as _core
+        return set(_core.get_axis_env().axis_names())
+    except Exception:                   # noqa: BLE001 — probe only
+        return set()
+
+
+def auto_axis_names(mesh) -> set:
+    """Axis names open to GSPMD (Auto) — constraints may only name these."""
+    types = getattr(mesh, "axis_types", None)
+    if types is None:
+        # 0.4.x: every mesh-context axis is Auto except those a
+        # surrounding shard_map has already bound (Manual there)
+        return set(mesh.axis_names) - _bound_axis_names()
+    return {a for a, t in zip(mesh.axis_names, types) if t == AxisType.Auto}
+
+
+def with_sharding_constraint(x, spec):
+    """Advisory constraint. On 0.4.x the ambient-mesh probe cannot see
+    shard_map's Manual axes, so a constraint naming one raises at trace
+    time — hints are best-effort, so it degrades to identity (modern
+    JAX never reaches the except: Manual axes are filtered upstream via
+    `auto_axis_names`)."""
+    try:
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.PartitionSpec(*spec))
+    except ValueError:
+        return x
+
+
+# ----------------------------------------------------------------- set_mesh
+
+if hasattr(jax, "set_mesh"):
+    set_mesh = jax.set_mesh
+else:
+    @contextlib.contextmanager
+    def set_mesh(mesh):
+        # 0.4.x: Mesh is itself the ambient-mesh context manager
+        with mesh:
+            yield mesh
+
+    jax.set_mesh = set_mesh             # call sites use the one spelling
+
+
+# ---------------------------------------------------------------- shard_map
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map as _legacy_shard_map
+
+    def shard_map(f=None, /, *, mesh=None, in_specs=None, out_specs=None,
+                  **kw):
+        if f is None:
+            return partial(shard_map, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs, **kw)
+        if mesh is None:
+            from jax._src.mesh import thread_resources
+            mesh = thread_resources.env.physical_mesh
+            if not mesh.axis_names:
+                raise ValueError("shard_map: no mesh given and no ambient "
+                                 "mesh context active")
+        # new-API `axis_names` (manual axes) -> legacy `auto` (everything
+        # else); partial-auto bodies cannot be replication-checked there.
+        manual = kw.pop("axis_names", None)
+        if manual is not None:
+            auto = frozenset(mesh.axis_names) - frozenset(manual)
+            if auto:
+                kw.setdefault("auto", auto)
+                kw.setdefault("check_rep", False)
+        return _legacy_shard_map(f, mesh, in_specs=in_specs,
+                                 out_specs=out_specs, **kw)
+
+    jax.shard_map = shard_map

@@ -1,0 +1,214 @@
+"""PhasePlan layer: golden phase graphs + cross-executor parity.
+
+The refactor's contract (ISSUE 1): `runtime.WorkerNode` and
+`des.DensitySimulator` contain no per-variant phase-ordering branches —
+both interpret `plan.compile_plan(spec)`. These tests pin (a) the
+compiled graph per SystemSpec (edges, resource tags, backend groups,
+barriers) and (b) that the two executors actually agree: the DES's
+zero-contention latency equals `unloaded_latency` equals the warm
+phase-sum, and the threaded runtime's breakdown is exactly the plan's
+group set in a plan-consistent order — for EVERY variant in SYSTEMS.
+"""
+import math
+
+import pytest
+
+from repro.core import plan as P
+from repro.core import workloads as W
+from repro.core.des import DensitySimulator
+from repro.core.plan import (SYSTEMS, Phase, PhasePlan, compile_plan,
+                             phase_durations, unloaded_latency)
+from repro.core.runtime import WorkerNode
+
+
+def deps(plan, name):
+    return set(plan.phase(name).after)
+
+
+# ------------------------------------------------------------ golden graphs
+
+class TestGoldenGraphs:
+    def test_baseline_cold(self):
+        """Coupled: strict serial chain, VM held through the reply."""
+        p = compile_plan(SYSTEMS["baseline"], cold=True)
+        assert p.phase_names == ("restore", "rpc_in", "fetch_cpu",
+                                 "fetch_net", "compute", "write_cpu",
+                                 "write_net", "reply")
+        assert deps(p, "rpc_in") == {"restore"}       # guest gRPC server
+        assert deps(p, "fetch_cpu") == {"rpc_in", "restore"}
+        assert deps(p, "compute") == {"fetch_net", "restore"}
+        assert p.release_after == "reply"
+        assert p.respond_after == "reply"
+        assert p.phase("fetch_cpu").resource == P.GUEST_CORE
+        assert p.phase("fetch_cpu").backend_group is None
+        assert p.backend_groups() == {}
+
+    def test_nexus_cold(self):
+        """Prefetch overlaps restore; connect serializes before fetch;
+        async writeback releases at compute."""
+        p = compile_plan(SYSTEMS["nexus"], cold=True)
+        assert deps(p, "rpc_in") == set()             # backend-native
+        assert deps(p, "connect") == {"rpc_in"}
+        assert deps(p, "fetch_cpu") == {"rpc_in", "connect"}  # no restore!
+        assert deps(p, "compute") == {"fetch_net", "restore"}  # the join
+        assert p.release_after == "compute"           # early release
+        assert p.respond_after == "reply"             # ...but ack gates
+        assert p.phase("fetch_cpu").resource == P.BACKEND_WORKER
+        assert p.backend_groups() == {"fetch": ("fetch_cpu", "fetch_net"),
+                                      "write": ("write_cpu", "write_net")}
+        # RDMA: slot released after the CPU slice; TCP: held through wire
+        assert p.slot_release_phase("fetch", kernel_bypass=True) \
+            == "fetch_cpu"
+        assert p.slot_release_phase("fetch", kernel_bypass=False) \
+            == "fetch_net"
+
+    def test_nexus_tcp_keeps_restore_fetch_serialization(self):
+        """No prefetch -> the guest must be up to issue the fetch."""
+        p = compile_plan(SYSTEMS["nexus-tcp"], cold=True)
+        assert "restore" in deps(p, "fetch_cpu")
+        assert p.release_after == "reply"
+
+    def test_prefetch_only_isolates_the_two_mechanisms(self):
+        """nexus-prefetch-only: nexus-async's fetch overlap, nexus-tcp's
+        release barrier — §4.2.2 without §4.2.5, as pure data."""
+        p = compile_plan(SYSTEMS["nexus-prefetch-only"], cold=True)
+        assert "restore" not in deps(p, "fetch_cpu")
+        assert p.release_after == "reply"
+
+    def test_sdk_only_keeps_in_guest_rpc(self):
+        p = compile_plan(SYSTEMS["nexus-sdk-only"], cold=True)
+        assert deps(p, "rpc_in") == {"restore"}       # gRPC in the guest
+        assert p.phase("fetch_cpu").resource == P.BACKEND_WORKER
+
+    def test_wasm_has_no_vm_boundary(self):
+        p = compile_plan(SYSTEMS["wasm"], cold=True)
+        assert p.phase("rpc_in").resource == P.NONE   # scheduler hop
+        assert p.phase("reply").resource == P.NONE
+        assert "connect" not in p.phase_names         # in-process fabric
+        assert p.backend_groups() == {}
+        assert SYSTEMS["wasm"].memory_variant == "wasm"
+
+    def test_connect_is_cold_only_and_offload_only(self):
+        for name, spec in SYSTEMS.items():
+            warm = compile_plan(spec, cold=False)
+            assert "connect" not in warm.phase_names, name
+            cold = compile_plan(spec, cold=True)
+            assert (("connect" in cold.phase_names)
+                    == spec.offload_sdk), name
+
+    def test_validation_rejects_malformed_graphs(self):
+        with pytest.raises(ValueError, match="absent or declared later"):
+            PhasePlan("bad", True,
+                      (Phase("a", P.GUEST_CORE, after=("zzz",)),),
+                      release_after="a", respond_after="a")
+        with pytest.raises(ValueError, match="barrier"):
+            PhasePlan("bad", True, (Phase("a", P.GUEST_CORE),),
+                      release_after="nope", respond_after="a")
+        with pytest.raises(ValueError, match="resource"):
+            PhasePlan("bad", True, (Phase("a", "gpu"),),
+                      release_after="a", respond_after="a")
+
+    def test_incoherent_spec_rejected_at_compile(self):
+        """Variants are data — so the compiler is where nonsense combos
+        must die: prefetch/async writeback without a backend."""
+        with pytest.raises(ValueError, match="offload_sdk"):
+            compile_plan(P.SystemSpec("weird", prefetch=True))
+        with pytest.raises(ValueError, match="offload_sdk"):
+            compile_plan(P.SystemSpec("weird2", async_writeback=True))
+
+    def test_groups_lift_cpu_net_pairs(self):
+        p = compile_plan(SYSTEMS["nexus"], cold=False)
+        assert p.group_names() == ("restore", "rpc_in", "fetch",
+                                   "compute", "write", "reply")
+        gd = p.group_deps()
+        assert gd["fetch"] == ("rpc_in",)
+        assert set(gd["compute"]) == {"fetch", "restore"}
+
+
+# ----------------------------------------------------------- cost model
+
+class TestCostModel:
+    @pytest.mark.parametrize("system", list(SYSTEMS))
+    def test_unloaded_is_warm_phase_sum(self, system):
+        """With restore = 0 nothing overlaps: the critical path IS the
+        phase sum — for every variant and every workload."""
+        spec = SYSTEMS[system]
+        for w in W.SUITE.values():
+            durs = phase_durations(spec, w, cold=False)
+            assert durs["restore"] == 0.0
+            assert unloaded_latency(spec, w) \
+                == pytest.approx(sum(durs.values()), rel=1e-12)
+
+    def test_variant_ordering_on_io_heavy_workload(self):
+        """Offloading, then RDMA, each cut the unloaded path; the wasm
+        lower bound undercuts them all (paper Figs 7/14)."""
+        w = W.SUITE["ST-R"]
+        ul = {s: unloaded_latency(SYSTEMS[s], w) for s in SYSTEMS}
+        assert ul["nexus-tcp"] < ul["baseline"]
+        assert ul["nexus"] < ul["nexus-tcp"]
+        assert ul["wasm"] < ul["nexus"]
+
+    def test_cold_adds_restore_and_connect(self):
+        spec = SYSTEMS["nexus"]
+        w = W.SUITE["AES"]
+        cold = phase_durations(spec, w, cold=True)
+        assert cold["restore"] > 0
+        assert cold["connect"] > 0.05          # RDMA QP setup dominates
+        tcp = phase_durations(SYSTEMS["nexus-async"], w, cold=True)
+        assert tcp["connect"] < cold["connect"]
+
+
+# ------------------------------------------------- cross-executor parity
+
+class TestCrossExecutorParity:
+    @pytest.mark.parametrize("system", list(SYSTEMS))
+    def test_des_zero_contention_matches_unloaded(self, system):
+        """A warm invocation walked by the DES with effectively infinite
+        resources completes in exactly `unloaded_latency` — for every
+        variant, over the whole suite (one deployed copy of each)."""
+        sim = DensitySimulator(system, len(W.SUITE), seed=0,
+                               duration_s=5.0, warmup_s=0.0,
+                               cores=4096, backend_workers=4096,
+                               nodes=1, mem_gb=1024.0)
+        for fn in sim.functions:
+            inst = sim._spawn(fn)
+            assert inst is not None
+            inst.state = "busy"
+            sim._execute(inst, 0.0, cold=False)
+        sim.loop.run(30.0)
+        for fn in sim.functions:
+            assert len(sim.latencies[fn]) == 1
+            assert math.isclose(sim.latencies[fn][0],
+                                sim.unloaded_latency(fn), rel_tol=1e-9), fn
+
+    @pytest.mark.parametrize("system", list(SYSTEMS))
+    def test_threaded_breakdown_matches_plan_groups(self, system):
+        """The threaded runtime reports exactly the plan's breakdown
+        groups, in an order consistent with the plan's edges — cold and
+        warm."""
+        spec = SYSTEMS[system]
+        node = WorkerNode(system)
+        try:
+            node.deploy("WEB")
+            node.seed_input("WEB")
+            cold = node.invoke("WEB").result(timeout=60)
+            warm = node.invoke("WEB").result(timeout=60)
+        finally:
+            node.shutdown()
+        assert cold.cold and not warm.cold
+        for res, cold_flag in ((cold, True), (warm, False)):
+            plan = compile_plan(spec, cold=cold_flag)
+            got = [k for k in res.breakdown if k != "vm_busy"]
+            assert set(got) == set(plan.group_names()), (system, cold_flag)
+            # completion order respects every group-level edge
+            pos = {g: i for i, g in enumerate(got)}
+            for g, gdeps in plan.group_deps().items():
+                for d in gdeps:
+                    assert pos[d] < pos[g], (system, cold_flag, d, g)
+
+    def test_both_executors_interpret_the_same_object(self):
+        """compile_plan is cached: the DES and the threaded runtime
+        literally share the plan instance."""
+        sim = DensitySimulator("nexus", 1, duration_s=1.0)
+        assert sim._plans[True] is compile_plan(SYSTEMS["nexus"], True)
+        assert sim._plans[False] is compile_plan(SYSTEMS["nexus"], False)

@@ -2,6 +2,11 @@
 import threading
 
 import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need the 'test' extra (pip install -e .[test])")
 from hypothesis import HealthCheck, given, settings
 from hypothesis import strategies as st
 
