@@ -46,14 +46,16 @@ def run() -> dict:
         cold = sum(d["cold_s"] for d in data[s].values()) / len(NAMES)
         pages = sum(d["ws_pages"] for d in data[s].values()) / len(NAMES)
         insert = sum(d["insert_s"] for d in data[s].values()) / len(NAMES)
-        # PhasePlan breakdown groups: I/O = fetch + write (the write
-        # group spans handoff through durable ack). Under prefetch
-        # variants the fetch group's wall time overlaps the restore, so
-        # this column is phase time, not critical-path time — the
-        # overlap is why cold_ms drops more than io_ms alone explains.
-        io = sum(d["breakdown"].get("fetch", 0.0)
-                 + d["breakdown"].get("write", 0.0)
-                 for d in data[s].values()) / len(NAMES)
+        # PhasePlan breakdown groups, per-op indexed since ISSUE 2
+        # (fetch[0], write[1], ...): I/O = all fetch + write groups
+        # (a write group spans handoff through durable ack). Under
+        # prefetch variants the first fetch group's wall time overlaps
+        # the restore, so this column is phase time, not critical-path
+        # time — the overlap is why cold_ms drops more than io_ms alone
+        # explains.
+        io = sum(v for d in data[s].values()
+                 for g, v in d["breakdown"].items()
+                 if g.startswith(("fetch[", "write["))) / len(NAMES)
         connect = sum(d["breakdown"].get("connect", 0.0)
                       for d in data[s].values()) / len(NAMES)
         rows.append({"system": s, "cold_ms": round(cold * 1e3, 1),

@@ -6,13 +6,15 @@ protocol. Reports:
 
 * Fig 7: warm latency normalized to baseline;
 * Fig 8: per-invocation cycle breakdown (Hk/Hu/Gk/Gu);
-* Fig 9: KVM-exit + vCPU-wakeup analogues normalized to baseline.
+* Fig 9: KVM-exit + vCPU-wakeup analogues normalized to baseline;
+* scenarios: the multi-I/O shapes (SG/PIPE/FAN) the handler-driven API
+  added — beyond the paper, tracked per PR via the CI artifact.
 """
 from __future__ import annotations
 
 from repro.core import metrics as M
 from repro.core.runtime import SYSTEMS, WorkerNode
-from repro.core.workloads import NAMES
+from repro.core.workloads import NAMES, SCENARIO_NAMES
 
 from benchmarks.common import pct, save_json, table
 
@@ -23,15 +25,15 @@ SYSTEMS_ORDER = ("baseline", "nexus-tcp", "nexus-async", "nexus",
                  "nexus-prefetch-only", "wasm")
 
 
-def measure(system: str, reps: int = 6) -> dict:
+def measure(system: str, reps: int = 6, names: tuple = NAMES) -> dict:
     node = WorkerNode(system)
     per_fn = {}
     try:
-        for fn in NAMES:
+        for fn in names:
             node.deploy(fn)
             node.seed_input(fn)
             node.invoke(fn).result(timeout=60)       # discarded cold start
-        for fn in NAMES:
+        for fn in names:
             acct_before = node.acct.snapshot()
             for _ in range(reps):
                 node.invoke(fn).result(timeout=60)   # serial -> warm reuse
@@ -105,8 +107,23 @@ def run() -> dict:
                 title="Fig 9: boundary crossings "
                       "(paper: exits -53%, wakeups -70%)"))
 
+    # multi-I/O scenarios (SG/PIPE/FAN) under the same protocol: the
+    # handler-driven API's shapes, normalized to the coupled baseline
+    scen = {s: measure(s, reps=4, names=SCENARIO_NAMES)
+            for s in SYSTEMS_ORDER}
+    rows_sc = []
+    for fn in SCENARIO_NAMES:
+        base = scen["baseline"][fn]["warm_s"]
+        rows_sc.append({"fn": fn, "baseline_ms": round(base * 1e3, 1),
+                        **{s: round(scen[s][fn]["warm_s"] / base, 2)
+                           for s in SYSTEMS_ORDER[1:]}})
+    print()
+    print(table(rows_sc, ["fn", "baseline_ms"] + list(SYSTEMS_ORDER[1:]),
+                title="Multi-I/O scenarios: warm latency vs baseline "
+                      "(scatter-gather / pipeline / fan-out)"))
+
     payload = {"fig7": rows7, "fig7_avg_reduction": avg_red,
-               "fig8": rows8, "fig9": rows9}
+               "fig8": rows8, "fig9": rows9, "scenarios": rows_sc}
     save_json("warm_path", payload)
     return payload
 

@@ -23,14 +23,19 @@ Layers (paper section in brackets):
 * `des`         — virtual-time cluster sim for density sweeps (§7.1)
 """
 from repro.core.backend import NexusBackend
-from repro.core.frontend import BaselineClient, GuestContext, NexusClient
+from repro.core.frontend import (BaselineClient, GuestContext,
+                                 HandlerContext, NexusClient, S3Api)
 from repro.core.plan import PhasePlan, SYSTEMS, SystemSpec, compile_plan
 from repro.core.runtime import WorkerNode
 from repro.core.storage import ObjectStore
-from repro.core.workloads import SUITE
+from repro.core.workloads import (ComputeSegment, Get, IOProfile, Put,
+                                  REGISTRY, SCENARIOS, SUITE, Workload)
 
 __all__ = [
     "NexusBackend", "BaselineClient", "GuestContext", "NexusClient",
+    "HandlerContext", "S3Api",
     "PhasePlan", "SYSTEMS", "SystemSpec", "compile_plan",
-    "WorkerNode", "ObjectStore", "SUITE",
+    "WorkerNode", "ObjectStore",
+    "ComputeSegment", "Get", "IOProfile", "Put",
+    "REGISTRY", "SCENARIOS", "SUITE", "Workload",
 ]

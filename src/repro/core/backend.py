@@ -225,14 +225,19 @@ class NexusBackend:
         self.arenas.resolve(tenant, slot)         # isolation check
         ticket = PutTicket(invocation_id)
         self.stats["puts"] += 1
+        # idempotency is per *logical write*: an invocation may make any
+        # number of distinct durable PUTs (fan-out handlers); only a
+        # retry of the same output may dedup.
+        dedup_key = f"{invocation_id}:{out.bucket}/{out.key}"
 
         def _run():
             try:
                 self._check_alive()
                 with self._lock:
-                    done = self._completed_puts.get(invocation_id)
+                    done = self._completed_puts.get(dedup_key)
                 if done is not None:
                     self.stats["dedup_hits"] += 1
+                    slot.release()       # the retry's copy is never sent
                     ticket.future.set_result(done)
                     return
                 self.tokens.authorize(cred, out.bucket, "put")
@@ -242,7 +247,7 @@ class NexusBackend:
                 self.limiter.bucket("s3").throttle(len(view))
                 meta = self.remote.put(out.bucket, out.key, view)
                 with self._lock:
-                    self._completed_puts[invocation_id] = meta.etag
+                    self._completed_puts[dedup_key] = meta.etag
                 slot.release()
                 ticket.future.set_result(meta.etag)
             except BaseException as e:      # noqa: BLE001

@@ -5,8 +5,10 @@ served for minutes — far beyond what real threads can replay in-process,
 so (exactly like the warm/cold microbenchmarks feed the paper's Fig 7/12)
 this simulator executes the *same cost model* in virtual time over a
 cluster of worker nodes. Structure comes from exactly one place: the
-compiled `plan.PhasePlan` for the system variant. The walker in
-`_execute` maps the plan's resource tags onto simulated resources —
+`plan.PhasePlan` compiled from the system variant and each workload's
+declared `IOProfile` (N GETs/segments/PUTs, not a fixed shape). The
+walker in `_execute` maps the plan's resource tags onto simulated
+resources —
 
 * ``guest_core`` / ``backend_worker`` — one of the node's FIFO cores
   (guest vCPU and backend work contend equally); ``backend_worker``
@@ -177,7 +179,8 @@ class DensitySimulator:
                  nodes: int = 4, cores: int = 28, mem_gb: float = 128.0,
                  duration_s: float = 90.0, warmup_s: float = 15.0,
                  mean_rate: float = 1.6, backend_workers: int = 64,
-                 rate_sigma: float = 1.0, max_vms_per_node: int = 280):
+                 rate_sigma: float = 1.0, max_vms_per_node: int = 280,
+                 suite: dict[str, W.Workload] | None = None):
         self.spec: SystemSpec = SYSTEMS[system]
         self.n_functions = n_functions
         self.duration_s = duration_s
@@ -189,25 +192,21 @@ class DensitySimulator:
                               backend_workers)
                       for _ in range(nodes)]
         self.transport = TRANSPORTS[self.spec.transport]
-        # one structural source of truth: the compiled plan per coldness
-        # (+ the plan-derived lookups _execute needs, hoisted off the
-        # per-invocation hot path)
-        self._plans = {cold: compile_plan(self.spec, cold=cold)
-                       for cold in (False, True)}
-        bypass = self.transport.kernel_bypass
-        self._walk = {}
-        for cold, p in self._plans.items():
-            groups = p.backend_groups()
-            self._walk[cold] = (
-                {members[0]: g for g, members in groups.items()},
-                {g: p.slot_release_phase(g, bypass) for g in groups})
+        # one structural source of truth: the plan compiled from each
+        # workload's declared IOProfile, per coldness (+ the
+        # plan-derived lookups _execute needs, hoisted off the
+        # per-invocation hot path). Workloads sharing an I/O shape share
+        # the plan object (compile_plan caches on the shape).
+        self._suite = suite if suite is not None else W.SUITE
+        self._walk: dict[tuple[str, bool], tuple] = {}
         self._durs: dict[tuple[str, bool], dict[str, float]] = {}
 
         # one deployed function = (name, workload); suite cycles round-robin
-        names = list(W.SUITE)
+        names = list(self._suite)
         self.functions = [f"{names[i % len(names)]}#{i}"
                           for i in range(n_functions)]
-        self.workload = {f: W.SUITE[f.split('#')[0]] for f in self.functions}
+        self.workload = {f: self._suite[f.split('#')[0]]
+                         for f in self.functions}
 
         from repro.core.trace import ArrivalSpec, generate_arrivals, sample_rates
         specs = sample_rates(self.functions, seed, mean_rate=mean_rate,
@@ -235,8 +234,23 @@ class DensitySimulator:
         key = (base_name, cold)
         if key not in self._durs:
             self._durs[key] = P.phase_durations(
-                self.spec, W.SUITE[base_name], cold)
+                self.spec, self._suite[base_name], cold)
         return self._durs[key]
+
+    def _plan_walk(self, base_name: str, cold: bool) -> tuple:
+        """(plan, group-head lookup, slot-release lookup) for one
+        workload's compiled plan — the DES's whole structural input."""
+        key = (base_name, cold)
+        if key not in self._walk:
+            p = compile_plan(self.spec, self._suite[base_name].profile,
+                             cold=cold)
+            groups = p.backend_groups()
+            bypass = self.transport.kernel_bypass
+            self._walk[key] = (
+                p,
+                {members[0]: g for g, members in groups.items()},
+                {g: p.slot_release_phase(g, bypass) for g in groups})
+        return self._walk[key]
 
     def unloaded_latency(self, fn: str) -> float:
         """Warm, zero-contention critical path (the SLO denominator) —
@@ -311,11 +325,11 @@ class DensitySimulator:
         interpreter. No per-variant branches: edges, resource tags,
         backend groups, and barriers all come from the plan."""
         fn = inst.fn
-        p = self._plans[cold]
-        durs = self._durations(fn.split("#")[0], cold)
+        base = fn.split("#")[0]
+        p, group_head, slot_release = self._plan_walk(base, cold)
+        durs = self._durations(base, cold)
         node = self.nodes[inst.node]
         loop = self.loop
-        group_head, slot_release = self._walk[cold]
         remaining = {ph.name: len(ph.after) for ph in p.phases}
 
         def finish_response():

@@ -1,4 +1,11 @@
-"""Guest-side clients: the thin Nexus frontend stub vs the coupled SDK.
+"""Guest-side clients: the boto3-compatible surface handlers program to.
+
+`S3Api` is the programming model: every workload is a conventional
+``handler(event, ctx)`` function whose only storage access is
+``ctx.storage`` — an object satisfying this protocol. The runtime
+injects the per-variant implementation; the handler never learns which
+one it got. That is the paper's transparency claim (§4.2) as an
+executed property: the same handler bytes run under every variant.
 
 `NexusClient` mirrors the boto3 S3 surface (`get_object` / `put_object`)
 in ~100 LoC of guest logic: marshal parameters, one control-plane round
@@ -15,6 +22,7 @@ from __future__ import annotations
 
 import threading
 from dataclasses import dataclass, field
+from typing import Protocol, runtime_checkable
 
 from repro.core import fabric as F
 from repro.core import metrics as M
@@ -22,6 +30,36 @@ from repro.core.backend import BackendCrashed, NexusBackend, PrefetchHandle
 from repro.core.hints import InputHint, OutputHint
 from repro.core.storage import RemoteStorage
 from repro.core.streaming import CircularBuffer
+
+
+@runtime_checkable
+class S3Api(Protocol):
+    """The variant-independent storage surface a handler receives.
+
+    ``get_object`` returns at least ``{"Body": <buffer>,
+    "ContentLength": int}``; ``put_object`` returns ``{"ETag": ...}``
+    (``None`` while an asynchronous write is still in flight — the
+    platform, not the handler, gates the response on the ack).
+    """
+
+    def get_object(self, Bucket: str, Key: str) -> dict: ...
+
+    def put_object(self, Bucket: str, Key: str, Body) -> dict: ...
+
+
+@dataclass
+class HandlerContext:
+    """The FaaS ``context`` argument: everything the platform injects.
+
+    ``storage`` is the only I/O capability a handler holds — the same
+    `S3Api` surface under every system variant.
+    """
+
+    storage: S3Api
+    invocation_id: str = ""
+    function_name: str = ""
+    cold_start: bool = False
+    state: dict = field(default_factory=dict)
 
 
 @dataclass
@@ -39,7 +77,7 @@ class NexusClient:
     """boto3-compatible frontend stub (paper: 645 LoC Python)."""
 
     def __init__(self, ctx: GuestContext, backend_ref, acct: M.CycleAccount,
-                 *, max_retries: int = 3):
+                 *, max_retries: int = 3, ack_timeout_s: float = 30.0):
         self._ctx = ctx
         # `backend_ref` is a callable returning the *current* backend —
         # after a crash the supervisor swaps in a fresh one and the stub
@@ -47,6 +85,9 @@ class NexusClient:
         self._backend_ref = backend_ref
         self._acct = acct
         self._max_retries = max_retries
+        #: how long a blocking PUT waits for the durable ack before the
+        #: invocation is failed (overridable per WorkerNode).
+        self.ack_timeout_s = ack_timeout_s
         self.pending_puts: list = []
 
     @property
@@ -76,6 +117,7 @@ class NexusClient:
         pf = self._ctx.prefetch
         if (pf is not None and pf.hint.bucket == Bucket
                 and pf.hint.key == Key):
+            self._ctx.prefetch = None            # single-use: consumed
             slot = pf.wait()
             self._charge_stub_call("aws", 0)     # pointer return: no bytes move
             return {"Body": slot.view(), "ContentLength": slot.used,
@@ -88,11 +130,15 @@ class NexusClient:
 
     def get_object_streaming(self, Bucket: str, Key: str,
                              chunk: int = 256 * 1024) -> CircularBuffer:
-        """Opaque-payload fallback: bounded ring, no prefetch overlap."""
+        """Opaque-payload fallback: bounded ring, no prefetch overlap.
+
+        The stub's per-MB cycles can only be charged once the size is
+        known — the ring's close hook fires after the backend pumped
+        the last byte, so the full streamed count is billed (not 0)."""
         buf = CircularBuffer(capacity=max(chunk * 4, 1 << 20))
+        buf.on_close = lambda b: self._charge_stub_call("aws", b.total_in)
         self._retry(lambda: self._backend.fetch_stream(
             self._ctx.tenant, self._ctx.cred_handle, Bucket, Key, buf, chunk))
-        self._charge_stub_call("aws", 0)
         return buf
 
     def put_object(self, Bucket: str, Key: str, Body, *,
@@ -112,7 +158,7 @@ class NexusClient:
         ticket = self._retry(_submit)
         self._charge_stub_call("aws", len(Body))
         if wait:
-            return ticket.future.result(timeout=30.0)
+            return ticket.future.result(timeout=self.ack_timeout_s)
         self.pending_puts.append(ticket)
         return ticket
 

@@ -88,26 +88,24 @@ class FunctionInstance:
         self.state = "warm"
         self._busy.release()
 
-    def compute(self, view: memoryview) -> bytes:
-        """Run the user handler: real bytes + modeled vCPU occupancy."""
-        t0 = time.monotonic()
-        out = self.workload.handler(view)
-        real = time.monotonic() - t0
-        # modeled vCPU time at the paper's 2.1 GHz, scaled by the spec's
-        # handler cost class (e.g. the wasm variant's C++ ports).
-        mcycles = self.workload.compute_mcycles * self.spec.compute_scale
-        modeled = mcycles / F.GHZ_MCYC_PER_S
-        remaining = modeled - real
+    def account_compute(self, mcycles: float, real_s: float) -> None:
+        """Close one handler compute segment: the handler's real work
+        between two I/O calls took `real_s` on this thread; pad it up to
+        the modeled vCPU time at the paper's 2.1 GHz (scaled by the
+        spec's handler cost class, e.g. the wasm variant's C++ ports)
+        and account cycles + busy-guest crossings."""
+        scaled = mcycles * self.spec.compute_scale
+        modeled = scaled / F.GHZ_MCYC_PER_S
+        remaining = modeled - real_s
         if remaining > 0:
             self._sleep(remaining)
-        self.acct.charge(M.GUEST_USER, mcycles)
+        self.acct.charge(M.GUEST_USER, scaled)
         # busy-guest exits (syscalls/GC/timers) that offloading can't remove
         if self.spec.virtualized:
             exits = max(int(modeled * F.COMPUTE_EXITS_PER_SEC), 1)
             self.acct.cross(M.VM_EXIT, exits)
             self.acct.cross(M.VCPU_WAKEUP,
                             int(exits * F.COMPUTE_WAKEUPS_PER_EXIT))
-        return out
 
 
 class InstancePool:

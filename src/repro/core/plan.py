@@ -3,31 +3,32 @@
 The paper's core claim (§4.2, §7) is that Nexus's wins come from
 *structural* differences in where invocation phases run and what
 overlaps. This module makes those structures **data**: a `SystemSpec`
-compiles into a `PhasePlan` — a DAG of phases with resource tags and
-release/response barriers — and the two executors merely *interpret*
-that graph:
+plus a workload's declared `IOProfile` compile into a `PhasePlan` — a
+DAG of phases with resource tags and release/response barriers — and
+the two executors merely *interpret* that graph:
 
 * `runtime.WorkerNode` maps phases onto real threads and backend calls
-  (real bytes, real arenas, real crash injection);
+  (real bytes, real arenas, real crash injection) — the handler issues
+  its own client calls and the plan walker *observes* them;
 * `des.DensitySimulator` walks the identical graph in virtual time with
   `CorePool` contention.
 
 "Prefetch overlaps restore" and "async writeback releases the VM before
 the ack" are edges and barriers here — not control flow in two
-executors. Adding a system variant means adding a `SystemSpec` entry,
-nothing else.
+executors. Adding a system variant means adding a `SystemSpec` entry;
+adding an I/O shape means declaring an `IOProfile`.
 
-Phases (paper §4.2 anatomy of an invocation):
+Phases (paper §4.2 anatomy of an invocation), per-op indexed:
 
-    restore    — snapshot restore / sandbox bootstrap (0 when warm)
-    rpc_in     — invocation RPC termination (guest gRPC vs backend-native)
-    connect    — per-VM storage connection setup (cold only; 'Add Server')
-    fetch_cpu  — input fabric cycles (SDK + stub + transport CPU)
-    fetch_net  — input wire time
-    compute    — user handler on the instance vCPU
-    write_cpu  — output fabric cycles
-    write_net  — output wire time
-    reply      — response RPC egress
+    restore       — snapshot restore / sandbox bootstrap (0 when warm)
+    rpc_in        — invocation RPC termination (guest gRPC vs native)
+    connect       — per-VM storage connection setup (cold; 'Add Server')
+    fetch_cpu[i]  — input fabric cycles for GET i (SDK + stub + transport)
+    fetch_net[i]  — GET i wire time
+    compute[j]    — handler compute segment j on the instance vCPU
+    write_cpu[k]  — output fabric cycles for PUT k
+    write_net[k]  — PUT k wire time
+    reply         — response RPC egress
 
 Resource tags say what a phase consumes:
 
@@ -37,21 +38,27 @@ Resource tags say what a phase consumes:
     wire           — pure latency (network / handshake wait)
     none           — pure latency off every resource (scheduler hops)
 
-Barriers:
+Structural rules (each a paper mechanism, applied as data):
 
-    release_after — completing this phase returns the instance to the
-                    warm pool (early release under async writeback §4.2.5)
-    respond_after — completing this phase resolves the caller's future
-                    (always gated on the durable write, at-least-once)
+* only the *first* hinted GET prefetches at ingress (§4.2.2): its
+  fetch chain omits the restore edge; every other I/O op follows the
+  handler's program order through the guest;
+* a synchronous PUT blocks the guest until the ack; under async
+  writeback the guest continues, the write chain floats, and the
+  release barrier moves to the last compute segment (§4.2.5) while the
+  response still gates on *every* durable PUT;
+* cold starts on an offloaded fabric first establish the new VM's
+  storage connections — serial with the first fetch, overlapped with
+  the restore (§4.2.4, Fig 12 'Add Server').
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, field
 from functools import lru_cache
 
 from repro.core import fabric as F
 from repro.core.transport import TRANSPORTS
-from repro.core.workloads import Workload
+from repro.core.workloads import IOProfile, Workload
 
 MB = 1024 * 1024
 
@@ -64,15 +71,18 @@ NONE = "none"
 
 RESOURCES = (GUEST_CORE, BACKEND_WORKER, WIRE, NONE)
 
-#: canonical phase -> breakdown group (what the threaded runtime reports;
-#: the *_cpu/*_net split only exists where time is virtual).
-PHASE_GROUP = {
-    "restore": "restore", "rpc_in": "rpc_in", "connect": "connect",
-    "fetch_cpu": "fetch", "fetch_net": "fetch",
-    "compute": "compute",
-    "write_cpu": "write", "write_net": "write",
-    "reply": "reply",
-}
+#: canonical phase base -> breakdown group base (the *_cpu/*_net split
+#: only exists where time is virtual; the threaded runtime reports at
+#: group granularity).
+_GROUP_BASE = {"fetch_cpu": "fetch", "fetch_net": "fetch",
+               "write_cpu": "write", "write_net": "write"}
+
+
+def phase_group(name: str) -> str:
+    """Breakdown group of a phase: ``fetch_cpu[2]`` -> ``fetch[2]``."""
+    base, bracket, idx = name.partition("[")
+    g = _GROUP_BASE.get(base, base)
+    return g + bracket + idx
 
 
 # -------------------------------------------------------------- system spec
@@ -150,7 +160,7 @@ class Phase:
 
 @dataclass(frozen=True)
 class PhasePlan:
-    """Compiled, validated phase DAG for one (SystemSpec, cold?) pair."""
+    """Compiled, validated phase DAG for one (SystemSpec, shape, cold)."""
 
     system: str
     cold: bool
@@ -180,6 +190,17 @@ class PhasePlan:
         """Deterministic topological order (declaration order is one)."""
         return self.phase_names
 
+    def ancestors(self, name: str) -> set[str]:
+        """All phases `name` transitively depends on."""
+        out: set[str] = set()
+        stack = list(self.phase(name).after)
+        while stack:
+            d = stack.pop()
+            if d not in out:
+                out.add(d)
+                stack.extend(self.phase(d).after)
+        return out
+
     def backend_groups(self) -> dict[str, tuple[str, ...]]:
         """group -> its phases in topological order."""
         out: dict[str, list[str]] = {}
@@ -207,7 +228,7 @@ class PhasePlan:
         The threaded runtime executes/reports at this granularity."""
         out: list[tuple[str, list[str]]] = []
         for p in self.phases:
-            g = PHASE_GROUP[p.name]
+            g = phase_group(p.name)
             if out and out[-1][0] == g:
                 out[-1][1].append(p.name)
             else:
@@ -232,11 +253,11 @@ class PhasePlan:
 
     @property
     def release_group(self) -> str:
-        return PHASE_GROUP[self.release_after]
+        return phase_group(self.release_after)
 
     @property
     def respond_group(self) -> str:
-        return PHASE_GROUP[self.respond_after]
+        return phase_group(self.respond_after)
 
     # ----------------------------------------------------------- analysis
 
@@ -269,72 +290,125 @@ class PhasePlan:
             if barrier not in names:
                 raise ValueError(f"{self.system}: barrier on unknown "
                                  f"phase {barrier!r}")
+        seen_groups = set()
+        for g, _ in self.groups():
+            if g in seen_groups:          # groups must be contiguous runs
+                raise ValueError(f"{self.system}: breakdown group {g!r} "
+                                 f"is not contiguous")
+            seen_groups.add(g)
 
 
 # ---------------------------------------------------------------- compiler
 
-def compile_plan(spec: SystemSpec, cold: bool = True) -> PhasePlan:
-    """Compile a SystemSpec into its PhasePlan (cached: both executors
-    interpret the same object)."""
-    return _compile_plan(spec, bool(cold))
+#: the classic FaaS shape, used when no profile is supplied.
+DEFAULT_PROFILE = IOProfile.single(1.0, 1.0, 50.0)
+
+
+def compile_plan(spec: SystemSpec, profile: IOProfile | None = None,
+                 cold: bool = True) -> PhasePlan:
+    """Compile (SystemSpec, IOProfile, cold) into a PhasePlan.
+
+    Cached on the profile's size-free *shape*: every workload with the
+    same op structure — and both executors — interpret the same object.
+    """
+    shape = (profile if profile is not None else DEFAULT_PROFILE).shape
+    return _compile_plan(spec, shape, bool(cold))
+
+
+def _reduced(deps: set[str], anc: dict[str, set[str]]) -> tuple[str, ...]:
+    """Transitive reduction of a dep set: drop edges implied by others
+    (keeps the golden graphs minimal and the group DAG readable)."""
+    keep = [d for d in deps
+            if not any(d in anc[e] for e in deps if e != d)]
+    return tuple(sorted(keep))
 
 
 @lru_cache(maxsize=None)
-def _compile_plan(spec: SystemSpec, cold: bool) -> PhasePlan:
-    """Compile a SystemSpec into its PhasePlan.
-
-    Structural rules (each a paper mechanism, applied as data):
-    * in-guest RPC termination needs the VM up (restore -> rpc_in);
-      backend-native termination does not (§4.2.1);
-    * cold starts on an offloaded fabric first establish the new VM's
-      storage connections — serial with the fetch, overlapped with the
-      restore (§4.2.4, Fig 12 'Add Server');
-    * without prefetch the *guest* issues the fetch (restore -> fetch);
-      with hinted prefetch the fetch chain starts at ingress and joins
-      restore only at compute (§4.2.2);
-    * async writeback moves the release barrier from reply to compute
-      while the response still gates on the durable write (§4.2.5).
-    """
+def _compile_plan(spec: SystemSpec, shape: tuple, cold: bool) -> PhasePlan:
     if (spec.prefetch or spec.async_writeback) and not spec.offload_sdk:
         raise ValueError(
             f"{spec.name}: prefetch/async writeback are backend "
             f"mechanisms — they require offload_sdk=True")
     has_connect = cold and spec.offload_sdk
-    rpc_deps = ("restore",) if not spec.offload_rpc else ()
-
-    fetch_deps = ["rpc_in"]
-    if has_connect:
-        fetch_deps.append("connect")
-    if not spec.prefetch:
-        fetch_deps.append("restore")
-
     offl = spec.offload_sdk
-    phases = [
-        Phase("restore", GUEST_CORE),
-        Phase("rpc_in", GUEST_CORE if spec.virtualized else NONE,
-              after=rpc_deps),
-    ]
+
+    phases: list[Phase] = []
+    anc: dict[str, set[str]] = {}
+
+    def add(name, resource, deps=(), group=None):
+        after = _reduced(set(deps), anc)
+        anc[name] = set(after).union(*(anc[d] for d in after))
+        phases.append(Phase(name, resource, after=after,
+                            backend_group=group))
+
+    add("restore", GUEST_CORE)
+    add("rpc_in", GUEST_CORE if spec.virtualized else NONE,
+        ("restore",) if not spec.offload_rpc else ())
     if has_connect:
-        phases.append(Phase("connect", WIRE, after=("rpc_in",)))
-    phases += [
-        Phase("fetch_cpu", BACKEND_WORKER if offl else GUEST_CORE,
-              after=tuple(fetch_deps),
-              backend_group="fetch" if offl else None),
-        Phase("fetch_net", WIRE, after=("fetch_cpu",),
-              backend_group="fetch" if offl else None),
-        Phase("compute", GUEST_CORE, after=("fetch_net", "restore")),
-        Phase("write_cpu", BACKEND_WORKER if offl else GUEST_CORE,
-              after=("compute",),
-              backend_group="write" if offl else None),
-        Phase("write_net", WIRE, after=("write_cpu",),
-              backend_group="write" if offl else None),
-        Phase("reply", GUEST_CORE if spec.virtualized else NONE,
-              after=("write_net",)),
-    ]
+        add("connect", WIRE, ("rpc_in",))
+
+    first_storage = next((i for i, op in enumerate(shape)
+                          if op[0] in ("get", "put")), None)
+    #: the guest's program counter: what the next guest-issued phase
+    #: must wait on (rpc_in delivered the event; restore joins per-op).
+    prev: set[str] = {"rpc_in"}
+    gi = ci = pi = 0
+    writes: list[str] = []
+    for oi, op in enumerate(shape):
+        first_conn = ("connect",) if has_connect and oi == first_storage \
+            else ()
+        if op[0] == "get":
+            cpu, net = f"fetch_cpu[{gi}]", f"fetch_net[{gi}]"
+            grp = f"fetch[{gi}]" if offl else None
+            if spec.prefetch and op[1]:
+                # hinted ingress prefetch: the fetch chain starts before
+                # the VM is up and joins the guest at the next phase
+                add(cpu, BACKEND_WORKER if offl else GUEST_CORE,
+                    {"rpc_in", *first_conn}, grp)
+                add(net, WIRE, (cpu,), grp)
+                prev = prev | {net, "restore"}
+            else:
+                add(cpu, BACKEND_WORKER if offl else GUEST_CORE,
+                    prev | {"restore", *first_conn}, grp)
+                add(net, WIRE, (cpu,), grp)
+                prev = {net}               # the guest blocks on the data
+            gi += 1
+        elif op[0] == "compute":
+            name = f"compute[{ci}]"
+            add(name, GUEST_CORE, prev | {"restore"})
+            prev = {name}
+            ci += 1
+        else:                              # put
+            cpu, net = f"write_cpu[{pi}]", f"write_net[{pi}]"
+            grp = f"write[{pi}]" if offl else None
+            add(cpu, BACKEND_WORKER if offl else GUEST_CORE,
+                prev | {"restore", *first_conn}, grp)
+            add(net, WIRE, (cpu,), grp)
+            writes.append(net)
+            if not spec.async_writeback:
+                prev = {net}               # the guest blocks on the ack
+            pi += 1
+
+    # the response gates on the guest finishing AND every durable PUT
+    add("reply", GUEST_CORE if spec.virtualized else NONE,
+        prev | set(writes))
+    # async writeback releases the instance at the guest's FINAL program
+    # point (§4.2.5) — the last phase the guest thread blocks on, which
+    # is the last compute segment only when no guest-blocking I/O
+    # follows it. The release phase must postdate the restore (the
+    # instance must exist to be released); profiles whose final guest
+    # op precedes that join release at the reply like sync variants.
+    release = "reply"
+    if spec.async_writeback:
+        order = {ph.name: i for i, ph in enumerate(phases)}
+        cands = [d for d in prev if d not in ("restore", "rpc_in")]
+        if cands:
+            last = max(cands, key=order.__getitem__)
+            if "restore" in anc[last]:
+                release = last
     return PhasePlan(
         system=spec.name, cold=cold, phases=tuple(phases),
-        release_after="compute" if spec.async_writeback else "reply",
-        respond_after="reply")
+        release_after=release, respond_after="reply")
 
 
 # -------------------------------------------------------------- cost model
@@ -371,29 +445,31 @@ def _rpc_cpu_s(spec: SystemSpec, nbytes: int = 4096) -> float:
 
 def phase_durations(spec: SystemSpec, w: Workload,
                     cold: bool) -> dict[str, float]:
-    """Modeled duration (seconds) of every phase in `compile_plan(spec,
-    cold)` — the single cost model the density simulator executes and
-    the SLO denominator is derived from."""
+    """Modeled duration (seconds) of every phase in
+    `compile_plan(spec, w.profile, cold)` — the single cost model the
+    density simulator executes and the SLO denominator derives from."""
     tr = TRANSPORTS[spec.transport]
-    in_b, out_b = w.input_bytes, w.output_bytes
     mem = F.instance_memory(w.extra_libs_mb, spec.memory_variant)
     d = {
         "restore": (F.restore_seconds_components(mem) if cold else 0.0),
         "rpc_in": spec.dispatch_s + _rpc_cpu_s(spec),
-        "fetch_cpu": _op_cpu_s(spec, in_b),
-        "fetch_net": tr.transfer_latency(in_b),
-        "compute": _cpu_s(w.compute_mcycles * spec.compute_scale),
-        "write_cpu": _op_cpu_s(spec, out_b),
-        "write_net": tr.transfer_latency(out_b),
         "reply": _rpc_cpu_s(spec, 1024),
     }
     if cold and spec.offload_sdk:
         d["connect"] = tr.setup_latency_s
+    for i, g in enumerate(w.profile.gets):
+        d[f"fetch_cpu[{i}]"] = _op_cpu_s(spec, g.size_bytes)
+        d[f"fetch_net[{i}]"] = tr.transfer_latency(g.size_bytes)
+    for j, seg in enumerate(w.profile.segments):
+        d[f"compute[{j}]"] = _cpu_s(seg.mcycles * spec.compute_scale)
+    for k, p in enumerate(w.profile.puts):
+        d[f"write_cpu[{k}]"] = _op_cpu_s(spec, p.size_bytes)
+        d[f"write_net[{k}]"] = tr.transfer_latency(p.size_bytes)
     return d
 
 
 def unloaded_latency(spec: SystemSpec, w: Workload) -> float:
     """Warm, zero-contention critical path (the paper's SLO denominator)
-    — by construction the plan's critical path with restore = 0."""
-    return compile_plan(spec, cold=False).critical_path(
+    — by construction the warm plan's critical path."""
+    return compile_plan(spec, w.profile, cold=False).critical_path(
         phase_durations(spec, w, cold=False))

@@ -9,12 +9,18 @@ constants (slept); cycles/crossings are accounted per §3's calibration.
 ``byte_scale`` shrinks *real* payload bytes to keep Python hashing off
 the critical path while hints/costs use nominal sizes.
 
-There is deliberately NO per-variant control flow here: phase ordering,
-overlap, and the release/response barriers all come from
-`plan.compile_plan(spec)`. Each breakdown group maps to one *action*
-(how the phase does its work — in-guest SDK vs backend call vs sandbox
-hop — selected by `SystemSpec` capability fields); *when* an action may
-run is the plan's dependency edges, walked by `_PlanRun`.
+The guest is a conventional FaaS function: ``handler(event, ctx)``
+running on its own thread, issuing its own ``get_object``/``put_object``
+calls through the injected ``ctx.storage`` (`frontend.S3Api`). The
+plan walker does not perform the handler's I/O — it *observes* it:
+`_GuestRun` intercepts every client call, matches it against the
+workload's declared `IOProfile`, and completes the corresponding
+fetch/compute/write group; platform phases (restore, rpc_in, connect,
+reply, the ingress prefetch of the first hinted GET, async-writeback
+ack gating) remain walker actions. There is deliberately NO
+per-variant control flow here: phase ordering, overlap, and the
+release/response barriers all come from
+`plan.compile_plan(spec, profile)`.
 """
 from __future__ import annotations
 
@@ -23,24 +29,25 @@ import threading
 import time
 import uuid
 from concurrent.futures import Future, ThreadPoolExecutor
+from dataclasses import dataclass, field
+from typing import Any
 
 from repro.core import fabric as F
 from repro.core import metrics as M
 from repro.core.backend import NexusBackend
-from repro.core.frontend import BaselineClient, GuestContext, NexusClient
+from repro.core.frontend import (BaselineClient, GuestContext,
+                                 HandlerContext, NexusClient)
 from repro.core.hints import extract_hints, make_event
 from repro.core.lifecycle import InstancePool
 from repro.core.plan import SYSTEMS, SystemSpec, PhasePlan, compile_plan
 from repro.core.storage import FaultPlan, ObjectStore, RemoteStorage
 from repro.core.supervisor import Supervisor
-from repro.core.workloads import SUITE, Workload
+from repro.core.workloads import (ComputeSegment, Get, IOProfile, Put,
+                                  REGISTRY, Workload)
 
 __all__ = ["SYSTEMS", "SystemSpec", "WorkerNode", "InvocationResult"]
 
 MB = 1024 * 1024
-
-
-from dataclasses import dataclass, field, replace
 
 
 @dataclass
@@ -50,28 +57,27 @@ class InvocationResult:
     cold: bool
     latency_s: float
     breakdown: dict[str, float] = field(default_factory=dict)
-    output_etag: int | None = None
+    output_etag: int | None = None            # first durable PUT
+    output_etags: tuple = ()                  # every durable PUT, in order
+    response: Any = None                      # the handler's return value
 
 
 class _Invocation:
-    """Mutable state one invocation's phase actions thread through."""
+    """Mutable state one invocation threads through the walker + guest."""
 
     def __init__(self, w: Workload, inv_id: str, event: dict,
                  cold_expected: bool, t0: float):
         self.w = w
         self.inv_id = inv_id
         self.event = event
-        self.inp, self.out = extract_hints(event)
+        self.inputs, self.outputs = extract_hints(event)
         self.cold_expected = cold_expected
         self.t0 = t0
         self.inst = None
         self.cold = False
         self.client = None
         self.gctx: GuestContext | None = None
-        self.body = None
-        self.slot = None
-        self.result: bytes | None = None
-        self.etag: int | None = None
+        self.guest: "_GuestRun | None" = None
         self.vm_busy: float | None = None
         self._rel_lock = threading.Lock()
         self._released = False
@@ -86,6 +92,200 @@ class _Invocation:
         self.inst.release()
 
 
+class _GuestRun:
+    """The guest side of one invocation: runs ``handler(event, ctx)`` on
+    a real thread and is itself the `S3Api` the handler receives.
+
+    Interception contract: the handler's k-th GET/PUT call is matched
+    against the k-th `Get`/`Put` of the (effective) `IOProfile`; wall
+    time between I/O calls is attributed to the `ComputeSegment`s
+    declared between them (padded to the modeled vCPU time). Each
+    matched op fires a completion event the plan walker's corresponding
+    group action waits on — the walker observes, it does not perform.
+    Divergence between handler and profile is an invocation error.
+    """
+
+    def __init__(self, node: "WorkerNode", ctx: _Invocation,
+                 profile: IOProfile, stall_timeout_s: float):
+        self._node = node
+        self._ctx = ctx
+        self._ops = profile.ops
+        self._stall = stall_timeout_s
+        self._oi = 0                 # program counter into the profile
+        self._gi = self._pi = self._ci = 0
+        self._seg_t0: float | None = None
+        self._slots: list = []
+        self._written: set[tuple[str, str]] = set()
+        gets = profile.gets
+        #: get-ordinal served by the ingress prefetch (first hinted GET)
+        self.prefetch_op = (0 if (node.spec.prefetch and gets
+                                  and gets[0].prefetchable) else None)
+        self._opaque = {i: not g.prefetchable for i, g in enumerate(gets)}
+        self.tickets: dict[int, Any] = {}     # async put ordinal -> ticket
+        self.etags: dict[int, int] = {}
+        self.error: BaseException | None = None
+        self.handler_result: Any = None
+        self._events: dict[str, threading.Event] = {}
+        for i in range(len(gets)):
+            self._events[f"fetch[{i}]"] = threading.Event()
+        for j in range(len(profile.segments)):
+            self._events[f"compute[{j}]"] = threading.Event()
+        for k in range(len(profile.puts)):
+            self._events[f"write[{k}]"] = threading.Event()
+        self._prefetch_ready = threading.Event()
+        self._started = False
+        self._start_lock = threading.Lock()
+
+    # ---------------------------------------------------- walker interface
+
+    def start(self) -> None:
+        """Launch the handler thread (once the VM is up and the event
+        delivered — the walker fires this on restore ∧ rpc_in)."""
+        with self._start_lock:
+            if self._started:
+                return
+            self._started = True
+        threading.Thread(target=self._main, daemon=True).start()
+
+    def set_prefetch(self, handle) -> None:
+        """The walker's ingress-prefetch action hands the guest stub its
+        in-flight handle; the first GET then returns the arena view."""
+        self._ctx.gctx.prefetch = handle
+        self._prefetch_ready.set()
+
+    def await_group(self, group: str) -> None:
+        """Block until the handler completes `group`'s op (the walker's
+        observation point for guest-driven fetch/compute/write groups)."""
+        if not self._events[group].wait(self._stall):
+            raise TimeoutError(
+                f"{self._ctx.w.name}: guest never completed {group}")
+        if self.error is not None:
+            raise self.error
+
+    # --------------------------------------------------------- guest main
+
+    def _main(self) -> None:
+        inv = self._ctx
+        try:
+            self._seg_t0 = time.monotonic()
+            hctx = HandlerContext(
+                storage=self, invocation_id=inv.inv_id,
+                function_name=inv.w.name, cold_start=inv.cold)
+            self.handler_result = inv.w.handler(inv.event, hctx)
+            self._close_segments()
+            if self._oi != len(self._ops):
+                raise RuntimeError(
+                    f"{inv.w.name}: handler returned with declared I/O "
+                    f"unperformed (op {self._oi} of {len(self._ops)} "
+                    f"in its IOProfile)")
+        except BaseException as e:           # noqa: BLE001 — propagated
+            self.error = e
+        finally:
+            for slot in self._slots:
+                try:
+                    slot.release()
+                except Exception:            # noqa: BLE001
+                    pass
+            for ev in self._events.values():
+                ev.set()                     # wake the walker; it re-raises
+
+    # ----------------------------------------------------- S3Api surface
+
+    def get_object(self, Bucket: str, Key: str) -> dict:
+        self._close_segments()
+        i = self._expect(Get)
+        inv, spec = self._ctx, self._node.spec
+        if spec.coupled:
+            obj = inv.client.get_object(Bucket=Bucket, Key=Key)
+        elif i == self.prefetch_op:
+            # the walker started the hinted prefetch at ingress; wait for
+            # the handle, then take the zero-copy fast path (§4.2.4)
+            if not self._prefetch_ready.wait(self._stall):
+                raise TimeoutError(
+                    f"{inv.w.name}: ingress prefetch never started")
+            obj = inv.client.get_object(Bucket=Bucket, Key=Key)
+        elif self._opaque.get(i, True):
+            # size-opaque inputs use the streaming fallback (§4.2.3):
+            # no exactly-sized region can be pre-mapped
+            buf = inv.client.get_object_streaming(Bucket=Bucket, Key=Key)
+            data = buf.read_all()
+            obj = {"Body": memoryview(data), "ContentLength": len(data)}
+        else:
+            obj = inv.client.get_object(Bucket=Bucket, Key=Key)
+        slot = obj.pop("_slot", None)
+        if slot is not None:
+            self._slots.append(slot)
+        self._events[f"fetch[{i}]"].set()
+        self._seg_t0 = time.monotonic()
+        return obj
+
+    def put_object(self, Bucket: str, Key: str, Body) -> dict:
+        self._close_segments()
+        k = self._expect(Put)
+        inv, node = self._ctx, self._node
+        # two durable writes to one key in a single invocation have no
+        # defined order once write chains float (async writeback) — and
+        # the backend's per-logical-write retry dedup would silently
+        # drop the second. Reject, variant-independently.
+        if (Bucket, Key) in self._written:
+            raise RuntimeError(
+                f"{inv.w.name}: handler wrote {Bucket}/{Key} twice in "
+                f"one invocation — duplicate durable PUTs are unordered "
+                f"under async writeback")
+        self._written.add((Bucket, Key))
+        # handlers emit nominal-size outputs; the platform stores the
+        # byte-scaled prefix while every cost model charges full size
+        real = bytes(memoryview(Body)[:max(int(len(Body) * node.byte_scale),
+                                           1)])
+        etag = None
+        if node.spec.coupled:
+            etag = inv.client.put_object(Bucket=Bucket, Key=Key,
+                                         Body=real).etag
+            self.etags[k] = etag
+        elif node.spec.async_writeback:
+            # hand off and continue; the walker's write action gates the
+            # response on the ack (§4.2.5)
+            self.tickets[k] = inv.client.put_object(
+                Bucket=Bucket, Key=Key, Body=real, wait=False)
+        else:
+            etag = inv.client.put_object(Bucket=Bucket, Key=Key, Body=real,
+                                         wait=True)
+            self.etags[k] = etag
+        self._events[f"write[{k}]"].set()
+        self._seg_t0 = time.monotonic()
+        return {"ETag": etag}
+
+    # ------------------------------------------------------------ matching
+
+    def _close_segments(self) -> None:
+        """Attribute handler wall time since the last I/O call to the
+        compute segments declared at the current profile position."""
+        while (self._oi < len(self._ops)
+               and isinstance(self._ops[self._oi], ComputeSegment)):
+            seg = self._ops[self._oi]
+            real = time.monotonic() - self._seg_t0
+            self._ctx.inst.account_compute(seg.mcycles, real)
+            self._seg_t0 = time.monotonic()
+            self._events[f"compute[{self._ci}]"].set()
+            self._ci += 1
+            self._oi += 1
+
+    def _expect(self, kind) -> int:
+        if (self._oi >= len(self._ops)
+                or not isinstance(self._ops[self._oi], kind)):
+            declared = (type(self._ops[self._oi]).__name__
+                        if self._oi < len(self._ops) else "end-of-profile")
+            raise RuntimeError(
+                f"{self._ctx.w.name}: handler issued {kind.__name__} at "
+                f"op {self._oi} but its IOProfile declares {declared}")
+        self._oi += 1
+        if kind is Get:
+            self._gi += 1
+            return self._gi - 1
+        self._pi += 1
+        return self._pi - 1
+
+
 class _PlanRun:
     """Walk one compiled plan's breakdown groups on real threads.
 
@@ -94,10 +294,12 @@ class _PlanRun:
     completion hooks. Per-group wall time is recorded as the breakdown.
     """
 
-    def __init__(self, plan: PhasePlan, actions: dict, ctx: _Invocation):
+    def __init__(self, plan: PhasePlan, actions: dict, ctx: _Invocation,
+                 stall_timeout_s: float = 120.0):
         self._plan = plan
         self._actions = actions
         self._ctx = ctx
+        self._stall = stall_timeout_s
         self._deps = plan.group_deps()
         self._order = plan.group_names()
         self._hooks: dict[str, callable] = {}
@@ -118,7 +320,7 @@ class _PlanRun:
             threading.Thread(target=self._chain, args=(g,),
                              daemon=True).start()
         self._chain(roots[0])
-        if not self._finished.wait(timeout=120.0):
+        if not self._finished.wait(timeout=self._stall):
             raise TimeoutError(
                 f"plan run stalled ({self._plan.system}): "
                 f"done={sorted(self._done)} of {self._order}")
@@ -168,38 +370,36 @@ class _PlanRun:
 
 
 class WorkerNode:
-    """One worker node running a system variant over the workload suite."""
+    """One worker node running a system variant over deployed workloads."""
 
     def __init__(self, system: str, *, store: ObjectStore | None = None,
                  byte_scale: float = 1 / 32, workers: int = 32,
                  faults: FaultPlan | None = None,
                  hedge_after_s: float | None = None,
-                 max_instances_per_fn: int = 64):
+                 max_instances_per_fn: int = 64,
+                 writeback_ack_timeout_s: float = 30.0,
+                 plan_stall_timeout_s: float = 120.0):
         self.spec = SYSTEMS[system]
         self.acct = M.CycleAccount()
         self.latency = M.LatencyTrace()
         self.byte_scale = byte_scale
+        #: deadline for a durable-write ack to resolve (blocking PUTs and
+        #: the async-writeback response gate alike)
+        self.writeback_ack_timeout_s = writeback_ack_timeout_s
+        #: upper bound on any one plan walk / guest observation wait
+        self.plan_stall_timeout_s = plan_stall_timeout_s
         self.store = store if store is not None else ObjectStore()
         self.remote = RemoteStorage(
             self.store, self.spec.transport, self.acct,
             hedge_after_s=hedge_after_s, faults=faults,
             cost_scale=1.0 / byte_scale)
         self._pools: dict[str, InstancePool] = {}
+        self._workloads: dict[str, Workload] = {}
         self._creds: dict[str, str] = {}
         self._ingress = ThreadPoolExecutor(max_workers=workers,
                                            thread_name_prefix="ingress")
         self._inv_counter = itertools.count()
         self._max_instances = max_instances_per_fn
-        #: breakdown-group name -> action; *structure* lives in the plan.
-        self._actions = {
-            "restore": self._act_restore,
-            "rpc_in": self._act_rpc_in,
-            "connect": self._act_connect,
-            "fetch": self._act_fetch,
-            "compute": self._act_compute,
-            "write": self._act_write,
-            "reply": self._act_reply,
-        }
 
         if not self.spec.coupled:
             self.supervisor = Supervisor(self._make_backend)
@@ -225,21 +425,33 @@ class WorkerNode:
     def backend(self) -> NexusBackend | None:
         return self.supervisor.backend if self.supervisor else None
 
-    def deploy(self, fn_name: str) -> None:
-        w = SUITE[fn_name]
-        self._pools[fn_name] = InstancePool(
+    def deploy(self, fn: str | Workload) -> None:
+        """Deploy a workload by registry name or as a `Workload` value
+        (a custom handler + IOProfile — the programming-model surface)."""
+        w = fn if isinstance(fn, Workload) else REGISTRY[fn]
+        self._workloads[w.name] = w
+        self._pools[w.name] = InstancePool(
             w, self.spec, self.acct, max_instances=self._max_instances)
         if self.supervisor:
-            self._creds[fn_name] = self.backend.register_function(
-                fn_name, {"in", "out"})
+            self._creds[w.name] = self.backend.register_function(
+                w.name, {"in", "out"})
 
-    def seed_input(self, fn_name: str, key: str | None = None) -> str:
-        """Stage the function's nominal input object in remote storage."""
-        w = SUITE[fn_name]
-        key = key or f"{fn_name}-input"
-        real = max(int(w.input_mb * MB * self.byte_scale), 1024)
-        self.store.put("in", key, bytes(bytearray(real)))
-        return key
+    @staticmethod
+    def _input_key(fn_name: str, i: int) -> str:
+        return f"{fn_name}-input" if i == 0 else f"{fn_name}-input-{i}"
+
+    def seed_input(self, fn_name: str, key: str | None = None) -> list[str]:
+        """Stage every declared input object in remote storage (one per
+        `Get` in the workload's IOProfile); returns the keys."""
+        w = self._workloads[fn_name]
+        keys = []
+        for i, g in enumerate(w.profile.gets):
+            k = key if (key is not None and i == 0) \
+                else self._input_key(fn_name, i)
+            real = max(int(g.size_bytes * self.byte_scale), 1024)
+            self.store.put("in", k, bytes([i % 251]) * real)
+            keys.append(k)
+        return keys
 
     # ------------------------------------------------------------- metrics
 
@@ -260,14 +472,20 @@ class WorkerNode:
     def invoke(self, fn_name: str, *, input_key: str | None = None,
                opaque: bool = False) -> "Future[InvocationResult]":
         """Submit one invocation; returns the caller's response future.
-        The future resolves only after outputs are durably written
+        The future resolves only after every output is durably written
         (at-least-once, §4.2.5) — even under async writeback."""
         inv_id = f"{fn_name}-{next(self._inv_counter)}-{uuid.uuid4().hex[:6]}"
-        input_key = input_key or f"{fn_name}-input"
-        w = SUITE[fn_name]
-        size_hint = (None if opaque or not w.deterministic_input
-                     else self.store.head("in", input_key).size)
-        event = make_event("in", input_key, size_hint, "out", f"{inv_id}-out")
+        w = self._workloads[fn_name]
+        inputs = []
+        for i in range(len(w.profile.gets)):
+            k = input_key if (input_key is not None and i == 0) \
+                else self._input_key(fn_name, i)
+            size = (None if opaque or not w.deterministic_input
+                    else self.store.head("in", k).size)
+            inputs.append(("in", k, size))
+        outputs = [("out", f"{inv_id}-out" + ("" if k == 0 else f"-{k}"))
+                   for k in range(len(w.profile.puts))]
+        event = make_event(inputs, outputs)
         return self._ingress.submit(self._run, w, inv_id, event)
 
     def _run(self, w: Workload, inv_id: str, event: dict) -> InvocationResult:
@@ -275,29 +493,57 @@ class WorkerNode:
         pool = self._pools[w.name]
         cold_expected = not pool.has_warm()
         ctx = _Invocation(w, inv_id, event, cold_expected, t0)
-        # the *effective* spec for this invocation is still pure data:
-        # a size-opaque input cannot be prefetched (§4.2.3), so its plan
-        # is the variant's no-prefetch graph — the streaming fallback is
-        # issued by the guest and correctly serializes after the restore.
-        spec = self.spec
-        if spec.prefetch and (ctx.inp is None or not ctx.inp.prefetchable):
-            spec = replace(spec, prefetch=False)
-        plan = compile_plan(spec, cold=cold_expected)
+        # the *effective* profile for this invocation is still pure
+        # data: a declared-prefetchable GET whose event hint is missing
+        # or size-opaque cannot be prefetched (§4.2.3) — its fetch chain
+        # correctly serializes after the restore.
+        profile = w.profile.effective(ctx.inputs)
+        plan = compile_plan(self.spec, profile, cold=cold_expected)
         self._make_client(ctx)
+        guest = _GuestRun(self, ctx, profile, self.plan_stall_timeout_s)
+        ctx.guest = guest
 
-        run = _PlanRun(plan, self._actions, ctx)
+        run = _PlanRun(plan, self._build_actions(plan, guest), ctx,
+                       stall_timeout_s=self.plan_stall_timeout_s)
+        # the guest program starts when the VM is up AND the event has
+        # been delivered — exactly the restore ∧ rpc_in join.
+        gate: set[str] = set()
+        gate_lock = threading.Lock()
+
+        def _start_gate(g):
+            def hook():
+                with gate_lock:
+                    gate.add(g)
+                    ready = {"restore", "rpc_in"} <= gate
+                if ready:
+                    guest.start()
+            return hook
+
+        run.on_complete("restore", _start_gate("restore"))
+        run.on_complete("rpc_in", _start_gate("rpc_in"))
         run.on_complete(plan.release_group, ctx.release_instance)
         try:
             bd = dict(run.run())
         finally:
             ctx.release_instance()       # exactly-once, also on failure
+            # a prefetch the handler never consumed (e.g. it read its
+            # inputs in a different order than the event hints) still
+            # holds an arena slot — reclaim it. NexusClient clears
+            # gctx.prefetch on consumption, so this cannot double-free.
+            pf = ctx.gctx.prefetch if ctx.gctx is not None else None
+            if pf is not None and pf.ready.is_set() and pf.slot is not None:
+                pf.slot.release()
         if ctx.vm_busy is not None:
             bd["vm_busy"] = ctx.vm_busy
 
         lat = time.monotonic() - t0
         self.latency.record(f"{w.name}:{'cold' if ctx.cold else 'warm'}",
                             lat)
-        return InvocationResult(inv_id, w.name, ctx.cold, lat, bd, ctx.etag)
+        etags = tuple(guest.etags.get(k)
+                      for k in range(len(profile.puts)))
+        return InvocationResult(inv_id, w.name, ctx.cold, lat, bd,
+                                etags[0] if etags else None, etags,
+                                guest.handler_result)
 
     def _make_client(self, ctx: _Invocation) -> None:
         spec = self.spec
@@ -309,14 +555,56 @@ class WorkerNode:
             ctx.gctx = GuestContext(tenant=ctx.w.name,
                                     cred_handle=self._creds[ctx.w.name],
                                     invocation_id=ctx.inv_id)
-            ctx.client = NexusClient(ctx.gctx,
-                                     lambda: self.supervisor.backend,
-                                     self.acct)
+            ctx.client = NexusClient(
+                ctx.gctx, lambda: self.supervisor.backend, self.acct,
+                ack_timeout_s=self.writeback_ack_timeout_s)
 
-    # --------------------------------------------------------- phase actions
+    # --------------------------------------------------------- group actions
     #
-    # Actions say HOW a phase does its work for this spec's capabilities;
-    # the plan's edges say WHEN it may run and what overlaps.
+    # Platform groups (restore/rpc_in/connect/reply) act; guest groups
+    # (fetch/compute/write) OBSERVE the handler — except the first
+    # hinted GET, whose prefetch the platform itself launches at
+    # ingress (§4.2.2). Which is which comes from the plan + profile,
+    # never from per-variant branches.
+
+    def _build_actions(self, plan: PhasePlan, guest: _GuestRun) -> dict:
+        actions = {
+            "restore": self._act_restore,
+            "rpc_in": self._act_rpc_in,
+            "connect": self._act_connect,
+            "reply": self._act_reply,
+        }
+        for g in plan.group_names():
+            if g in actions:
+                continue
+            if g.startswith("fetch[") and \
+                    int(g[len("fetch["):-1]) == guest.prefetch_op:
+                actions[g] = self._make_prefetch_action(guest.prefetch_op)
+            elif g.startswith("write["):
+                actions[g] = self._make_write_action(int(g[len("write["):-1]),
+                                                     g)
+            else:                        # guest-driven fetch/compute
+                actions[g] = (lambda inv, _g=g: inv.guest.await_group(_g))
+        return actions
+
+    def _make_prefetch_action(self, i: int):
+        def act(inv: _Invocation) -> None:
+            handle = self.backend.prefetch(
+                inv.w.name, self._creds[inv.w.name], inv.inputs[i])
+            inv.guest.set_prefetch(handle)
+            handle.wait(timeout=self.plan_stall_timeout_s)
+        return act
+
+    def _make_write_action(self, k: int, group: str):
+        def act(inv: _Invocation) -> None:
+            inv.guest.await_group(group)     # handed off (async) or acked
+            ticket = inv.guest.tickets.get(k)
+            if ticket is not None:
+                # the VM may already be released at the plan's barrier;
+                # the group (and the response) still gates on the ack.
+                inv.guest.etags[k] = ticket.future.result(
+                    timeout=self.writeback_ack_timeout_s)
+        return act
 
     def _act_restore(self, ctx: _Invocation) -> None:
         ctx.inst, ctx.cold = self._pools[ctx.w.name].acquire()
@@ -342,52 +630,8 @@ class WorkerNode:
     def _act_connect(self, ctx: _Invocation) -> None:
         # per-VM storage connection setup (the 'Add Server' cold-start
         # term) — a cold-plan-only phase, overlapped with the restore
-        # and serialized before the fetch by the plan's edges.
+        # and serialized before the first fetch by the plan's edges.
         self.backend.connection_setup(f"{ctx.w.name}#vm-{ctx.inv_id}")
-
-    def _act_fetch(self, ctx: _Invocation) -> None:
-        spec, inp = self.spec, ctx.inp
-        if spec.coupled:
-            obj = ctx.client.get_object(Bucket=inp.bucket, Key=inp.key)
-            ctx.body = obj["Body"]
-            return
-        if inp is None or not inp.prefetchable:
-            # size-opaque inputs use the streaming fallback (§4.2.3):
-            # no exactly-sized region can be pre-mapped.
-            buf = ctx.client.get_object_streaming(
-                Bucket="in", Key=ctx.event["input"]["key"])
-            ctx.body = buf.read_all()
-            return
-        if spec.prefetch:
-            ctx.gctx.prefetch = self.backend.prefetch(
-                ctx.w.name, self._creds[ctx.w.name], inp)
-        obj = ctx.client.get_object(Bucket=inp.bucket, Key=inp.key)
-        ctx.body, ctx.slot = obj["Body"], obj.get("_slot")
-
-    def _act_compute(self, ctx: _Invocation) -> None:
-        ctx.result = ctx.inst.compute(ctx.body)
-        if ctx.slot is not None:
-            ctx.slot.release()
-            ctx.slot = None
-
-    def _act_write(self, ctx: _Invocation) -> None:
-        w, spec = ctx.w, self.spec
-        real_out = ctx.result[:max(int(w.output_mb * MB * self.byte_scale),
-                                   1)]
-        if spec.coupled:
-            meta = ctx.client.put_object(Bucket=ctx.out.bucket,
-                                         Key=ctx.out.key, Body=real_out)
-            ctx.etag = meta.etag
-            return
-        ticket = ctx.client.put_object(
-            Bucket=ctx.out.bucket, Key=ctx.out.key, Body=real_out,
-            wait=not spec.async_writeback)
-        if spec.async_writeback:
-            # the VM was already released at the plan's barrier; the
-            # group (and with it the response) still gates on the ack.
-            ctx.etag = ticket.future.result(timeout=30.0)
-        else:
-            ctx.etag = ticket
 
     def _act_reply(self, ctx: _Invocation) -> None:
         if not self.spec.virtualized:

@@ -27,6 +27,10 @@ class CircularBuffer:
         self._count = 0
         self._closed = False
         self.total_in = 0
+        #: optional hook fired exactly once when the producer closes the
+        #: ring — by then `total_in` is the full streamed byte count
+        #: (how the frontend stub bills size-opaque fetches, §4.2.3).
+        self.on_close = None
 
     def _space(self) -> int:
         return self.capacity - self._count
@@ -74,6 +78,9 @@ class CircularBuffer:
 
     def close(self) -> None:
         with self._lock:
+            already = self._closed
             self._closed = True
             self._not_empty.notify_all()
             self._not_full.notify_all()
+        if not already and self.on_close is not None:
+            self.on_close(self)

@@ -1,34 +1,156 @@
-"""vSwarm-like workload suite (paper §6).
+"""vSwarm-like workload suite (paper §6) on the FaaS programming model.
 
-Ten Python functions ordered from most I/O-intensive to most
-compute-intensive, with compute-to-I/O time ratios spanning ~10%..90%.
-Each workload declares its storage traffic (input/output object sizes),
-its pure-compute cost, and extra resident libraries (e.g. PyTorch for
-CNN/RNN). `handler` is a *real* function body executed by the threaded
-runtime — it computes over the (zero-copy) payload view so that
-correctness of the data plane is exercised, scaled so wall time stays
-in the low milliseconds.
+A workload is a conventional serverless function: ``handler(event, ctx)``
+where ``ctx.storage`` is the boto3-compatible surface the platform
+injects (`frontend.S3Api`) — the handler issues its own
+``get_object``/``put_object`` calls, in any number and order, and never
+learns which system variant is underneath (the paper's transparency
+claim, §4.2). Alongside the handler, each workload declares a
+first-class `IOProfile` — the ordered GET/compute/PUT shape with sizes
+and prefetchability — which is what `plan.compile_plan` turns into the
+variant's phase DAG and what the DES/SLO denominator prices without
+executing guest code. The profile is a *contract*: the runtime checks
+the handler's observed calls against it and rejects divergence.
+
+`SUITE` holds the paper's ten functions (most I/O-intensive to most
+compute-intensive, compute-to-I/O ratios ~10%..90%); `SCENARIOS` adds
+multi-I/O shapes the old one-GET-one-PUT runtime could not represent:
+scatter-gather fan-in (`SG`), a two-stage pipeline (`PIPE`), and a
+fan-out writer (`FAN`). `REGISTRY` is both.
 """
 from __future__ import annotations
 
 import hashlib
 import zlib
-from dataclasses import dataclass
-from typing import Callable
+from dataclasses import dataclass, replace
+from typing import Any, Callable
 
 MB = 1024 * 1024
 
 
+# ------------------------------------------------------------- I/O profiles
+
+@dataclass(frozen=True)
+class Get:
+    """One declared object GET. `prefetchable` marks a deterministic
+    ingress hint (bucket/key/size known before the VM is up, §4.2.2)."""
+
+    size_bytes: int
+    prefetchable: bool = True
+
+
+@dataclass(frozen=True)
+class Put:
+    """One declared durable object PUT (the response gates on its ack)."""
+
+    size_bytes: int
+
+
+@dataclass(frozen=True)
+class ComputeSegment:
+    """Guest vCPU work between I/O calls, in Mcycles at 2.1 GHz."""
+
+    mcycles: float
+
+
+Op = Get | Put | ComputeSegment
+
+
+@dataclass(frozen=True)
+class IOProfile:
+    """Ordered I/O declaration of one handler.
+
+    The op order is the handler's program order: the k-th ``get_object``
+    call the handler makes corresponds to the k-th `Get`, and the wall
+    time between consecutive I/O calls is attributed to the
+    `ComputeSegment`s declared between them.
+    """
+
+    ops: tuple[Op, ...]
+
+    def __post_init__(self):
+        for op in self.ops:
+            if not isinstance(op, (Get, Put, ComputeSegment)):
+                raise TypeError(f"bad IOProfile op: {op!r}")
+
+    # ------------------------------------------------------------- queries
+
+    @property
+    def gets(self) -> tuple[Get, ...]:
+        return tuple(o for o in self.ops if isinstance(o, Get))
+
+    @property
+    def puts(self) -> tuple[Put, ...]:
+        return tuple(o for o in self.ops if isinstance(o, Put))
+
+    @property
+    def segments(self) -> tuple[ComputeSegment, ...]:
+        return tuple(o for o in self.ops if isinstance(o, ComputeSegment))
+
+    @property
+    def shape(self) -> tuple[tuple, ...]:
+        """Size-free structure — the plan-compiler cache key. Only the
+        *first* GET's prefetchability shapes the graph (only it may
+        start at ingress), so later flags are normalized away."""
+        out, seen_get = [], False
+        for op in self.ops:
+            if isinstance(op, Get):
+                out.append(("get", op.prefetchable and not seen_get))
+                seen_get = True
+            elif isinstance(op, Put):
+                out.append(("put",))
+            else:
+                out.append(("compute",))
+        return tuple(out)
+
+    def effective(self, input_hints) -> "IOProfile":
+        """The profile this *invocation* actually runs: a declared-
+        prefetchable GET whose event hint is missing or size-opaque
+        falls back to guest-issued (§4.2.3)."""
+        ops, gi = [], 0
+        for op in self.ops:
+            if isinstance(op, Get):
+                hint = input_hints[gi] if gi < len(input_hints) else None
+                ops.append(replace(op, prefetchable=(
+                    op.prefetchable and hint is not None
+                    and hint.prefetchable)))
+                gi += 1
+            else:
+                ops.append(op)
+        return IOProfile(tuple(ops))
+
+    # --------------------------------------------------------- constructors
+
+    @classmethod
+    def single(cls, in_mb: float, out_mb: float,
+               mcycles: float) -> "IOProfile":
+        """The classic FaaS shape: one GET, one compute, one PUT."""
+        return cls((Get(int(in_mb * MB)), ComputeSegment(mcycles),
+                    Put(int(out_mb * MB))))
+
+
+# ---------------------------------------------------------------- workloads
+
 @dataclass(frozen=True)
 class Workload:
     name: str
-    input_mb: float              # object GET size
-    output_mb: float             # object PUT size
-    compute_mcycles: float       # user-logic cost per invocation
+    profile: IOProfile
     extra_libs_mb: float         # resident libs beyond the base runtime
-    handler: Callable[[memoryview], bytes]
+    handler: Callable[[dict, Any], Any]
     # deterministic input hint available at ingress (paper: 96% of fns)
     deterministic_input: bool = True
+
+    @property
+    def input_mb(self) -> float:
+        return sum(g.size_bytes for g in self.profile.gets) / MB
+
+    @property
+    def output_mb(self) -> float:
+        return sum(p.size_bytes for p in self.profile.puts) / MB
+
+    @property
+    def compute_mcycles(self) -> float:
+        return sum(s.mcycles for s in self.profile.segments)
 
     @property
     def io_mb(self) -> float:
@@ -36,33 +158,94 @@ class Workload:
 
     @property
     def input_bytes(self) -> int:
-        """Nominal GET size — what every cost model charges for."""
-        return int(self.input_mb * MB)
+        """Nominal total GET size — what every cost model charges for."""
+        return sum(g.size_bytes for g in self.profile.gets)
 
     @property
     def output_bytes(self) -> int:
-        return int(self.output_mb * MB)
+        return sum(p.size_bytes for p in self.profile.puts)
 
 
-def _digest_n(view: memoryview, out_mb: float, rounds: int = 1) -> bytes:
+# ----------------------------------------------------------- handler bodies
+#
+# Real functions over real (zero-copy) payload views, scaled so wall
+# time stays in the low milliseconds. Deterministic in their inputs:
+# the transparency test diffs their durable outputs byte-for-byte
+# across every system variant.
+
+def _expand(digest: bytes, out_mb: float) -> bytes:
+    block = (digest * (32 * 1024 // len(digest) + 1))[:32 * 1024]
+    return block * max(int(out_mb * MB) // len(block), 1)
+
+
+def _digest_n(view, out_mb: float, rounds: int = 1) -> bytes:
     """Hash the payload `rounds` times, expand digest to out_mb bytes."""
     h = hashlib.sha256()
     for _ in range(rounds):
         h.update(view)
-    block = h.digest() * 1024                      # 32 KB
-    reps = max(int(out_mb * MB) // len(block), 1)
-    return block * reps
+    return _expand(h.digest(), out_mb)
 
 
-def _crc_reduce(view: memoryview, out_mb: float) -> bytes:
+def _crc_reduce(view, out_mb: float) -> bytes:
     crc = zlib.crc32(view) & 0xFFFFFFFF
-    block = crc.to_bytes(4, "little") * 8192       # 32 KB
-    return block * max(int(out_mb * MB) // len(block), 1)
+    return _expand(crc.to_bytes(4, "little"), out_mb)
+
+
+def _single_io_handler(transform):
+    """The ten paper functions share the classic one-GET-one-PUT body;
+    only the pure `transform` differs. One code object per workload,
+    zero platform knowledge: all I/O goes through ``ctx.storage``."""
+    def handler(event, ctx):
+        src, dst = event["inputs"][0], event["outputs"][0]
+        obj = ctx.storage.get_object(Bucket=src["bucket"], Key=src["key"])
+        body = transform(obj["Body"])
+        ctx.storage.put_object(Bucket=dst["bucket"], Key=dst["key"],
+                               Body=body)
+        return {"statusCode": 200, "bytes_out": len(body)}
+    return handler
+
+
+def _sg_handler(event, ctx):
+    """Scatter-gather fan-in: reduce N input shards to one summary."""
+    h = hashlib.sha256()
+    for src in event["inputs"]:
+        part = ctx.storage.get_object(Bucket=src["bucket"], Key=src["key"])
+        h.update(part["Body"])
+    dst = event["outputs"][0]
+    out = _expand(h.digest(), 2.0)
+    ctx.storage.put_object(Bucket=dst["bucket"], Key=dst["key"], Body=out)
+    return {"statusCode": 200, "shards": len(event["inputs"])}
+
+
+def _pipe_handler(event, ctx):
+    """Two-stage pipeline: get -> stage-1 -> put -> stage-2 -> put."""
+    src = event["inputs"][0]
+    obj = ctx.storage.get_object(Bucket=src["bucket"], Key=src["key"])
+    stage1 = _digest_n(obj["Body"], 2.0)
+    d0 = event["outputs"][0]
+    ctx.storage.put_object(Bucket=d0["bucket"], Key=d0["key"], Body=stage1)
+    stage2 = _digest_n(memoryview(stage1), 1.0, rounds=2)
+    d1 = event["outputs"][1]
+    ctx.storage.put_object(Bucket=d1["bucket"], Key=d1["key"], Body=stage2)
+    return {"statusCode": 200, "stages": 2}
+
+
+def _fan_handler(event, ctx):
+    """Fan-out writer: one GET, three derived durable outputs."""
+    src = event["inputs"][0]
+    obj = ctx.storage.get_object(Bucket=src["bucket"], Key=src["key"])
+    seed = hashlib.sha256(obj["Body"]).digest()
+    for i, dst in enumerate(event["outputs"]):
+        branch = hashlib.sha256(seed + i.to_bytes(2, "little")).digest()
+        ctx.storage.put_object(Bucket=dst["bucket"], Key=dst["key"],
+                               Body=_expand(branch, 1.5))
+    return {"statusCode": 200, "outputs": len(event["outputs"])}
 
 
 def _wl(name, input_mb, output_mb, compute, libs, out_fn=None, **kw):
     fn = out_fn or (lambda v, o=output_mb: _digest_n(v, o))
-    return Workload(name, input_mb, output_mb, compute, libs, fn, **kw)
+    return Workload(name, IOProfile.single(input_mb, output_mb, compute),
+                    libs, _single_io_handler(fn), **kw)
 
 
 # Compute budgets in Mcycles; at 2.1 GHz, 100 Mcycles ~= 48 ms.
@@ -84,6 +267,32 @@ SUITE: dict[str, Workload] = {w.name: w for w in [
 ]}
 
 NAMES = list(SUITE)
+
+#: multi-I/O shapes (ISSUE 2): unrepresentable under the old fixed
+#: one-GET-one-PUT plan, now just data. Kept out of `SUITE` so the
+#: paper's ten-function mix (Figs 2-13 denominators) stays untouched.
+SCENARIOS: dict[str, Workload] = {w.name: w for w in [
+    # scatter-gather fan-in: 4 GETs (only the first is hint-prefetched
+    # at ingress; the rest are guest-issued), one reduced output.
+    Workload("SG", IOProfile((
+        Get(3 * MB), Get(3 * MB), Get(3 * MB), Get(3 * MB),
+        ComputeSegment(60.0), Put(2 * MB))), 50.0, _sg_handler),
+    # two-stage chain: the first PUT overlaps stage-2 compute under
+    # async writeback; the response still gates on both acks.
+    Workload("PIPE", IOProfile((
+        Get(6 * MB), ComputeSegment(30.0), Put(2 * MB),
+        ComputeSegment(40.0), Put(1 * MB))), 55.0, _pipe_handler),
+    # fan-out: one GET, three durable outputs, release after compute.
+    Workload("FAN", IOProfile((
+        Get(5 * MB), ComputeSegment(45.0),
+        Put(int(1.5 * MB)), Put(int(1.5 * MB)), Put(int(1.5 * MB)))),
+        52.5, _fan_handler),
+]}
+
+SCENARIO_NAMES = list(SCENARIOS)
+
+#: everything deployable: the paper suite + the multi-I/O scenarios.
+REGISTRY: dict[str, Workload] = {**SUITE, **SCENARIOS}
 
 
 def compute_io_ratio(w: Workload, io_mcycles_per_mb: float = 12.0) -> float:

@@ -90,15 +90,16 @@ class NexusModelServer:
         self.store.put("prompts", key, prompt.tobytes())
 
     def submit(self, key: str, gen_tokens: int) -> "Future[np.ndarray]":
-        event = make_event("prompts", key,
-                           self.store.head("prompts", key).size,
-                           "out", f"{key}-completion")
+        event = make_event(
+            [("prompts", key, self.store.head("prompts", key).size)],
+            [("out", f"{key}-completion")])
         return self._pool.submit(self._serve_one, event, gen_tokens)
 
     def _serve_one(self, event: dict, gen_tokens: int) -> np.ndarray:
         t0 = time.monotonic()
         self.backend.terminate_rpc()
-        inp, out = extract_hints(event)
+        inputs, outputs = extract_hints(event)
+        inp, out = inputs[0], outputs[0]
 
         # prefetch the prompt OVERLAPPED with instance acquisition/warmup
         handle = self.backend.prefetch("lm", self.cred, inp)

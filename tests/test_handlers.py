@@ -1,0 +1,246 @@
+"""The programming-model contract (ISSUE 2 acceptance criteria).
+
+The paper's central claim (§4.2) is *transparency*: unmodified handler
+code keeps calling the boto3 surface while the platform swaps what
+executes underneath. Here that is an executed property, not an
+assertion: ONE handler function — the same code object — runs under
+all 7 `SYSTEMS` variants via the injected `ctx.storage` client only,
+and its durable outputs are diffed byte-for-byte across variants,
+including multi-GET (SG) and multi-PUT (FAN/PIPE) scenarios.
+"""
+import pytest
+
+from repro.core.plan import SYSTEMS
+from repro.core.runtime import WorkerNode
+from repro.core.workloads import (ComputeSegment, Get, IOProfile, Put,
+                                  REGISTRY, SCENARIOS, Workload)
+
+MB = 1024 * 1024
+
+
+def run_once(system: str, wname: str, **node_kw):
+    """One invocation of `wname` under `system`; returns (node-free)
+    durable outputs in PUT order plus the InvocationResult."""
+    node = WorkerNode(system, **node_kw)
+    try:
+        node.deploy(wname)
+        node.seed_input(wname)
+        res = node.invoke(wname).result(timeout=60)
+        w = REGISTRY[wname]
+        outs = []
+        for k in range(len(w.profile.puts)):
+            key = f"{res.invocation_id}-out" + ("" if k == 0 else f"-{k}")
+            outs.append(node.store.get("out", key))
+        return outs, res
+    finally:
+        node.shutdown()
+
+
+class TestTransparency:
+    @pytest.mark.parametrize("wname", ["AES", "SG", "FAN"])
+    def test_same_handler_same_bytes_under_all_variants(self, wname):
+        """The exact same handler code object, under every variant,
+        produces byte-identical durable outputs — covering the classic
+        single-GET/PUT shape, a multi-GET fan-in, and a multi-PUT
+        fan-out."""
+        handler = REGISTRY[wname].handler
+        reference = None
+        for system in SYSTEMS:
+            assert REGISTRY[wname].handler is handler   # one code object
+            outs, res = run_once(system, wname)
+            assert res.cold
+            assert all(e is not None for e in res.output_etags), system
+            assert all(len(o) > 0 for o in outs), system
+            if reference is None:
+                reference = outs
+            else:
+                for k, (a, b) in enumerate(zip(reference, outs)):
+                    assert a == b, (wname, system, k, len(a), len(b))
+
+    def test_handlers_are_platform_blind(self):
+        """No handler closes over or names any variant machinery — the
+        only capabilities are the event and ctx.storage."""
+        forbidden = {"SystemSpec", "WorkerNode", "NexusClient",
+                     "BaselineClient", "spec", "backend", "offload_sdk"}
+        for w in REGISTRY.values():
+            code = w.handler.__code__
+            names = set(code.co_names) | set(code.co_varnames)
+            assert not (names & forbidden), w.name
+
+    def test_handler_return_value_surfaces(self):
+        _, res = run_once("nexus", "SG")
+        assert res.response == {"statusCode": 200, "shards": 4}
+
+
+class TestMultiIOScenarios:
+    def test_sg_prefetches_only_the_first_get(self):
+        """§4.2.2: one ingress prefetch per invocation; the remaining
+        GETs are guest-issued synchronous fetches."""
+        node = WorkerNode("nexus")
+        try:
+            node.deploy("SG")
+            node.seed_input("SG")
+            node.invoke("SG").result(timeout=60)
+            assert node.backend.stats["prefetches"] == 1
+            assert node.backend.stats["sync_gets"] == 3
+        finally:
+            node.shutdown()
+
+    def test_fan_gates_response_on_every_ack(self):
+        outs, res = run_once("nexus", "FAN")
+        assert len(res.output_etags) == 3
+        assert all(e is not None for e in res.output_etags)
+        assert len({bytes(o) for o in outs}) == 3    # three distinct outputs
+
+    def test_pipe_releases_vm_before_final_acks(self):
+        """§4.2.5 on a chained shape: under async writeback the VM goes
+        back to the pool at the last compute segment, while the caller's
+        future still waits for both durable PUTs."""
+        _, res = run_once("nexus", "PIPE")
+        assert res.breakdown["vm_busy"] < res.latency_s
+        assert res.output_etags[0] is not None
+        assert res.output_etags[1] is not None
+
+    def test_scenarios_under_coupled_baseline(self):
+        """The same multi-I/O handlers run under the coupled client —
+        no Nexus machinery involved at all."""
+        for wname in SCENARIOS:
+            outs, res = run_once("baseline", wname)
+            assert all(len(o) > 0 for o in outs), wname
+
+
+class TestProfileContract:
+    def test_handler_exceeding_profile_fails(self):
+        """A handler that issues I/O its IOProfile does not declare is
+        rejected — the profile is a contract, not a hint."""
+        def greedy(event, ctx):
+            src, dst = event["inputs"][0], event["outputs"][0]
+            obj = ctx.storage.get_object(Bucket=src["bucket"],
+                                         Key=src["key"])
+            ctx.storage.put_object(Bucket=dst["bucket"], Key=dst["key"],
+                                   Body=bytes(obj["Body"]))
+            ctx.storage.put_object(Bucket=dst["bucket"],
+                                   Key=dst["key"] + "-x",
+                                   Body=b"undeclared")
+
+        w = Workload("GREEDY", IOProfile.single(0.1, 0.1, 5.0), 30.0,
+                     greedy)
+        node = WorkerNode("nexus")
+        try:
+            node.deploy(w)
+            node.seed_input("GREEDY")
+            with pytest.raises(RuntimeError, match="IOProfile"):
+                node.invoke("GREEDY").result(timeout=60)
+        finally:
+            node.shutdown()
+
+    def test_handler_underperforming_profile_fails(self):
+        def lazy(event, ctx):
+            return {"statusCode": 204}          # never touches storage
+
+        w = Workload("LAZY", IOProfile((Get(64 * 1024),
+                                        ComputeSegment(2.0),
+                                        Put(64 * 1024))), 30.0, lazy,
+                     deterministic_input=False)
+        node = WorkerNode("baseline")
+        try:
+            node.deploy(w)
+            node.seed_input("LAZY")
+            with pytest.raises(RuntimeError, match="unperformed"):
+                node.invoke("LAZY").result(timeout=60)
+        finally:
+            node.shutdown()
+
+    def test_duplicate_output_key_rejected(self):
+        """Two durable PUTs to one key in a single invocation have no
+        defined order once write chains float — rejected under every
+        variant so handlers can't depend on either outcome."""
+        def clobber(event, ctx):
+            dst = event["outputs"][0]
+            ctx.storage.put_object(Bucket=dst["bucket"], Key=dst["key"],
+                                   Body=b"A" * 1024)
+            ctx.storage.put_object(Bucket=dst["bucket"], Key=dst["key"],
+                                   Body=b"B" * 1024)
+
+        w = Workload("CLOBBER", IOProfile((Put(1024), Put(1024))), 30.0,
+                     clobber, deterministic_input=False)
+        for system in ("baseline", "nexus"):
+            node = WorkerNode(system)
+            try:
+                node.deploy(w)
+                with pytest.raises(RuntimeError, match="twice"):
+                    node.invoke("CLOBBER").result(timeout=60)
+            finally:
+                node.shutdown()
+
+    def test_out_of_order_gets_reclaim_the_prefetch_slot(self):
+        """A handler may read its inputs in any order; if it never
+        consumes the ingress-prefetched first input, the platform
+        reclaims the prefetch's arena slot (no per-invocation leak)."""
+        def reversed_reader(event, ctx):
+            h = []
+            for src in reversed(event["inputs"]):
+                obj = ctx.storage.get_object(Bucket=src["bucket"],
+                                             Key=src["key"])
+                h.append(bytes(obj["Body"][:8]))
+            dst = event["outputs"][0]
+            ctx.storage.put_object(Bucket=dst["bucket"], Key=dst["key"],
+                                   Body=b"".join(h))
+
+        w = Workload("REV", IOProfile((Get(256 * 1024), Get(256 * 1024),
+                                       ComputeSegment(2.0), Put(64))),
+                     30.0, reversed_reader)
+        node = WorkerNode("nexus")
+        try:
+            node.deploy(w)
+            node.seed_input("REV")
+            for _ in range(3):
+                res = node.invoke("REV").result(timeout=60)
+                assert res.output_etag is not None
+            arena = node.backend.arenas.get("REV")
+            assert arena.utilization() == 0.0    # every slot reclaimed
+        finally:
+            node.shutdown()
+
+    def test_custom_workload_deploys_by_value(self):
+        """The programming-model surface: hand the platform a handler +
+        IOProfile, get a running function."""
+        def double(event, ctx):
+            src, dst = event["inputs"][0], event["outputs"][0]
+            obj = ctx.storage.get_object(Bucket=src["bucket"],
+                                         Key=src["key"])
+            body = bytes(obj["Body"]) * 2
+            ctx.storage.put_object(Bucket=dst["bucket"], Key=dst["key"],
+                                   Body=body)
+            return {"n": len(body)}
+
+        w = Workload("DOUBLE", IOProfile.single(0.25, 0.5, 4.0), 20.0,
+                     double)
+        for system in ("baseline", "nexus"):
+            node = WorkerNode(system)
+            try:
+                node.deploy(w)
+                node.seed_input("DOUBLE")
+                res = node.invoke("DOUBLE").result(timeout=60)
+                out = node.store.get("out", f"{res.invocation_id}-out")
+                assert len(out) > 0
+                assert res.response["n"] > 0
+            finally:
+                node.shutdown()
+
+
+class TestTimeoutKnobs:
+    def test_ack_and_stall_timeouts_are_overridable(self):
+        """The old hardcoded 30 s / 120 s deadlines are WorkerNode
+        parameters now and flow into the injected client."""
+        node = WorkerNode("nexus", writeback_ack_timeout_s=7.5,
+                          plan_stall_timeout_s=45.0)
+        try:
+            assert node.writeback_ack_timeout_s == 7.5
+            assert node.plan_stall_timeout_s == 45.0
+            node.deploy("WEB")
+            node.seed_input("WEB")
+            res = node.invoke("WEB").result(timeout=60)
+            assert res.output_etag is not None
+        finally:
+            node.shutdown()

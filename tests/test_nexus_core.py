@@ -10,7 +10,8 @@ from repro.core.arena import ArenaError, ArenaRegistry, IsolationError, TenantAr
 from repro.core.backend import BackendCrashed, NexusBackend
 from repro.core.credentials import CredentialError, TokenManager
 from repro.core.frontend import GuestContext, NexusClient
-from repro.core.hints import InputHint, extract_hints, make_event
+from repro.core.hints import (InputHint, OutputHint, extract_hints,
+                              make_event)
 from repro.core.planes import ControlMessage, ControlPlane
 from repro.core.ratelimit import TokenBucket
 from repro.core.runtime import SYSTEMS, WorkerNode
@@ -149,17 +150,34 @@ class TestHints:
     def test_s3_event_promotion(self):
         event = {"Records": [{"s3": {"bucket": {"name": "b"},
                                      "object": {"key": "k", "size": 123}}}]}
-        inp, _ = extract_hints(event)
+        (inp,), _ = extract_hints(event)
         assert inp == InputHint("b", "k", 123)
         assert inp.prefetchable
 
     def test_opaque_event(self):
-        inp, out = extract_hints("not json at all")
-        assert inp is None and out is None
+        inputs, outputs = extract_hints("not json at all")
+        assert inputs == () and outputs == ()
 
     def test_sizeless_hint_not_prefetchable(self):
-        inp, _ = extract_hints(make_event("b", "k", None, "o", "ok"))
-        assert inp is not None and not inp.prefetchable
+        (inp,), _ = extract_hints(make_event([("b", "k")], [("o", "ok")]))
+        assert not inp.prefetchable
+
+    def test_multi_input_events_keep_order(self):
+        """Scatter-gather events promote every data dependency, in the
+        handler's program order."""
+        event = make_event([("in", f"shard-{i}", 64) for i in range(4)],
+                           [("out", "a"), ("out", "b")])
+        inputs, outputs = extract_hints(event)
+        assert [h.key for h in inputs] == [f"shard-{i}" for i in range(4)]
+        assert all(h.prefetchable for h in inputs)
+        assert [o.key for o in outputs] == ["a", "b"]
+
+    def test_legacy_single_input_shape_still_promotes(self):
+        event = {"input": {"bucket": "b", "key": "k", "size": 9},
+                 "output": {"bucket": "o", "key": "x"}}
+        inputs, outputs = extract_hints(event)
+        assert inputs == (InputHint("b", "k", 9),)
+        assert outputs == (OutputHint("o", "x"),)
 
 
 # ------------------------------------------------------------------ backend
@@ -196,6 +214,34 @@ class TestBackend:
         buf = CircularBuffer(capacity=4096)
         be.fetch_stream("fn", cred, "in", "blob", buf, chunk=1024)
         assert buf.read_all() == payload
+
+    def test_streaming_fallback_charges_streamed_bytes(self):
+        """Regression: the stub used to bill the streaming path with
+        nbytes=0, silently dropping the SDK's per-MB cycles. The charge
+        must reflect the full streamed size once the ring closes."""
+        n = 3 * (1 << 20)
+
+        class _FakeBackend:
+            class remote:
+                cost_scale = 1.0
+
+            @staticmethod
+            def fetch_stream(tenant, cred, bucket, key, buf, chunk):
+                def _pump():
+                    buf.write(b"x" * n)
+                    buf.close()
+                threading.Thread(target=_pump, daemon=True).start()
+
+        acct = M.CycleAccount()
+        ctx = GuestContext(tenant="fn", cred_handle="h")
+        client = NexusClient(ctx, lambda: _FakeBackend, acct)
+        buf = client.get_object_streaming(Bucket="in", Key="blob")
+        assert len(buf.read_all()) == n
+        charged = acct.snapshot()["total"]
+        assert charged == pytest.approx(
+            F.remoted_op_cost("aws", n).total(), rel=1e-9)
+        # strictly above what the old nbytes=0 bug billed
+        assert charged > F.remoted_op_cost("aws", 0).total()
 
     def test_unauthorized_bucket_denied(self):
         store, acct, be = make_backend()

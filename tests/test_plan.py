@@ -1,13 +1,18 @@
 """PhasePlan layer: golden phase graphs + cross-executor parity.
 
-The refactor's contract (ISSUE 1): `runtime.WorkerNode` and
+The layer's contract (ISSUE 1 + ISSUE 2): `runtime.WorkerNode` and
 `des.DensitySimulator` contain no per-variant phase-ordering branches —
-both interpret `plan.compile_plan(spec)`. These tests pin (a) the
-compiled graph per SystemSpec (edges, resource tags, backend groups,
-barriers) and (b) that the two executors actually agree: the DES's
-zero-contention latency equals `unloaded_latency` equals the warm
-phase-sum, and the threaded runtime's breakdown is exactly the plan's
-group set in a plan-consistent order — for EVERY variant in SYSTEMS.
+both interpret `plan.compile_plan(spec, profile)`, where `profile` is
+the workload's declared `IOProfile` (any number of GETs/segments/PUTs).
+These tests pin (a) the compiled graph per SystemSpec and I/O shape
+(edges, resource tags, backend groups, barriers), (b) compilation as a
+*property* over every (SystemSpec, IOProfile, cold) combination, and
+(c) that the two executors actually agree: the DES's zero-contention
+latency equals `unloaded_latency` equals the warm critical path, and
+the threaded runtime's breakdown is exactly the plan's group set in a
+plan-consistent order — for EVERY variant in SYSTEMS and every
+workload in the registry (the ten paper functions + the multi-I/O
+scenarios).
 """
 import math
 
@@ -17,8 +22,15 @@ from repro.core import plan as P
 from repro.core import workloads as W
 from repro.core.des import DensitySimulator
 from repro.core.plan import (SYSTEMS, Phase, PhasePlan, compile_plan,
-                             phase_durations, unloaded_latency)
+                             phase_durations, phase_group,
+                             unloaded_latency)
 from repro.core.runtime import WorkerNode
+from repro.core.workloads import ComputeSegment, Get, IOProfile, Put
+
+MB = 1 << 20
+
+#: the classic one-GET-one-PUT shape all ten paper functions share
+CANON = W.SUITE["WEB"].profile
 
 
 def deps(plan, name):
@@ -30,58 +42,60 @@ def deps(plan, name):
 class TestGoldenGraphs:
     def test_baseline_cold(self):
         """Coupled: strict serial chain, VM held through the reply."""
-        p = compile_plan(SYSTEMS["baseline"], cold=True)
-        assert p.phase_names == ("restore", "rpc_in", "fetch_cpu",
-                                 "fetch_net", "compute", "write_cpu",
-                                 "write_net", "reply")
+        p = compile_plan(SYSTEMS["baseline"], CANON, cold=True)
+        assert p.phase_names == ("restore", "rpc_in", "fetch_cpu[0]",
+                                 "fetch_net[0]", "compute[0]",
+                                 "write_cpu[0]", "write_net[0]", "reply")
         assert deps(p, "rpc_in") == {"restore"}       # guest gRPC server
-        assert deps(p, "fetch_cpu") == {"rpc_in", "restore"}
-        assert deps(p, "compute") == {"fetch_net", "restore"}
+        assert "restore" in p.ancestors("fetch_cpu[0]")
+        assert deps(p, "compute[0]") == {"fetch_net[0]"}
         assert p.release_after == "reply"
         assert p.respond_after == "reply"
-        assert p.phase("fetch_cpu").resource == P.GUEST_CORE
-        assert p.phase("fetch_cpu").backend_group is None
+        assert p.phase("fetch_cpu[0]").resource == P.GUEST_CORE
+        assert p.phase("fetch_cpu[0]").backend_group is None
         assert p.backend_groups() == {}
 
     def test_nexus_cold(self):
         """Prefetch overlaps restore; connect serializes before fetch;
-        async writeback releases at compute."""
-        p = compile_plan(SYSTEMS["nexus"], cold=True)
+        async writeback releases at the last compute."""
+        p = compile_plan(SYSTEMS["nexus"], CANON, cold=True)
         assert deps(p, "rpc_in") == set()             # backend-native
         assert deps(p, "connect") == {"rpc_in"}
-        assert deps(p, "fetch_cpu") == {"rpc_in", "connect"}  # no restore!
-        assert deps(p, "compute") == {"fetch_net", "restore"}  # the join
-        assert p.release_after == "compute"           # early release
+        assert deps(p, "fetch_cpu[0]") == {"connect"}
+        assert "restore" not in p.ancestors("fetch_cpu[0]")  # the overlap
+        assert deps(p, "compute[0]") == {"fetch_net[0]", "restore"}  # join
+        assert p.release_after == "compute[0]"        # early release
         assert p.respond_after == "reply"             # ...but ack gates
-        assert p.phase("fetch_cpu").resource == P.BACKEND_WORKER
-        assert p.backend_groups() == {"fetch": ("fetch_cpu", "fetch_net"),
-                                      "write": ("write_cpu", "write_net")}
+        assert p.phase("fetch_cpu[0]").resource == P.BACKEND_WORKER
+        assert p.backend_groups() == {
+            "fetch[0]": ("fetch_cpu[0]", "fetch_net[0]"),
+            "write[0]": ("write_cpu[0]", "write_net[0]")}
         # RDMA: slot released after the CPU slice; TCP: held through wire
-        assert p.slot_release_phase("fetch", kernel_bypass=True) \
-            == "fetch_cpu"
-        assert p.slot_release_phase("fetch", kernel_bypass=False) \
-            == "fetch_net"
+        assert p.slot_release_phase("fetch[0]", kernel_bypass=True) \
+            == "fetch_cpu[0]"
+        assert p.slot_release_phase("fetch[0]", kernel_bypass=False) \
+            == "fetch_net[0]"
 
     def test_nexus_tcp_keeps_restore_fetch_serialization(self):
         """No prefetch -> the guest must be up to issue the fetch."""
-        p = compile_plan(SYSTEMS["nexus-tcp"], cold=True)
-        assert "restore" in deps(p, "fetch_cpu")
+        p = compile_plan(SYSTEMS["nexus-tcp"], CANON, cold=True)
+        assert "restore" in deps(p, "fetch_cpu[0]")
         assert p.release_after == "reply"
 
     def test_prefetch_only_isolates_the_two_mechanisms(self):
         """nexus-prefetch-only: nexus-async's fetch overlap, nexus-tcp's
         release barrier — §4.2.2 without §4.2.5, as pure data."""
-        p = compile_plan(SYSTEMS["nexus-prefetch-only"], cold=True)
-        assert "restore" not in deps(p, "fetch_cpu")
+        p = compile_plan(SYSTEMS["nexus-prefetch-only"], CANON, cold=True)
+        assert "restore" not in p.ancestors("fetch_cpu[0]")
         assert p.release_after == "reply"
 
     def test_sdk_only_keeps_in_guest_rpc(self):
-        p = compile_plan(SYSTEMS["nexus-sdk-only"], cold=True)
+        p = compile_plan(SYSTEMS["nexus-sdk-only"], CANON, cold=True)
         assert deps(p, "rpc_in") == {"restore"}       # gRPC in the guest
-        assert p.phase("fetch_cpu").resource == P.BACKEND_WORKER
+        assert p.phase("fetch_cpu[0]").resource == P.BACKEND_WORKER
 
     def test_wasm_has_no_vm_boundary(self):
-        p = compile_plan(SYSTEMS["wasm"], cold=True)
+        p = compile_plan(SYSTEMS["wasm"], CANON, cold=True)
         assert p.phase("rpc_in").resource == P.NONE   # scheduler hop
         assert p.phase("reply").resource == P.NONE
         assert "connect" not in p.phase_names         # in-process fabric
@@ -90,9 +104,9 @@ class TestGoldenGraphs:
 
     def test_connect_is_cold_only_and_offload_only(self):
         for name, spec in SYSTEMS.items():
-            warm = compile_plan(spec, cold=False)
+            warm = compile_plan(spec, CANON, cold=False)
             assert "connect" not in warm.phase_names, name
-            cold = compile_plan(spec, cold=True)
+            cold = compile_plan(spec, CANON, cold=True)
             assert (("connect" in cold.phase_names)
                     == spec.offload_sdk), name
 
@@ -107,37 +121,200 @@ class TestGoldenGraphs:
         with pytest.raises(ValueError, match="resource"):
             PhasePlan("bad", True, (Phase("a", "gpu"),),
                       release_after="a", respond_after="a")
+        with pytest.raises(ValueError, match="not contiguous"):
+            PhasePlan("bad", True,
+                      (Phase("fetch_cpu[0]", P.GUEST_CORE),
+                       Phase("compute[0]", P.GUEST_CORE),
+                       Phase("fetch_net[0]", P.WIRE)),
+                      release_after="compute[0]",
+                      respond_after="compute[0]")
 
     def test_incoherent_spec_rejected_at_compile(self):
         """Variants are data — so the compiler is where nonsense combos
         must die: prefetch/async writeback without a backend."""
         with pytest.raises(ValueError, match="offload_sdk"):
-            compile_plan(P.SystemSpec("weird", prefetch=True))
+            compile_plan(P.SystemSpec("weird", prefetch=True), CANON)
         with pytest.raises(ValueError, match="offload_sdk"):
-            compile_plan(P.SystemSpec("weird2", async_writeback=True))
+            compile_plan(P.SystemSpec("weird2", async_writeback=True), CANON)
 
     def test_groups_lift_cpu_net_pairs(self):
-        p = compile_plan(SYSTEMS["nexus"], cold=False)
-        assert p.group_names() == ("restore", "rpc_in", "fetch",
-                                   "compute", "write", "reply")
+        p = compile_plan(SYSTEMS["nexus"], CANON, cold=False)
+        assert p.group_names() == ("restore", "rpc_in", "fetch[0]",
+                                   "compute[0]", "write[0]", "reply")
         gd = p.group_deps()
-        assert gd["fetch"] == ("rpc_in",)
-        assert set(gd["compute"]) == {"fetch", "restore"}
+        assert gd["fetch[0]"] == ("rpc_in",)
+        assert set(gd["compute[0]"]) == {"fetch[0]", "restore"}
+
+
+# ----------------------------------------------- multi-I/O golden graphs
+
+class TestMultiOpGraphs:
+    def test_sg_only_first_get_prefetches(self):
+        """Scatter-gather: GET 0 starts at ingress; GETs 1..3 are
+        guest-issued, program-ordered, and serialize after the data of
+        the previous GET (the handler blocks on each)."""
+        p = compile_plan(SYSTEMS["nexus"], W.SCENARIOS["SG"].profile,
+                         cold=True)
+        assert "restore" not in p.ancestors("fetch_cpu[0]")
+        for i in (1, 2, 3):
+            assert "restore" in p.ancestors(f"fetch_cpu[{i}]"), i
+            assert f"fetch_net[{i - 1}]" in p.ancestors(f"fetch_cpu[{i}]")
+        assert p.backend_groups().keys() == {
+            "fetch[0]", "fetch[1]", "fetch[2]", "fetch[3]", "write[0]"}
+
+    def test_pipe_async_write_floats_past_next_stage(self):
+        """PIPE under async writeback: stage-2 compute does NOT wait for
+        stage-1's PUT ack; the response gates on both acks; release
+        moves to the LAST compute segment."""
+        p = compile_plan(SYSTEMS["nexus"], W.SCENARIOS["PIPE"].profile,
+                         cold=False)
+        assert "write_net[0]" not in p.ancestors("compute[1]")
+        assert "compute[0]" in p.ancestors("compute[1]")
+        assert {"write_net[0]", "write_net[1]"} <= p.ancestors("reply")
+        assert p.release_after == "compute[1]"
+
+    def test_pipe_sync_write_blocks_next_stage(self):
+        """The same profile under a blocking-PUT variant serializes:
+        stage 2 waits for stage 1's durable ack."""
+        p = compile_plan(SYSTEMS["nexus-tcp"], W.SCENARIOS["PIPE"].profile,
+                         cold=False)
+        assert "write_net[0]" in p.ancestors("compute[1]")
+        assert p.release_after == "reply"
+
+    def test_fan_response_gates_on_every_put(self):
+        p = compile_plan(SYSTEMS["nexus"], W.SCENARIOS["FAN"].profile,
+                         cold=False)
+        assert {"write_net[0]", "write_net[1]", "write_net[2]"} \
+            <= p.ancestors("reply")
+        assert p.release_after == "compute[0]"
+        # async: the puts fan out from the producing compute, unserialized
+        for k in (1, 2):
+            assert f"write_net[{k - 1}]" not in p.ancestors(f"write_cpu[{k}]")
+
+    def test_async_release_waits_for_trailing_guest_io(self):
+        """The release barrier is the guest's FINAL program point: a
+        GET after the last compute segment still blocks the guest, so
+        the instance cannot be released at that compute."""
+        prof = IOProfile((Get(MB), ComputeSegment(10.0), Get(MB),
+                          Put(MB)))
+        p = compile_plan(SYSTEMS["nexus"], prof, cold=False)
+        assert p.release_after == "fetch_net[1]"
+        # ...and a profile ending in a prefetched GET (guest end before
+        # the restore join is expressible) falls back to the reply
+        tail = IOProfile((Get(MB),))
+        pt = compile_plan(SYSTEMS["nexus"], tail, cold=False)
+        assert pt.release_after == "reply"
+
+    def test_opaque_first_get_falls_back_to_guest_issue(self):
+        """`IOProfile.effective` with a sizeless hint compiles to the
+        no-prefetch graph — the streaming fallback serializes after the
+        restore (§4.2.3)."""
+        from repro.core.hints import InputHint
+        eff = CANON.effective((InputHint("in", "k", None),))
+        p = compile_plan(SYSTEMS["nexus"], eff, cold=True)
+        assert "restore" in p.ancestors("fetch_cpu[0]")
+
+
+# -------------------------------------- compilation as a property (ISSUE 2)
+
+ALL_COMBOS = [(s, wn, cold) for s in SYSTEMS for wn in W.REGISTRY
+              for cold in (False, True)]
+
+
+class TestCompilationProperties:
+    @pytest.mark.parametrize("system,wname,cold", ALL_COMBOS)
+    def test_every_combination_compiles_and_validates(self, system, wname,
+                                                      cold):
+        spec, w = SYSTEMS[system], W.REGISTRY[wname]
+        p = compile_plan(spec, w.profile, cold=cold)   # validator runs
+
+        # declaration order is a topological order (acyclic by construction)
+        seen = set()
+        for ph in p.phases:
+            assert set(ph.after) <= seen, (ph.name, ph.after)
+            seen.add(ph.name)
+
+        # barriers resolve to real phases/groups, and the release phase
+        # always postdates the restore (an instance must exist — and the
+        # guest must be done with it — before it can be released)
+        assert p.release_after in seen and p.respond_after in seen
+        assert p.release_group in p.group_names()
+        assert p.respond_group in p.group_names()
+        assert (p.release_after == "reply"
+                or "restore" in p.ancestors(p.release_after))
+
+        # reply is the unique sink and gates on every durable PUT
+        anc = p.ancestors("reply")
+        assert anc == set(p.phase_names) - {"reply"}
+        n_puts = len(w.profile.puts)
+        assert {f"write_net[{k}]" for k in range(n_puts)} <= anc
+
+        # every phase has a duration in the cost model
+        durs = phase_durations(spec, w, cold)
+        assert set(p.phase_names) <= set(durs)
+
+        # only the FIRST hinted GET may skip the restore edge
+        gets = w.profile.gets
+        for i in range(len(gets)):
+            skips = "restore" not in p.ancestors(f"fetch_cpu[{i}]")
+            may_skip = (spec.prefetch and i == 0 and gets[0].prefetchable)
+            assert skips == may_skip, (system, wname, i)
+
+        # group deps are exactly the phase deps lifted across groups
+        owner = {m: g for g, members in p.groups() for m in members}
+        lifted = {g: set() for g in p.group_names()}
+        for ph in p.phases:
+            for d in ph.after:
+                if owner[d] != owner[ph.name]:
+                    lifted[owner[ph.name]].add(owner[d])
+        assert {g: set(v) for g, v in p.group_deps().items()} == lifted
+        # ...and acyclic at group granularity (groups() order is topo)
+        pos = {g: i for i, g in enumerate(p.group_names())}
+        for g, gdeps in p.group_deps().items():
+            for d in gdeps:
+                assert pos[d] < pos[g], (g, d)
+
+    def test_plans_are_cached_by_shape(self):
+        """All ten single-GET/PUT paper functions share one plan object;
+        distinct shapes get distinct plans."""
+        spec = SYSTEMS["nexus"]
+        plans = {compile_plan(spec, W.SUITE[n].profile, cold=True)
+                 for n in W.NAMES}
+        assert len({id(p) for p in plans}) == 1
+        assert compile_plan(spec, W.SCENARIOS["SG"].profile, True) \
+            is not compile_plan(spec, CANON, True)
 
 
 # ----------------------------------------------------------- cost model
 
 class TestCostModel:
     @pytest.mark.parametrize("system", list(SYSTEMS))
-    def test_unloaded_is_warm_phase_sum(self, system):
-        """With restore = 0 nothing overlaps: the critical path IS the
-        phase sum — for every variant and every workload."""
+    def test_unloaded_is_warm_critical_path(self, system):
+        """With restore = 0, a blocking-write chain has no overlap: the
+        critical path IS the phase sum. Async writeback can only
+        shorten it (floating write chains) — never extend it."""
         spec = SYSTEMS[system]
-        for w in W.SUITE.values():
+        for w in W.REGISTRY.values():
             durs = phase_durations(spec, w, cold=False)
             assert durs["restore"] == 0.0
-            assert unloaded_latency(spec, w) \
-                == pytest.approx(sum(durs.values()), rel=1e-12)
+            ul = unloaded_latency(spec, w)
+            total = sum(durs.values())
+            if spec.async_writeback:
+                assert ul <= total + 1e-12
+            else:
+                assert ul == pytest.approx(total, rel=1e-12)
+
+    def test_async_overlap_shortens_pipe(self):
+        """PIPE's stage-1 PUT really overlaps stage-2 compute: strictly
+        below the phase sum, by at least the cheaper of the two."""
+        spec = SYSTEMS["nexus"]
+        w = W.SCENARIOS["PIPE"]
+        durs = phase_durations(spec, w, cold=False)
+        ul = unloaded_latency(spec, w)
+        assert ul < sum(durs.values())
+        hidden = sum(durs.values()) - ul
+        assert hidden >= min(durs["write_net[0]"] + durs["write_cpu[0]"],
+                             durs["compute[1]"]) - 1e-12
 
     def test_variant_ordering_on_io_heavy_workload(self):
         """Offloading, then RDMA, each cut the unloaded path; the wasm
@@ -165,11 +342,12 @@ class TestCrossExecutorParity:
     def test_des_zero_contention_matches_unloaded(self, system):
         """A warm invocation walked by the DES with effectively infinite
         resources completes in exactly `unloaded_latency` — for every
-        variant, over the whole suite (one deployed copy of each)."""
-        sim = DensitySimulator(system, len(W.SUITE), seed=0,
+        variant, over the whole registry (one deployed copy of each,
+        multi-I/O scenarios included)."""
+        sim = DensitySimulator(system, len(W.REGISTRY), seed=0,
                                duration_s=5.0, warmup_s=0.0,
                                cores=4096, backend_workers=4096,
-                               nodes=1, mem_gb=1024.0)
+                               nodes=1, mem_gb=1024.0, suite=W.REGISTRY)
         for fn in sim.functions:
             inst = sim._spawn(fn)
             assert inst is not None
@@ -186,18 +364,29 @@ class TestCrossExecutorParity:
         """The threaded runtime reports exactly the plan's breakdown
         groups, in an order consistent with the plan's edges — cold and
         warm."""
+        self._check(system, "WEB")
+
+    @pytest.mark.parametrize("system", ["baseline", "nexus"])
+    @pytest.mark.parametrize("wname", list(W.SCENARIOS))
+    def test_threaded_breakdown_multi_io(self, system, wname):
+        """Same contract on the multi-GET/multi-PUT scenario plans."""
+        self._check(system, wname)
+
+    @staticmethod
+    def _check(system, wname):
         spec = SYSTEMS[system]
+        w = W.REGISTRY[wname]
         node = WorkerNode(system)
         try:
-            node.deploy("WEB")
-            node.seed_input("WEB")
-            cold = node.invoke("WEB").result(timeout=60)
-            warm = node.invoke("WEB").result(timeout=60)
+            node.deploy(wname)
+            node.seed_input(wname)
+            cold = node.invoke(wname).result(timeout=60)
+            warm = node.invoke(wname).result(timeout=60)
         finally:
             node.shutdown()
         assert cold.cold and not warm.cold
         for res, cold_flag in ((cold, True), (warm, False)):
-            plan = compile_plan(spec, cold=cold_flag)
+            plan = compile_plan(spec, w.profile, cold=cold_flag)
             got = [k for k in res.breakdown if k != "vm_busy"]
             assert set(got) == set(plan.group_names()), (system, cold_flag)
             # completion order respects every group-level edge
@@ -207,8 +396,41 @@ class TestCrossExecutorParity:
                     assert pos[d] < pos[g], (system, cold_flag, d, g)
 
     def test_both_executors_interpret_the_same_object(self):
-        """compile_plan is cached: the DES and the threaded runtime
-        literally share the plan instance."""
+        """compile_plan is shape-cached: the DES and the threaded
+        runtime literally share the plan instance."""
         sim = DensitySimulator("nexus", 1, duration_s=1.0)
-        assert sim._plans[True] is compile_plan(SYSTEMS["nexus"], True)
-        assert sim._plans[False] is compile_plan(SYSTEMS["nexus"], False)
+        fn = sim.functions[0]
+        base = fn.split("#")[0]
+        for cold in (False, True):
+            p, _, _ = sim._plan_walk(base, cold)
+            assert p is compile_plan(SYSTEMS["nexus"],
+                                     W.SUITE[base].profile, cold)
+
+    def test_phase_group_lifting(self):
+        assert phase_group("fetch_cpu[3]") == "fetch[3]"
+        assert phase_group("write_net[0]") == "write[0]"
+        assert phase_group("compute[1]") == "compute[1]"
+        assert phase_group("restore") == "restore"
+
+
+# --------------------------------------------------- profile declarations
+
+class TestIOProfile:
+    def test_shape_normalizes_later_prefetch_flags(self):
+        a = IOProfile((Get(MB_ := 1 << 20), Get(MB_, prefetchable=True),
+                       ComputeSegment(1.0), Put(MB_)))
+        b = IOProfile((Get(MB_), Get(MB_, prefetchable=False),
+                       ComputeSegment(1.0), Put(MB_)))
+        assert a.shape == b.shape      # only the first GET can prefetch
+
+    def test_effective_downgrades_missing_hints(self):
+        from repro.core.hints import InputHint
+        prof = IOProfile.single(1.0, 1.0, 10.0)
+        eff = prof.effective(())
+        assert not eff.gets[0].prefetchable
+        eff = prof.effective((InputHint("in", "k", 123),))
+        assert eff.gets[0].prefetchable
+
+    def test_rejects_junk_ops(self):
+        with pytest.raises(TypeError):
+            IOProfile(("get",))
