@@ -6,10 +6,24 @@ cluster simulator (same cost model as the threaded runtime; §6 setup:
 arrivals) and reports the density knee plus CPU/memory utilization at
 the baseline's largest sustainable scale (the paper's common operating
 point comparison).
+
+The PlanProgram DES (ISSUE 3) makes the previously-unaffordable *full
+matrix* routine, so beyond the Fig 6 reproduction this bench now runs
+all 7 system variants x multiple seeds x arrival patterns (Poisson,
+Azure-like MMPP, heavy-burst, diurnal), each `find_density` search
+binary-refined past the coarse step, fanned out over the machine's
+cores. Results land in ``results/density.json``: the paper figure
+under ``density``/``gains``/``operating_point`` (unchanged keys) and
+the matrix under ``matrix``/``matrix_summary``.
 """
 from __future__ import annotations
 
+import os
+import time
+from concurrent.futures import ProcessPoolExecutor
+
 from repro.core.des import DensitySimulator, find_density
+from repro.core.plan import SYSTEMS
 
 from benchmarks.common import pct, save_json, table
 
@@ -19,23 +33,61 @@ from benchmarks.common import pct, save_json, table
 SYSTEMS_ORDER = ("baseline", "nexus-tcp", "nexus-prefetch-only",
                  "nexus-async", "nexus")
 
+#: the full matrix covers every variant, sdk-only and wasm included
+ALL_SYSTEMS = tuple(SYSTEMS)
+
+SEEDS = (1, 2, 3)
+
+
+def _search(args) -> tuple[tuple, int, list]:
+    (system, seed, pattern, duration, step, refine_to) = args
+    best, results = find_density(
+        system, lo=160, hi=800, step=step, seed=seed,
+        refine_to=refine_to, duration_s=duration, warmup_s=10.0,
+        arrival_pattern=pattern)
+    probes = [{"n": r.n_functions,
+               "slowdown": round(r.geomean_slowdown(), 2),
+               "cpu": round(r.cpu_util, 3), "mem": round(r.mem_util, 3),
+               "cold": r.cold_starts, "pass": r.meets_slo()}
+              for r in results]
+    return (system, seed, pattern), best, probes
+
 
 def run(quick: bool = False) -> dict:
-    duration = 45.0 if quick else 60.0
+    duration = 30.0 if quick else 60.0
     step = 40 if quick else 20
-    sweep: dict[str, list] = {}
-    density: dict[str, int] = {}
-    for system in SYSTEMS_ORDER:
-        best, results = find_density(system, lo=160, hi=800, step=step,
-                                     seed=1, duration_s=duration,
-                                     warmup_s=10.0)
-        density[system] = best
-        sweep[system] = [
-            {"n": r.n_functions, "slowdown": round(r.geomean_slowdown(), 2),
-             "cpu": round(r.cpu_util, 3), "mem": round(r.mem_util, 3),
-             "cold": r.cold_starts}
-            for r in results]
+    refine_to = 8 if quick else 2
+    patterns = ("azure", "poisson") if quick \
+        else ("azure", "poisson", "bursty", "diurnal")
 
+    # ------------------------- the full matrix: system x seed x pattern
+    jobs = [(s, seed, pat, duration, step, refine_to)
+            for s in ALL_SYSTEMS for seed in SEEDS for pat in patterns]
+    workers = min(os.cpu_count() or 1, len(jobs))
+    t0 = time.time()
+    with ProcessPoolExecutor(max_workers=workers) as pool:
+        found = list(pool.map(_search, jobs))
+    sweep_wall = time.time() - t0
+
+    matrix: dict[str, dict] = {}
+    sweep: dict[str, list] = {}
+    for (system, seed, pattern), best, probes in found:
+        matrix.setdefault(pattern, {}).setdefault(system, {})[seed] = best
+        if pattern == "azure" and seed == SEEDS[0]:
+            sweep[system] = probes          # Fig 6a probe trajectories
+
+    summary = []
+    for pattern in patterns:
+        for system in ALL_SYSTEMS:
+            ds = [matrix[pattern][system][seed] for seed in SEEDS]
+            summary.append({
+                "pattern": pattern, "system": system,
+                "density_mean": round(sum(ds) / len(ds), 1),
+                "density_min": min(ds), "density_max": max(ds)})
+
+    # ------------------------------- Fig 6a: paper ordering, azure mix
+    density = {s: round(sum(matrix["azure"][s][sd] for sd in SEEDS)
+                        / len(SEEDS)) for s in ALL_SYSTEMS}
     rows = [{"system": s, "density": density[s],
              "gain_%": round((density[s] / max(density["baseline"], 1) - 1)
                              * 100, 1)}
@@ -45,7 +97,7 @@ def run(quick: bool = False) -> dict:
     n0 = density["baseline"]
     op_rows = []
     for s in SYSTEMS_ORDER:
-        r = DensitySimulator(s, n0, seed=1, duration_s=duration,
+        r = DensitySimulator(s, n0, seed=SEEDS[0], duration_s=duration,
                              warmup_s=10.0).run()
         op_rows.append({"system": s, "n": n0,
                         "cpu_util": round(r.cpu_util, 3),
@@ -57,19 +109,36 @@ def run(quick: bool = False) -> dict:
         r["mem_saving_%"] = round(pct(r["mem_util"], base_mem), 1)
 
     print(table(rows, ["system", "density", "gain_%"],
-                title="Fig 6a: deployment density "
+                title="Fig 6a: deployment density, azure arrivals, "
+                      f"mean of seeds {SEEDS} "
                       "(paper: 320 / 380 / 380 / 440 -> +18%/+18%/+37%)"))
     print()
     print(table(op_rows, ["system", "n", "cpu_util", "cpu_saving_%",
                           "mem_util", "mem_saving_%"],
                 title=f"Fig 6b/6c at the common operating point n={n0} "
                       "(paper @180: CPU -35/-36/-44%, mem -36/-40/-31%)"))
+    print()
+    print(table(summary, ["pattern", "system", "density_mean",
+                          "density_min", "density_max"],
+                title=f"full matrix: {len(ALL_SYSTEMS)} variants x "
+                      f"{len(SEEDS)} seeds x {len(patterns)} patterns "
+                      f"({len(jobs)} density searches, "
+                      f"{sweep_wall:.0f}s on {workers} workers)"))
 
     payload = {"density": density, "gains": rows, "sweep": sweep,
-               "operating_point": op_rows}
+               "operating_point": op_rows,
+               "matrix": matrix, "matrix_summary": summary,
+               "sweep_wall_s": round(sweep_wall, 1),
+               "workers": workers,
+               "config": {"duration_s": duration, "step": step,
+                          "refine_to": refine_to, "seeds": list(SEEDS),
+                          "patterns": list(patterns)}}
     save_json("density", payload)
     return payload
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    run(quick=ap.parse_args().quick)

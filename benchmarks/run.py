@@ -23,14 +23,17 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (cold_start, cpu_cycles, density, faasm_gap,
-                            memory_footprint, warm_path)
+                            memory_footprint, sim_throughput, warm_path)
 
     benches = [
         ("cpu_cycles (Fig 2)", cpu_cycles.run, {}),
         ("memory_footprint (Fig 3/10/11)", memory_footprint.run, {}),
         ("warm_path (Fig 7/8/9)", warm_path.run, {}),
         ("cold_start (Fig 12/13)", cold_start.run, {}),
-        ("density (Fig 6)", density.run, {"quick": args.quick}),
+        ("sim_throughput (DES engine)", sim_throughput.run,
+         {"quick": args.quick}),
+        ("density (Fig 6 + full matrix)", density.run,
+         {"quick": args.quick}),
         ("faasm_gap (Fig 14)", faasm_gap.run, {}),
     ]
     roofline_path = os.path.join(RESULTS_DIR, "roofline.jsonl")

@@ -1,0 +1,163 @@
+"""DES throughput — PlanProgram engine vs the pre-refactor walker.
+
+The density experiment's cost is simulator throughput: Fig 6 needs a
+7-variant x multi-seed x high-n sweep of minutes-long virtual runs.
+This benchmark is the first point in that perf trajectory
+(``results/sim_throughput.json``): simulated invocations/sec and
+events/sec at the paper-scale n=400 density point, for
+
+* ``engine="legacy"`` — the pre-refactor hot path, preserved verbatim
+  (per-invocation closure graphs, name-keyed dicts, O(V) successor
+  scans, heap-loaded arrivals, heap-routed zero-delay events);
+* ``engine="program"`` — the flat PlanProgram interpreter (indegree
+  countdown, index-coded events, batched arrivals, memoized duration
+  vectors), bit-for-bit identical output (`tests/test_des.py` goldens);
+
+plus the end-to-end number the refactor buys: aggregate simulated
+invocations/sec of the previously-unaffordable 7-variant sweep slice,
+run the old way (serial, legacy engine) vs the new way (program engine
+across all cores). The ≥10x target applies to the sweep: per-run
+engine speedup x core-level parallelism; a single run's speedup is
+bounded by the event-heap floor (~7 heap events per invocation).
+"""
+from __future__ import annotations
+
+import gc
+import os
+import time
+from concurrent.futures import ProcessPoolExecutor
+
+from repro.core.des import DensitySimulator
+from repro.core.plan import SYSTEMS
+
+from benchmarks.common import save_json, table
+
+TARGET_SPEEDUP = 10.0
+N_FUNCTIONS = 400
+
+
+def _timed_run(system: str, engine: str, n: int, duration_s: float,
+               seed: int = 1) -> dict:
+    """One simulation, timed around `run()` only (setup excluded for
+    both engines alike), garbage collector paused like any serious DES."""
+    sim = DensitySimulator(system, n, seed=seed, duration_s=duration_s,
+                           warmup_s=duration_s / 6.0, engine=engine)
+    gc_was = gc.isenabled()
+    gc.disable()
+    try:
+        t0 = time.perf_counter()
+        result = sim.run()
+        wall = time.perf_counter() - t0
+    finally:
+        if gc_was:
+            gc.enable()
+    return {"system": system, "engine": engine, "n": n,
+            "duration_s": duration_s, "wall_s": wall,
+            "completed": result.completed,
+            "events": sim.loop.events_scheduled,
+            "inv_per_s": result.completed / wall,
+            "events_per_s": sim.loop.events_scheduled / wall}
+
+
+def _best_of(trials: int, *args) -> dict:
+    runs = [_timed_run(*args) for _ in range(trials)]
+    return min(runs, key=lambda r: r["wall_s"])
+
+
+def _sweep_job(args) -> tuple[int, float]:
+    system, engine, n, duration, seed = args
+    r = _timed_run(system, engine, n, duration, seed=seed)
+    return r["completed"], r["wall_s"]
+
+
+def run(quick: bool = False) -> dict:
+    duration = 20.0 if quick else 45.0
+    trials = 2 if quick else 3
+    systems = list(SYSTEMS)
+
+    # ---- per-run engine comparison at the n=400 density point
+    per_run = {}
+    for engine in ("legacy", "program"):
+        rows = [_best_of(trials, s, engine, N_FUNCTIONS, duration)
+                for s in ("baseline", "nexus")]
+        per_run[engine] = rows
+    speedup_per_run = {
+        row_p["system"]: row_p["inv_per_s"] / row_l["inv_per_s"]
+        for row_p, row_l in zip(per_run["program"], per_run["legacy"])}
+
+    # ---- the sweep slice: all 7 variants x 2 seeds at n=400.
+    # Old way: the pre-refactor bench loop — serial, one process.
+    # New way: program engine fanned out over the machine's cores.
+    # Both sides are end-to-end wall clock (simulator construction and
+    # pool startup included).
+    seeds = (1, 2)
+    jobs = [(s, "program", N_FUNCTIONS, duration, sd)
+            for s in systems for sd in seeds]
+    workers = min(os.cpu_count() or 1, len(jobs))
+    t0 = time.perf_counter()
+    with ProcessPoolExecutor(max_workers=workers) as pool:
+        done = list(pool.map(_sweep_job, jobs))
+    new_wall = time.perf_counter() - t0
+    new_inv = sum(c for c, _ in done)
+
+    t0 = time.perf_counter()
+    serial = [_sweep_job((s, "legacy", N_FUNCTIONS, duration, sd))
+              for s in systems for sd in seeds]
+    old_wall = time.perf_counter() - t0
+    old_inv = sum(c for c, _ in serial)
+
+    sweep = {
+        "systems": systems, "seeds": list(seeds), "n": N_FUNCTIONS,
+        "duration_s": duration, "workers": workers,
+        "prerefactor_serial": {"invocations": old_inv, "wall_s": old_wall,
+                               "inv_per_s": old_inv / old_wall},
+        "program_parallel": {"invocations": new_inv, "wall_s": new_wall,
+                             "inv_per_s": new_inv / new_wall},
+    }
+    speedup_sweep = (sweep["program_parallel"]["inv_per_s"]
+                     / sweep["prerefactor_serial"]["inv_per_s"])
+
+    rows = []
+    for engine in ("legacy", "program"):
+        for r in per_run[engine]:
+            rows.append({"engine": engine, "system": r["system"],
+                         "inv/s": round(r["inv_per_s"]),
+                         "events/s": round(r["events_per_s"]),
+                         "wall_s": round(r["wall_s"], 2)})
+    print(table(rows, ["engine", "system", "inv/s", "events/s", "wall_s"],
+                title=f"DES throughput at n={N_FUNCTIONS} "
+                      f"({duration:.0f}s virtual)"))
+    print()
+    print(table([{"mode": "pre-refactor (serial, legacy engine)",
+                  "inv/s": round(old_inv / old_wall),
+                  "wall_s": round(old_wall, 1)},
+                 {"mode": f"PlanProgram x{workers} workers",
+                  "inv/s": round(new_inv / new_wall),
+                  "wall_s": round(new_wall, 1)}],
+                ["mode", "inv/s", "wall_s"],
+                title="7-variant x 2-seed sweep slice (the workload the "
+                      "rearchitecture is for)"))
+    print(f"\nper-run engine speedup: "
+          + ", ".join(f"{s} {v:.1f}x" for s, v in speedup_per_run.items()))
+    print(f"sweep speedup: {speedup_sweep:.1f}x "
+          f"(target >= {TARGET_SPEEDUP:.0f}x; {workers} cores)")
+
+    payload = {
+        "n_functions": N_FUNCTIONS, "duration_s": duration,
+        "cpu_count": os.cpu_count(),
+        "per_run": per_run,
+        "speedup_per_run": speedup_per_run,
+        "sweep": sweep,
+        "speedup_sweep": speedup_sweep,
+        "target_speedup": TARGET_SPEEDUP,
+        "meets_target": speedup_sweep >= TARGET_SPEEDUP,
+    }
+    save_json("sim_throughput", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    run(quick=ap.parse_args().quick)

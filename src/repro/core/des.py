@@ -6,71 +6,226 @@ so (exactly like the warm/cold microbenchmarks feed the paper's Fig 7/12)
 this simulator executes the *same cost model* in virtual time over a
 cluster of worker nodes. Structure comes from exactly one place: the
 `plan.PhasePlan` compiled from the system variant and each workload's
-declared `IOProfile` (N GETs/segments/PUTs, not a fixed shape). The
-walker in `_execute` maps the plan's resource tags onto simulated
-resources —
+declared `IOProfile` — lowered once per (variant, shape, coldness) into
+a flat `plan.PlanProgram` whose phases are integer indices:
 
-* ``guest_core`` / ``backend_worker`` — one of the node's FIFO cores
-  (guest vCPU and backend work contend equally); ``backend_worker``
-  phases additionally hold a slot of the shared daemon's finite
-  connection pool for their backend group (released per the transport's
-  kernel-bypass rule);
-* ``wire`` / ``none`` — pure virtual latency;
+* ``on_core[i]`` phases occupy one of the node's FIFO cores (guest vCPU
+  and backend work contend equally); backend-group heads additionally
+  hold a slot of the shared daemon's finite connection pool until the
+  program's ``releases_slot`` point (per the transport's kernel-bypass
+  rule);
+* everything else is pure virtual latency;
 
-and fires the plan's release/response barriers where they land. The
-threaded runtime interprets the identical graph with real threads, so
-variant behaviour cannot drift between the two executors; per-phase
-durations come from `plan.phase_durations` — the same calibration.
+and the program's release/response barrier indices fire where the plan
+put them. Per-invocation state is a preallocated indegree-countdown
+vector plus a memoized per-(function, coldness) duration vector — no
+closure graphs, no name hashing, no O(V) successor scans. The threaded
+runtime drives its walker off the identical lowered program, so variant
+behaviour cannot drift between the two executors; per-phase durations
+come from `plan.duration_vector` — the same calibration.
+
+``engine="legacy"`` keeps the pre-refactor PhasePlan-walking
+interpreter: `benchmarks/sim_throughput.py` measures the speedup
+against it and the parity goldens assert both engines produce
+bit-for-bit identical latencies.
 
 SLO (paper): p99 latency < 5x the function's unloaded median; density =
 max deployed functions whose geometric-mean slowdown meets the SLO.
 """
 from __future__ import annotations
 
-import heapq
-import itertools
 import math
-from collections import defaultdict, deque
+from collections import deque
 from dataclasses import dataclass
+from heapq import heappop, heappush
 
 from repro.core import fabric as F
 from repro.core import plan as P
 from repro.core import workloads as W
-from repro.core.plan import SYSTEMS, SystemSpec, compile_plan
+from repro.core.plan import (SYSTEMS, PlanProgram, SystemSpec, compile_plan,
+                             compile_program)
+from repro.core.trace import ArrivalSpec, generate_arrivals, sample_rates
 from repro.core.transport import TRANSPORTS
+
+_INF = math.inf
 
 
 # --------------------------------------------------------------- event loop
 
 class EventLoop:
-    def __init__(self):
+    """Virtual-time event loop, rebuilt for throughput.
+
+    Three queues, one shared sequence counter so the relative order of
+    same-timestamp events is exactly the classic heap-only semantics:
+
+    * a binary heap for timed events — callback records
+      ``(t, seq, cb, a, b)`` dispatched as ``cb(a, b)``, or hot records
+      ``(t, seq, run, code)`` (distinguished by length) handed to the
+      owner's ``hot`` handler;
+    * a FIFO for zero-delay events (`defer`): an O(1) deque append
+      instead of an O(log n) heap push — a zero-delay event scheduled
+      at ``now`` outranks every *later-scheduled* event and yields to
+      any same-time heap event with a smaller sequence number, which is
+      precisely what pushing it onto the heap would have done;
+    * a pre-sorted arrival feed (`feed`): batched arrival scheduling —
+      tens of thousands of arrivals never enter the heap at all, so the
+      heap stays shallow for everything else;
+    * an optional constant-delay timer deque (`timerq`): fire times are
+      monotone by construction, so these timers also stay out of the
+      heap.
+    """
+
+    __slots__ = ("_q", "_pending", "_seq", "now", "_feed", "_feed_cb", "_fi",
+                 "hot", "timerq", "timer_cb", "classic")
+
+    def __init__(self, classic: bool = False):
         self._q: list = []
-        self._seq = itertools.count()
+        self._pending: deque = deque()
+        self._seq = 0
         self.now = 0.0
+        self._feed: list = []
+        self._feed_cb = None
+        self._fi = 0
+        #: handler for sentinel records (callback `None`): the owner's
+        #: inlined hot path, called as ``hot(a, b)``. Callback records
+        #: dispatch ``cb(a, b)`` as usual.
+        self.hot = None
+        #: optional constant-delay timer deque: records
+        #: ``(t, seq, a, b)`` with monotone fire times, dispatched as
+        #: ``timer_cb(a, b)`` in global (t, seq) order — the program
+        #: engine's keep-alive retirements live here instead of the
+        #: heap (both `run` and the fused `_run_hot` drain it)
+        self.timerq = None
+        self.timer_cb = None
+        #: pre-refactor plumbing: zero-delay events go through the heap
+        #: like they always did. The legacy engine runs in this mode so
+        #: `benchmarks/sim_throughput.py` measures the true pre-refactor
+        #: cost, not a baseline quietly sped up by the new loop. Event
+        #: order is identical either way (same (t, seq) total order).
+        self.classic = classic
 
-    def at(self, t: float, cb, *args) -> None:
-        heapq.heappush(self._q, (t, next(self._seq), cb, args))
+    @property
+    def events_scheduled(self) -> int:
+        """Total events scheduled so far (heap + zero-delay + arrivals
+        consumed) — the denominator of the events/sec throughput
+        metric, maintained for free by the seq counter."""
+        return self._seq + self._fi
 
-    def after(self, dt: float, cb, *args) -> None:
-        self.at(self.now + dt, cb, *args)
+    def at(self, t: float, cb, a=None, b=None) -> None:
+        self._seq = s = self._seq + 1
+        heappush(self._q, (t, s, cb, a, b))
+
+    def after(self, dt: float, cb, a=None, b=None) -> None:
+        if dt <= 0.0:
+            self.defer(cb, a, b)
+        else:
+            self._seq = s = self._seq + 1
+            heappush(self._q, (self.now + dt, s, cb, a, b))
+
+    def defer(self, cb, a=None, b=None) -> None:
+        """Schedule at the current instant (after already-queued
+        same-time events)."""
+        self._seq = s = self._seq + 1
+        if self.classic:
+            heappush(self._q, (self.now, s, cb, a, b))
+        else:
+            self._pending.append((s, cb, a, b))
+
+    def feed(self, events: list, cb) -> None:
+        """Attach a time-sorted ``[(t, arg), ...]`` stream delivered as
+        ``cb(arg, None)`` — arrivals bypass the heap entirely."""
+        self._feed = events
+        self._feed_cb = cb
+        self._fi = 0
 
     def run(self, until: float) -> None:
-        while self._q and self._q[0][0] <= until:
-            t, _, cb, args = heapq.heappop(self._q)
-            self.now = t
-            cb(*args)
+        q = self._q
+        pending = self._pending
+        hot = self.hot
+        timers = self.timerq if self.timerq is not None else ()
+        tcb = self.timer_cb
+        feed, fcb = self._feed, self._feed_cb
+        fi, nf = self._fi, len(self._feed)
+        t_f = feed[fi][0] if fi < nf else _INF
+        while True:
+            if pending:
+                if t_f <= self.now:            # exact tie: arrivals were
+                    self.now = t_f             # scheduled first -> win
+                    arg = feed[fi][1]
+                    fi += 1
+                    t_f = feed[fi][0] if fi < nf else _INF
+                    fcb(arg, None)
+                    continue
+                # smallest seq among same-time candidates wins
+                win = pending[0][0]
+                src = 0
+                if q and q[0][0] <= self.now and q[0][1] < win:
+                    win = q[0][1]
+                    src = 1
+                if timers and timers[0][0] <= self.now \
+                        and timers[0][1] < win:
+                    src = 2
+                if src == 1:
+                    e = heappop(q)
+                    self.now = e[0]
+                    if len(e) == 4:            # hot record (run, code)
+                        hot(e[2], e[3])
+                    else:
+                        e[2](e[3], e[4])
+                    continue
+                if src == 2:
+                    e = timers.popleft()
+                    self.now = e[0]
+                    tcb(e[2], e[3])
+                    continue
+                e = pending.popleft()
+                if len(e) == 3:                # hot record
+                    hot(e[1], e[2])
+                else:
+                    e[1](e[2], e[3])
+                continue
+            t_q = q[0][0] if q else _INF
+            t_r = timers[0][0] if timers else _INF
+            if t_f <= t_q and t_f <= t_r:      # arrivals win exact ties
+                if t_f > until:
+                    break
+                self.now = t_f
+                arg = feed[fi][1]
+                fi += 1
+                t_f = feed[fi][0] if fi < nf else _INF
+                fcb(arg, None)
+                continue
+            if t_q < t_r or (t_q == t_r and q[0][1] < timers[0][1]):
+                if t_q > until:
+                    break
+                e = heappop(q)
+                self.now = e[0]
+                if len(e) == 4:                # hot record (run, code)
+                    hot(e[2], e[3])
+                else:
+                    e[2](e[3], e[4])
+                continue
+            if t_r > until:
+                break
+            e = timers.popleft()
+            self.now = e[0]
+            tcb(e[2], e[3])
+        self._fi = fi
         self.now = until
 
 
 # --------------------------------------------------------------- resources
 
 class CorePool:
-    """FIFO slot scheduler (cores, backend connection pool, ...).
-
-    `request(d, cb)` = hold one slot for d seconds then call cb.
-    `acquire(cb)` / `release()` = explicit hold across nested waits
-    (e.g. a backend connection held while its CPU slice queues).
+    """FIFO slot scheduler (cores, backend connection pool, ...) — the
+    legacy engine's resource model, preserved verbatim (closure per
+    hold, per-transition `_account` integrals). The program engine
+    bypasses it entirely: its pool state is the `SimNode.cpu_hot` /
+    `be_hot` lists plus waiter deques, manipulated inline by the hot
+    path with clipped-hold-time accounting.
     """
+
+    __slots__ = ("loop", "cores", "busy", "_wait", "busy_integral", "_last")
 
     def __init__(self, loop: EventLoop, slots: int):
         self.loop = loop
@@ -81,14 +236,15 @@ class CorePool:
         self._last = 0.0
 
     def _account(self):
-        self.busy_integral += self.busy * (self.loop.now - self._last)
-        self._last = self.loop.now
+        now = self.loop.now
+        self.busy_integral += self.busy * (now - self._last)
+        self._last = now
 
     def acquire(self, granted_cb) -> None:
         self._account()
         if self.busy < self.cores:
             self.busy += 1
-            self.loop.after(0.0, granted_cb)
+            self.loop.defer(granted_cb)
         else:
             self._wait.append(granted_cb)
 
@@ -97,13 +253,13 @@ class CorePool:
         self.busy -= 1
         if self._wait:
             self.busy += 1
-            self.loop.after(0.0, self._wait.popleft())
+            self.loop.defer(self._wait.popleft())
 
     def request(self, duration: float, done_cb) -> None:
-        def _go():
+        def _go(_a=None, _b=None):
             self.loop.after(duration, _done)
 
-        def _done():
+        def _done(_a=None, _b=None):
             self.release()
             done_cb()
 
@@ -123,6 +279,9 @@ class SimInstance:
 
 
 class SimNode:
+    __slots__ = ("cpu", "mem_cap", "mem_used", "mem_peak", "vms", "backend",
+                 "cpu_hot", "cpu_wait", "be_hot", "be_wait")
+
     def __init__(self, loop: EventLoop, cores: int, mem_mb: float,
                  backend_base_mb: float, backend_workers: int):
         self.cpu = CorePool(loop, cores)
@@ -134,6 +293,61 @@ class SimNode:
         # worker pool — a real contention point at high density (§7.2.1
         # notes host-user cycles rise 71% as work moves into it).
         self.backend = CorePool(loop, backend_workers)
+        # program-engine pool state: [busy, slots, busy_integral] plus a
+        # FIFO of (run, phase) waiters — list indexing beats attribute
+        # dispatch at hot-path rates. The legacy engine keeps the
+        # CorePool objects above; one simulator uses exactly one of the
+        # two representations.
+        self.cpu_hot = [0, cores, 0.0]
+        self.cpu_wait: deque = deque()
+        self.be_hot = [0, backend_workers, 0.0]
+        self.be_wait: deque = deque()
+
+
+# --------------------------------------------- program-engine hot records
+#
+# One in-flight invocation is a flat list (no attribute protocol on the
+# hot path); event payloads are (run, phase_index | flags). Slot layout:
+
+_R_NEED = 0        # indegree countdown (preallocated, one copy per run)
+_R_DURS = 1        # duration vector, program-index aligned
+_R_SUCC = 2        # successor *code* lists (+ virtual root entry)
+_R_OPS = 3         # per-phase opcode at ready time (see _OP_*)
+_R_OPS2 = 4        # per-phase opcode after its slot grant
+_R_CPU = 5         # node cpu_hot [busy, slots, busy_integral]
+_R_CPUW = 6        # node cpu waiter FIFO
+_R_BE = 7          # node be_hot [busy, slots, busy_integral]
+_R_BEW = 8         # node backend waiter FIFO
+_R_LATS = 9        # the function's latency list (appended at respond)
+_R_INST = 10       # SimInstance
+_R_T = 11          # arrival time
+
+# Event codes: phase index | static flags. The per-phase *code* is
+# precomputed in the template (`base_code`), so barrier and slot-drop
+# tests are single bit-tests on the event word instead of array
+# lookups; _EXEC/_CORE are the only bits set at runtime.
+_PI_MASK = (1 << 20) - 1
+_EXEC = 1 << 20    # backend slot already held: run the execute step
+_CORE = 1 << 21    # phase finished on a node core: release it first
+_SLOTREL = 1 << 22  # phase drops its backend-group slot when done
+_RELB = 1 << 23    # release barrier fires when this phase completes
+_RESPB = 1 << 24   # respond barrier fires when this phase completes
+
+# phase opcodes: what starting a ready phase does. Folded statically
+# per (program, duration vector) — the zero-duration test, the resource
+# class, and the group-head test all vanish from the hot path.
+_OP_SLOT = 0       # backend-group head: take a slot, then _EXEC
+_OP_ZERO = 1       # zero duration: complete via the zero-delay FIFO
+_OP_CORE = 2       # timed, on a node core
+_OP_WIRE = 3       # timed, pure latency
+
+# per-function record (one dict hit per arrival instead of five):
+_F_IDLE = 0        # warm instances
+_F_BACKLOG = 1     # queued arrival times (cluster memory-full)
+_F_WARM = 2        # warm (prog, template) bundle, resolved lazily
+_F_COLD = 3        # cold bundle, resolved lazily
+_F_LATS = 4        # recorded latencies
+_F_BASE = 5        # workload name (fn minus the #i suffix)
 
 
 # -------------------------------------------------------------- simulator
@@ -180,12 +394,20 @@ class DensitySimulator:
                  duration_s: float = 90.0, warmup_s: float = 15.0,
                  mean_rate: float = 1.6, backend_workers: int = 64,
                  rate_sigma: float = 1.0, max_vms_per_node: int = 280,
-                 suite: dict[str, W.Workload] | None = None):
+                 suite: dict[str, W.Workload] | None = None,
+                 arrival_pattern: str | W.ArrivalPattern = "azure",
+                 engine: str = "program"):
+        if engine not in ("program", "legacy"):
+            raise ValueError(f"unknown engine {engine!r}")
         self.spec: SystemSpec = SYSTEMS[system]
+        self.engine = engine
         self.n_functions = n_functions
         self.duration_s = duration_s
         self.warmup_s = warmup_s
-        self.loop = EventLoop()
+        self.loop = EventLoop(classic=(engine == "legacy"))
+        #: events after this instant can never run (`run` drains up to
+        #: it); the program engine skips scheduling beyond it
+        self._horizon = _INF
         self.max_vms_per_node = max_vms_per_node
         backend_mb = (0.0 if self.spec.coupled else F.BACKEND_BASE_MB)
         self.nodes = [SimNode(self.loop, cores, mem_gb * 1024, backend_mb,
@@ -193,11 +415,12 @@ class DensitySimulator:
                       for _ in range(nodes)]
         self.transport = TRANSPORTS[self.spec.transport]
         # one structural source of truth: the plan compiled from each
-        # workload's declared IOProfile, per coldness (+ the
-        # plan-derived lookups _execute needs, hoisted off the
-        # per-invocation hot path). Workloads sharing an I/O shape share
-        # the plan object (compile_plan caches on the shape).
+        # workload's declared IOProfile, per coldness — lowered to a
+        # PlanProgram + duration vector per (workload, coldness), built
+        # once and interpreted by every invocation. Workloads sharing
+        # an I/O shape share the program (compile caches on the shape).
         self._suite = suite if suite is not None else W.SUITE
+        self._progs: dict[tuple[str, bool], tuple[PlanProgram, tuple]] = {}
         self._walk: dict[tuple[str, bool], tuple] = {}
         self._durs: dict[tuple[str, bool], dict[str, float]] = {}
 
@@ -205,18 +428,34 @@ class DensitySimulator:
         names = list(self._suite)
         self.functions = [f"{names[i % len(names)]}#{i}"
                           for i in range(n_functions)]
-        self.workload = {f: self._suite[f.split('#')[0]]
+        self._base = {f: f.split("#")[0] for f in self.functions}
+        self.workload = {f: self._suite[self._base[f]]
                          for f in self.functions}
 
-        from repro.core.trace import ArrivalSpec, generate_arrivals, sample_rates
+        self.pattern = W.resolve_pattern(arrival_pattern)
         specs = sample_rates(self.functions, seed, mean_rate=mean_rate,
                              sigma=rate_sigma)
-        self.arrivals = {s.function: generate_arrivals(s, duration_s, seed)
+        self.arrivals = {s.function: generate_arrivals(
+                             s, duration_s, seed, pattern=self.pattern)
                          for s in specs}
 
-        self.idle: dict[str, list[SimInstance]] = defaultdict(list)
-        self.backlog: dict[str, deque] = defaultdict(deque)
-        self.latencies: dict[str, list[float]] = defaultdict(list)
+        self.idle: dict[str, list[SimInstance]] = {f: []
+                                                   for f in self.functions}
+        self.backlog: dict[str, deque] = {f: deque()
+                                          for f in self.functions}
+        self.latencies: dict[str, list[float]] = {f: [] for f in
+                                                  self.functions}
+        #: per-function hot record (see the _F_* layout) — shares the
+        #: idle/backlog/latency containers above
+        self._fnrec = {f: [self.idle[f], self.backlog[f], None, None,
+                           self.latencies[f], self._base[f]]
+                       for f in self.functions}
+        #: keep-alive retirements: the delay is one constant, so fire
+        #: times are monotone in schedule order — a deque IS the timer
+        #: wheel, and tens of thousands of 60s timers stay out of the
+        #: event heap (they used to dominate its depth)
+        self._retq: deque = deque()
+        self._free_runs: list = []         # recycled run records
         self.cold_starts = 0
         self.completed = 0
         self.rejected = 0
@@ -228,7 +467,54 @@ class DensitySimulator:
                         else F.BACKEND_PER_INSTANCE_MB)
                      for f in self.functions}
 
+        # sentinel-record handler + keep-alive timer source: the loop
+        # dispatches hot events and retirements identically to _run_hot
+        self.loop.hot = self._hot
+        self.loop.timerq = self._retq
+        self.loop.timer_cb = self._retire
+
     # ----------------------------------------------------------- cost model
+
+    def _program(self, base_name: str, cold: bool):
+        """(PlanProgram, run-record template) for one workload — the
+        program engine's whole structural + cost input, memoized. The
+        template is the invariant prefix of the flat run record (the
+        ``_R_*`` layout): (indegree, virtual_root_idx, durs, succ+,
+        on_core, acquires_slot, releases_slot+, release_idx,
+        respond_idx, roots). The successor/slot arrays carry one extra
+        *virtual* phase whose successors are the roots: an arrival
+        "completes" it, so invocation start reuses the hot block's
+        successor machinery verbatim."""
+        key = (base_name, cold)
+        bundle = self._progs.get(key)
+        if bundle is None:
+            w = self._suite[base_name]
+            prog = compile_program(
+                self.spec, w.profile, cold=cold,
+                kernel_bypass=self.transport.kernel_bypass)
+            durs = P.duration_vector(self.spec, w, cold)
+            timed = [(_OP_ZERO if d <= 0.0 else
+                      (_OP_CORE if oc else _OP_WIRE))
+                     for d, oc in zip(durs, prog.on_core)]
+            ops = tuple(_OP_SLOT if acq else t
+                        for acq, t in zip(prog.acquires_slot, timed))
+            code = [i
+                    | (_SLOTREL if prog.releases_slot[i] else 0)
+                    | (_RELB if i == prog.release_idx else 0)
+                    | (_RESPB if i == prog.respond_idx else 0)
+                    for i in range(len(prog.names))]
+            roots = set(prog.roots)
+            tmpl = (tuple(1 if i in roots else d
+                          for i, d in enumerate(prog.indegree)),
+                    len(prog.names), durs,
+                    tuple(tuple(code[s] for s in succs)
+                          for succs in prog.succ)
+                    + (tuple(code[r] for r in prog.roots),),
+                    ops, tuple(timed),
+                    tuple(code[r] for r in prog.roots))
+            bundle = (prog, tmpl)
+            self._progs[key] = bundle
+        return bundle
 
     def _durations(self, base_name: str, cold: bool) -> dict[str, float]:
         key = (base_name, cold)
@@ -239,7 +525,7 @@ class DensitySimulator:
 
     def _plan_walk(self, base_name: str, cold: bool) -> tuple:
         """(plan, group-head lookup, slot-release lookup) for one
-        workload's compiled plan — the DES's whole structural input."""
+        workload's compiled plan — the legacy walker's structural input."""
         key = (base_name, cold)
         if key not in self._walk:
             p = compile_plan(self.spec, self._suite[base_name].profile,
@@ -299,12 +585,20 @@ class DensitySimulator:
         inst.state = "warm"
         inst.expire_seq += 1
         self.idle[inst.fn].append(inst)
-        self.loop.after(self.KEEPALIVE_S, self._retire, inst,
-                        inst.expire_seq)
+        loop = self.loop
+        if self.engine == "program":
+            t = loop.now + self.KEEPALIVE_S
+            if t > self._horizon:
+                return  # unobservable: the loop drains before it fires
+            loop._seq = s = loop._seq + 1
+            self._retq.append((t, s, inst, inst.expire_seq))
+        else:           # pre-refactor: keep-alive timers in the heap
+            loop.after(self.KEEPALIVE_S, self._retire, inst,
+                       inst.expire_seq)
 
     # ------------------------------------------------------------ invocation
 
-    def _arrive(self, fn: str) -> None:
+    def _arrive(self, fn: str, _=None) -> None:
         idle = self.idle[fn]
         if idle:
             inst = idle.pop()
@@ -321,11 +615,408 @@ class DensitySimulator:
         self._execute(inst, self.loop.now, cold=True)
 
     def _execute(self, inst: SimInstance, t_arr: float, cold: bool) -> None:
-        """Walk the compiled plan in virtual time — the generic
-        interpreter. No per-variant branches: edges, resource tags,
-        backend groups, and barriers all come from the plan."""
+        if self.engine == "program":
+            rec = self._fnrec[inst.fn]
+            bundle = rec[_F_COLD] if cold else rec[_F_WARM]
+            if bundle is None:
+                bundle = self._program(rec[_F_BASE], cold)
+                rec[_F_COLD if cold else _F_WARM] = bundle
+            tmpl = bundle[1]
+            node = self.nodes[inst.node]
+            run = [list(tmpl[0]), tmpl[2], tmpl[3], tmpl[4], tmpl[5],
+                   node.cpu_hot, node.cpu_wait, node.be_hot, node.be_wait,
+                   rec[_F_LATS], inst, t_arr]
+            for c in tmpl[6]:              # root codes: zero-indegree
+                self._start(run, c)
+        else:
+            self._execute_legacy(inst, t_arr, cold)
+
+    # ------------------------------------------- PlanProgram engine (hot)
+    #
+    # Every dispatch discipline here mirrors the legacy walker exactly —
+    # that equivalence is what the bit-for-bit parity goldens pin:
+    # backend-slot *grants* are deferred one beat through the zero-delay
+    # FIFO (the slot itself moves synchronously), zero-duration phases
+    # complete through the FIFO, and a freed core goes to the oldest
+    # waiter whose completion is scheduled immediately.
+
+    def _start(self, run: list, code: int) -> None:
+        """Phase `code` (index | static flags) became ready: take its
+        backend-group slot if it heads one, then execute. Kept in
+        lockstep with the inlined blocks of `_run_hot`.
+
+        Pool accounting differs from the legacy `CorePool._account`
+        discipline in form, not substance: a granted core contributes
+        its hold time (clipped at the run horizon) to `busy_integral`
+        up front — one add per grant instead of an integral update on
+        every transition — and the backend pool tracks only occupancy
+        (its integral was write-only)."""
+        loop = self.loop
+        now = loop.now
+        op = run[_R_OPS][code & _PI_MASK]
+        if op == _OP_CORE:
+            # guest vCPU and backend work contend on node cores
+            state = run[_R_CPU]
+            if state[0] < state[1]:
+                state[0] += 1
+                d = run[_R_DURS][code & _PI_MASK]
+                end = now + d
+                hz = self._horizon
+                state[2] += d if end <= hz else hz - now
+                loop._seq = s = loop._seq + 1
+                heappush(loop._q, (end, s, run, code | _CORE))
+            else:
+                run[_R_CPUW].append((run, code))
+        elif op == _OP_WIRE:               # pure latency
+            loop._seq = s = loop._seq + 1
+            heappush(loop._q,
+                     (now + run[_R_DURS][code & _PI_MASK], s, run, code))
+        elif op == _OP_SLOT:               # backend-group head
+            state = run[_R_BE]
+            if state[0] < state[1]:
+                state[0] += 1
+                loop._seq = s = loop._seq + 1
+                loop._pending.append((s, run, code | _EXEC))
+            else:
+                run[_R_BEW].append((run, code))
+        else:                              # zero duration
+            loop._seq = s = loop._seq + 1
+            loop._pending.append((s, run, code))
+
+    def _hot(self, run: list, code: int) -> None:
+        """Dispatch one hot event record — the whole per-phase state
+        machine: EXEC (slot granted, start the work), CORE (phase
+        finished holding a core: free it, grant the oldest waiter),
+        then the phase-done logic (slot drop, barriers, indegree
+        countdown over the successor indices). `_run_hot` inlines this
+        same machine; the engine-parity test pins the two."""
+        loop = self.loop
+        now = loop.now
+        pi = code & _PI_MASK
+        if code & _EXEC:
+            op = run[_R_OPS2][pi]
+            if op == _OP_CORE:
+                state = run[_R_CPU]
+                if state[0] < state[1]:
+                    state[0] += 1
+                    d = run[_R_DURS][pi]
+                    end = now + d
+                    hz = self._horizon
+                    state[2] += d if end <= hz else hz - now
+                    loop._seq = s = loop._seq + 1
+                    heappush(loop._q, (end, s, run, (code ^ _EXEC) | _CORE))
+                else:
+                    run[_R_CPUW].append((run, code ^ _EXEC))
+            elif op == _OP_WIRE:
+                loop._seq = s = loop._seq + 1
+                heappush(loop._q,
+                         (now + run[_R_DURS][pi], s, run, code ^ _EXEC))
+            else:                          # zero duration
+                loop._seq = s = loop._seq + 1
+                loop._pending.append((s, run, code ^ _EXEC))
+            return
+        if code & _CORE:
+            state = run[_R_CPU]
+            state[0] -= 1
+            wait = run[_R_CPUW]
+            if wait:                       # hand the core to the oldest
+                state[0] += 1              # waiter, FIFO
+                run2, c2 = wait.popleft()
+                d = run2[_R_DURS][c2 & _PI_MASK]
+                end = now + d
+                hz = self._horizon
+                state[2] += d if end <= hz else hz - now
+                loop._seq = s = loop._seq + 1
+                heappush(loop._q, (end, s, run2, c2 | _CORE))
+        # ---------------------------------------------------- phase done
+        if code & _SLOTREL:
+            state = run[_R_BE]
+            state[0] -= 1
+            wait = run[_R_BEW]
+            if wait:
+                state[0] += 1
+                run2, c2 = wait.popleft()
+                loop._seq = s = loop._seq + 1
+                loop._pending.append((s, run2, c2 | _EXEC))
+        if code & _RELB:
+            self._release(run[_R_INST])
+        if code & _RESPB:
+            t_arr = run[_R_T]
+            if t_arr >= self.warmup_s:
+                run[_R_LATS].append(now - t_arr)
+            self.completed += 1
+        need = run[_R_NEED]
+        for sc in run[_R_SUCC][pi]:
+            si = sc & _PI_MASK
+            n = need[si] - 1
+            need[si] = n
+            if n == 0:                     # ready
+                self._start(run, sc)
+
+    def _run_hot(self, until: float) -> None:
+        """`EventLoop.run` + `_hot` + the arrival and release paths,
+        fused into one frame with queue, clock, and sequence state in
+        locals — the program engine's main loop (at this event rate the
+        attribute traffic of the split methods is the dominant cost).
+        Semantics are identical to driving `EventLoop.run` with
+        ``hot = self._hot``: the engine-parity test pins the two paths
+        against each other, and the goldens pin both against the
+        pre-refactor walker. Around any non-inlined call (generic
+        callbacks, the rare tie paths, backlog service) the local
+        seq/clock are synced back to the loop and reloaded.
+
+        Event sources, consumed in global (t, seq) order exactly as if
+        all shared one heap: the zero-delay FIFO (entries at `now`),
+        the heap, the keep-alive deque (constant delay => monotone fire
+        times), and the arrival feed (wins exact-time ties — arrivals
+        were scheduled first pre-refactor)."""
+        loop = self.loop
+        q = loop._q
+        pending = loop._pending
+        retq = self._retq
+        push, pop = heappush, heappop
+        now = loop.now
+        seq = loop._seq
+        feed = loop._feed
+        fi, nf = loop._fi, len(loop._feed)
+        inf = _INF
+        t_f = feed[fi][0] if fi < nf else inf
+        t_r = retq[0][0] if retq else inf   # cached retire-head time
+        fnrec = self._fnrec
+        nodes = self.nodes
+        spawn = self._spawn
+        warmup = self.warmup_s
+        keepalive = self.KEEPALIVE_S
+        hz = self._horizon
+        completed = 0
+        run = None
+        while True:
+            # ----- pick the next event (smallest (t, seq) across sources)
+            if pending:
+                # FIFO entries sit at `now`; only a same-time heap or
+                # retire record with a smaller seq, or an arrival at
+                # `now`, outranks the head (all ~never paths)
+                if t_f <= now:
+                    fn = feed[fi][1]
+                    fi += 1
+                    t_f = feed[fi][0] if fi < nf else inf
+                    loop._seq, loop.now = seq, now
+                    self._arrive(fn)
+                    seq = loop._seq
+                    continue
+                # smallest seq among same-time candidates wins
+                win = pending[0][0]
+                src = 0
+                if q and q[0][0] <= now and q[0][1] < win:
+                    win = q[0][1]
+                    src = 1
+                if t_r <= now and retq[0][1] < win:
+                    src = 2
+                if src == 1:
+                    e = pop(q)
+                    now = e[0]
+                    if len(e) == 4:
+                        run, code = e[2], e[3]
+                    else:
+                        loop._seq, loop.now = seq, now
+                        e[2](e[3], e[4])
+                        seq = loop._seq
+                        continue
+                elif src == 2:
+                    e = retq.popleft()
+                    t_r = retq[0][0] if retq else inf
+                    self._retire(e[2], e[3])
+                    continue
+                else:
+                    e = pending.popleft()
+                    if len(e) == 3:
+                        run, code = e[1], e[2]
+                    else:
+                        loop._seq, loop.now = seq, now
+                        e[1](e[2], e[3])
+                        seq = loop._seq
+                        continue
+            else:
+                t_q = q[0][0] if q else inf
+                if t_f <= t_q and t_f <= t_r:
+                    if t_f > until:
+                        break
+                    now = t_f
+                    # ------------------- arrival: _arrive, inlined
+                    fn = feed[fi][1]
+                    fi += 1
+                    t_f = feed[fi][0] if fi < nf else inf
+                    rec = fnrec[fn]
+                    idle = rec[0]
+                    if idle:
+                        inst = idle.pop()
+                        inst.state = "busy"
+                        inst.expire_seq += 1
+                        bundle = rec[2]
+                        if bundle is None:
+                            bundle = rec[2] = self._program(rec[5], False)
+                    else:
+                        inst = spawn(fn)
+                        if inst is None:   # memory-full: backlog
+                            rec[1].append(now)
+                            continue
+                        inst.state = "busy"
+                        bundle = rec[3]
+                        if bundle is None:
+                            bundle = rec[3] = self._program(rec[5], True)
+                    tmpl = bundle[1]
+                    node = nodes[inst.node]
+                    run = [list(tmpl[0]), tmpl[2], tmpl[3], tmpl[4],
+                           tmpl[5], node.cpu_hot, node.cpu_wait,
+                           node.be_hot, node.be_wait, rec[4], inst, now]
+                    code = tmpl[1]         # "complete" the virtual root
+                    # falls through to the hot block: the virtual
+                    # phase's successors are the roots
+                elif t_q < t_r or (t_q == t_r and q[0][1] < retq[0][1]):
+                    if t_q > until:
+                        break
+                    e = pop(q)
+                    now = e[0]
+                    if len(e) == 4:
+                        run, code = e[2], e[3]
+                    else:                  # generic callback event
+                        loop._seq, loop.now = seq, now
+                        e[2](e[3], e[4])
+                        seq = loop._seq
+                        continue
+                else:
+                    if t_r > until:
+                        break
+                    e = retq.popleft()
+                    t_r = retq[0][0] if retq else inf
+                    now = e[0]
+                    # --------------------- keep-alive retire, inlined
+                    inst = e[2]
+                    if inst.state == "warm" and inst.expire_seq == e[3]:
+                        idle = fnrec[inst.fn][0]
+                        if inst in idle:
+                            idle.remove(inst)
+                            node = nodes[inst.node]
+                            node.mem_used -= inst.rss_mb
+                            node.vms -= 1
+                    continue
+
+            # ----- hot block: one phase event (kept in lockstep with
+            # `_start`/`_hot`); run + code = phase index | flag bits
+            pi = code & _PI_MASK
+            if code & _EXEC:               # backend slot granted
+                op = run[4][pi]
+                if op == 2:                # _OP_CORE
+                    state = run[5]
+                    if state[0] < state[1]:
+                        state[0] += 1
+                        d = run[1][pi]
+                        end = now + d
+                        state[2] += d if end <= hz else hz - now
+                        seq += 1
+                        push(q, (end, seq, run, (code ^ _EXEC) | _CORE))
+                    else:
+                        run[6].append((run, code ^ _EXEC))
+                elif op == 3:              # _OP_WIRE
+                    seq += 1
+                    push(q, (now + run[1][pi], seq, run, code ^ _EXEC))
+                else:                      # _OP_ZERO
+                    seq += 1
+                    pending.append((seq, run, code ^ _EXEC))
+                continue
+            if code & _CORE:               # free the core, grant oldest
+                state = run[5]
+                state[0] -= 1
+                wait = run[6]
+                if wait:
+                    state[0] += 1
+                    run2, c2 = wait.popleft()
+                    d = run2[1][c2 & _PI_MASK]
+                    end = now + d
+                    state[2] += d if end <= hz else hz - now
+                    seq += 1
+                    push(q, (end, seq, run2, c2 | _CORE))
+            # ------------------------------------------------ phase done
+            if code & _SLOTREL:            # drop the backend-group slot
+                state = run[7]
+                state[0] -= 1
+                wait = run[8]
+                if wait:
+                    state[0] += 1
+                    run2, c2 = wait.popleft()
+                    seq += 1
+                    pending.append((seq, run2, c2 | _EXEC))
+            if code & _RELB:               # release barrier (_release,
+                inst = run[10]             # inlined)
+                rec = fnrec[inst.fn]
+                bl = rec[1]
+                if bl:
+                    t_arr = bl.popleft()   # serve backlog, stay busy
+                    loop._seq, loop.now = seq, now
+                    self._execute(inst, t_arr, False)
+                    seq = loop._seq
+                else:
+                    inst.state = "warm"
+                    inst.expire_seq += 1
+                    rec[0].append(inst)
+                    t_ret = now + keepalive
+                    if t_ret <= hz:        # else: unobservable
+                        seq += 1
+                        if not retq:
+                            t_r = t_ret
+                        retq.append((t_ret, seq, inst, inst.expire_seq))
+            if code & _RESPB:              # respond barrier
+                t_arr = run[11]
+                if t_arr >= warmup:
+                    run[9].append(now - t_arr)
+                completed += 1
+            need = run[0]
+            for sc in run[2][pi]:
+                si = sc & _PI_MASK
+                n = need[si] - 1
+                need[si] = n
+                if n == 0:                 # ready: `_start`, inlined
+                    op = run[3][si]
+                    if op == 2:            # _OP_CORE
+                        state = run[5]
+                        if state[0] < state[1]:
+                            state[0] += 1
+                            d = run[1][si]
+                            end = now + d
+                            state[2] += d if end <= hz else hz - now
+                            seq += 1
+                            push(q, (end, seq, run, sc | _CORE))
+                        else:
+                            run[6].append((run, sc))
+                    elif op == 3:          # _OP_WIRE
+                        seq += 1
+                        push(q, (now + run[1][si], seq, run, sc))
+                    elif op == 0:          # _OP_SLOT: backend-group head
+                        state = run[7]
+                        if state[0] < state[1]:
+                            state[0] += 1
+                            seq += 1
+                            pending.append((seq, run, sc | _EXEC))
+                        else:
+                            run[8].append((run, sc))
+                    else:                  # _OP_ZERO
+                        seq += 1
+                        pending.append((seq, run, sc))
+        self.completed += completed
+        loop._seq = seq
+        loop._fi = fi
+        loop.now = until
+
+    # -------------------------------------- legacy PhasePlan walker
+    #
+    # The pre-refactor interpreter, preserved verbatim as the parity
+    # reference and the sim_throughput baseline: per-invocation closure
+    # graph, name-keyed dicts, O(V) successor scans on the shared plan.
+
+    def _execute_legacy(self, inst: SimInstance, t_arr: float,
+                        cold: bool) -> None:
         fn = inst.fn
-        base = fn.split("#")[0]
+        base = self._base[fn]
         p, group_head, slot_release = self._plan_walk(base, cold)
         durs = self._durations(base, cold)
         node = self.nodes[inst.node]
@@ -338,7 +1029,7 @@ class DensitySimulator:
                 self.latencies[fn].append(lat)
             self.completed += 1
 
-        def phase_done(name: str) -> None:
+        def phase_done(name: str, _=None) -> None:
             ph = p.phase(name)
             g = ph.backend_group
             if g is not None and slot_release[g] == name:
@@ -347,7 +1038,8 @@ class DensitySimulator:
                 self._release(inst)
             if name == p.respond_after:
                 finish_response()
-            for succ in p.successors(name):
+            for succ in tuple(n2.name for n2 in p.phases
+                              if name in n2.after):   # O(V) scan, as before
                 remaining[succ] -= 1
                 if remaining[succ] == 0:
                     start(succ)
@@ -356,7 +1048,7 @@ class DensitySimulator:
             ph = p.phase(name)
             d = durs.get(name, 0.0)
 
-            def execute():
+            def execute(_a=None, _b=None):
                 if d <= 0.0:
                     loop.after(0.0, phase_done, name)
                 elif ph.resource in (P.GUEST_CORE, P.BACKEND_WORKER):
@@ -377,28 +1069,48 @@ class DensitySimulator:
     # ---------------------------------------------------------------- run
 
     def run(self) -> SimResult:
-        for fn, times in self.arrivals.items():
-            for t in times:
-                self.loop.at(t, self._arrive, fn)
+        until = self.duration_s + 30.0          # drain tail
+        if self.engine == "program":
+            # batched arrivals: one time-sorted stream, fed to the loop
+            # outside the heap (stable sort keeps the per-function
+            # scheduling order on exact time ties, like the heap did)
+            self._horizon = until
+            stream = [(t, fn) for fn, times in self.arrivals.items()
+                      for t in times]
+            stream.sort(key=lambda e: e[0])
+            self.loop.feed(stream, self._arrive)
+        else:                              # pre-refactor path: heap-load
+            for fn, times in self.arrivals.items():
+                for t in times:
+                    self.loop.at(t, self._arrive, fn)
+
         # memory sampling
-        def sample():
+        def sample(_a=None, _b=None):
             used = sum(n.mem_used for n in self.nodes)
             cap = sum(n.mem_cap for n in self.nodes)
             self.mem_samples.append(used / cap)
             if self.loop.now < self.duration_s - 1.0:
                 self.loop.after(1.0, sample)
         self.loop.after(self.warmup_s, sample)
-        self.loop.run(self.duration_s + 30.0)   # drain tail
+        if self.engine == "program":
+            self._run_hot(until)
+        else:
+            self.loop.run(until)
 
         horizon = self.duration_s + 30.0
-        cpu_util = (sum(n.cpu.busy_integral for n in self.nodes)
-                    / sum(n.cpu.cores for n in self.nodes) / horizon)
+        if self.engine == "program":
+            # granted core-time clipped at the horizon (see `_start`)
+            cpu_busy = sum(n.cpu_hot[2] for n in self.nodes)
+        else:
+            cpu_busy = sum(n.cpu.busy_integral for n in self.nodes)
+        cpu_util = cpu_busy / sum(n.cpu.cores for n in self.nodes) / horizon
         mem_util = (sum(self.mem_samples) / len(self.mem_samples)
                     if self.mem_samples else 0.0)
         unloaded = {f: self.unloaded_latency(f) for f in self.functions}
         return SimResult(
             system=self.spec.name, n_functions=self.n_functions,
-            latencies=dict(self.latencies), unloaded=unloaded,
+            latencies={f: v for f, v in self.latencies.items() if v},
+            unloaded=unloaded,
             cpu_util=cpu_util, mem_util=mem_util,
             cold_starts=self.cold_starts, completed=self.completed,
             rejected=self.rejected)
@@ -406,17 +1118,39 @@ class DensitySimulator:
 
 def find_density(system: str, *, lo: int = 20, hi: int = 800,
                  step: int = 20, slo: float = 5.0, seed: int = 0,
-                 **kw) -> tuple[int, list[SimResult]]:
-    """Sweep deployed-function count; return (max n meeting SLO, results)."""
-    results = []
-    best = 0
-    n = lo
-    while n <= hi:
+                 refine_to: int = 1, **kw) -> tuple[int, list[SimResult]]:
+    """Max deployed-function count meeting the SLO, plus every probe.
+
+    Coarse upward sweep in `step` increments until the first SLO
+    failure, then binary search between the last pass and the first
+    fail down to `refine_to` granularity — the reported density is no
+    longer quantized to `step`.
+    """
+    results: list[SimResult] = []
+
+    def probe(n: int) -> SimResult:
         r = DensitySimulator(system, n, seed=seed, **kw).run()
         results.append(r)
-        if r.meets_slo(slo):
+        return r
+
+    best = 0
+    first_fail = None
+    n = lo
+    while n <= hi:
+        if probe(n).meets_slo(slo):
             best = n
             n += step
         else:
+            first_fail = n
             break
+
+    if first_fail is not None:
+        lo_b, hi_b = best, first_fail
+        gran = max(refine_to, 1)
+        while hi_b - lo_b > gran:
+            mid = (lo_b + hi_b) // 2
+            if probe(mid).meets_slo(slo):
+                best, lo_b = mid, mid
+            else:
+                hi_b = mid
     return best, results

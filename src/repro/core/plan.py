@@ -173,6 +173,26 @@ class PhasePlan:
         object.__setattr__(self, "_by_name",
                            {p.name: p for p in self.phases})
         self._validate()
+        # memoize the graph queries once, at construction: plans are
+        # compile-cached and immutable, yet successors()/ancestors()/
+        # backend_groups() used to re-scan all phases (O(V) / O(V*E))
+        # on every call — validation, tests, and goldens paid that
+        # repeatedly even after the hot path moved to PlanProgram.
+        succs: dict[str, list[str]] = {p.name: [] for p in self.phases}
+        anc: dict[str, frozenset[str]] = {}
+        for p in self.phases:            # declaration order is topological
+            for d in p.after:
+                succs[d].append(p.name)
+            anc[p.name] = frozenset(p.after).union(*(anc[d] for d in p.after))
+        object.__setattr__(self, "_succs",
+                           {n: tuple(v) for n, v in succs.items()})
+        object.__setattr__(self, "_anc", anc)
+        groups: dict[str, list[str]] = {}
+        for p in self.phases:
+            if p.backend_group:
+                groups.setdefault(p.backend_group, []).append(p.name)
+        object.__setattr__(self, "_groups",
+                           {g: tuple(v) for g, v in groups.items()})
 
     # ------------------------------------------------------------ queries
 
@@ -184,30 +204,22 @@ class PhasePlan:
         return tuple(p.name for p in self.phases)
 
     def successors(self, name: str) -> tuple[str, ...]:
-        return tuple(p.name for p in self.phases if name in p.after)
+        """Direct successors in declaration (topological) order — O(1),
+        precomputed in `__post_init__`."""
+        return self._succs[name]
 
     def topo_order(self) -> tuple[str, ...]:
         """Deterministic topological order (declaration order is one)."""
         return self.phase_names
 
-    def ancestors(self, name: str) -> set[str]:
-        """All phases `name` transitively depends on."""
-        out: set[str] = set()
-        stack = list(self.phase(name).after)
-        while stack:
-            d = stack.pop()
-            if d not in out:
-                out.add(d)
-                stack.extend(self.phase(d).after)
-        return out
+    def ancestors(self, name: str) -> frozenset[str]:
+        """All phases `name` transitively depends on — O(1), memoized."""
+        return self._anc[name]
 
     def backend_groups(self) -> dict[str, tuple[str, ...]]:
-        """group -> its phases in topological order."""
-        out: dict[str, list[str]] = {}
-        for p in self.phases:
-            if p.backend_group:
-                out.setdefault(p.backend_group, []).append(p.name)
-        return {g: tuple(v) for g, v in out.items()}
+        """group -> its phases in topological order (memoized; treat as
+        read-only)."""
+        return self._groups
 
     def slot_release_phase(self, group: str, kernel_bypass: bool) -> str:
         """Where a backend group's connection-pool slot is released:
@@ -411,6 +423,110 @@ def _compile_plan(spec: SystemSpec, shape: tuple, cold: bool) -> PhasePlan:
         release_after=release, respond_after="reply")
 
 
+# ------------------------------------------------------- program lowering
+
+@dataclass(frozen=True, eq=False)
+class PlanProgram:
+    """Flat, integer-indexed lowering of one compiled `PhasePlan`.
+
+    `PhasePlan` is the *authoring* representation: named phases, string
+    edges, validation, golden-friendly queries. Interpreting it per
+    invocation made the DES hot path walk dicts of names and rebuild
+    closure graphs millions of times. A PlanProgram is the *execution*
+    representation: every phase is an integer index, every lookup an
+    array access —
+
+    * ``succ[i]``        — successor indices (declaration order);
+    * ``indegree[i]``    — dependency count (per-invocation state is a
+                           countdown copy of this vector);
+    * ``on_core[i]``     — phase occupies a node core (guest_core or
+                           backend_worker) vs pure latency (wire/none);
+    * ``acquires_slot`` / ``releases_slot`` — where a backend group's
+      connection-pool slot is taken and dropped (the release point
+      depends on the transport's kernel-bypass rule, so the lowering is
+      cached per (plan, kernel_bypass));
+    * ``release_idx`` / ``respond_idx`` — the plan's barriers, as indices;
+    * ``group_*``        — the same lowering at breakdown-group
+      granularity, which the threaded `runtime._PlanRun` walker drives
+      off (one lowered representation, two executors — they cannot
+      drift).
+
+    A duration *vector* aligned with ``names`` (`duration_vector`)
+    replaces the per-phase dict lookups of `phase_durations`.
+    """
+
+    plan: PhasePlan
+    kernel_bypass: bool
+    names: tuple[str, ...]
+    on_core: tuple[bool, ...]
+    succ: tuple[tuple[int, ...], ...]
+    indegree: tuple[int, ...]
+    roots: tuple[int, ...]
+    acquires_slot: tuple[bool, ...]
+    releases_slot: tuple[bool, ...]
+    release_idx: int
+    respond_idx: int
+    # breakdown-group granularity (the threaded walker's unit of work)
+    group_names: tuple[str, ...]
+    group_succ: tuple[tuple[int, ...], ...]
+    group_indegree: tuple[int, ...]
+    group_roots: tuple[int, ...]
+
+    @property
+    def n_phases(self) -> int:
+        return len(self.names)
+
+
+def lower_program(plan: PhasePlan, kernel_bypass: bool = False) -> PlanProgram:
+    """Lower a validated PhasePlan into its flat PlanProgram."""
+    names = plan.phase_names
+    idx = {n: i for i, n in enumerate(names)}
+    groups = plan.backend_groups()
+    heads = {members[0] for members in groups.values()}
+    slot_rel = {plan.slot_release_phase(g, kernel_bypass) for g in groups}
+
+    gnames = plan.group_names()
+    gidx = {g: i for i, g in enumerate(gnames)}
+    gdeps = plan.group_deps()
+    gsucc: list[list[int]] = [[] for _ in gnames]
+    for g, ds in gdeps.items():
+        for d in ds:
+            gsucc[gidx[d]].append(gidx[g])
+
+    return PlanProgram(
+        plan=plan, kernel_bypass=kernel_bypass,
+        names=names,
+        on_core=tuple(p.resource in (GUEST_CORE, BACKEND_WORKER)
+                      for p in plan.phases),
+        succ=tuple(tuple(idx[s] for s in plan.successors(n)) for n in names),
+        indegree=tuple(len(p.after) for p in plan.phases),
+        roots=tuple(i for i, p in enumerate(plan.phases) if not p.after),
+        acquires_slot=tuple(n in heads for n in names),
+        releases_slot=tuple(n in slot_rel for n in names),
+        release_idx=idx[plan.release_after],
+        respond_idx=idx[plan.respond_after],
+        group_names=gnames,
+        group_succ=tuple(tuple(sorted(s)) for s in gsucc),
+        group_indegree=tuple(len(gdeps[g]) for g in gnames),
+        group_roots=tuple(i for i, g in enumerate(gnames) if not gdeps[g]),
+    )
+
+
+def compile_program(spec: SystemSpec, profile: IOProfile | None = None,
+                    cold: bool = True, *,
+                    kernel_bypass: bool = False) -> PlanProgram:
+    """Compile-and-lower, cached beside the plan cache on the same
+    size-free shape key (+ the transport's kernel-bypass rule)."""
+    shape = (profile if profile is not None else DEFAULT_PROFILE).shape
+    return _compile_program(spec, shape, bool(cold), bool(kernel_bypass))
+
+
+@lru_cache(maxsize=None)
+def _compile_program(spec: SystemSpec, shape: tuple, cold: bool,
+                     kernel_bypass: bool) -> PlanProgram:
+    return lower_program(_compile_plan(spec, shape, cold), kernel_bypass)
+
+
 # -------------------------------------------------------------- cost model
 
 def _cpu_s(mcycles: float) -> float:
@@ -466,6 +582,16 @@ def phase_durations(spec: SystemSpec, w: Workload,
         d[f"write_cpu[{k}]"] = _op_cpu_s(spec, p.size_bytes)
         d[f"write_net[{k}]"] = tr.transfer_latency(p.size_bytes)
     return d
+
+
+def duration_vector(spec: SystemSpec, w: Workload,
+                    cold: bool) -> tuple[float, ...]:
+    """`phase_durations` as a vector aligned with the compiled plan's
+    phase order (== the PlanProgram's index space): the hot path reads
+    ``durs[i]`` instead of hashing phase-name strings."""
+    p = compile_plan(spec, w.profile, cold=cold)
+    d = phase_durations(spec, w, cold)
+    return tuple(d.get(n, 0.0) for n in p.phase_names)
 
 
 def unloaded_latency(spec: SystemSpec, w: Workload) -> float:

@@ -39,7 +39,9 @@ from repro.core.frontend import (BaselineClient, GuestContext,
                                  HandlerContext, NexusClient)
 from repro.core.hints import extract_hints, make_event
 from repro.core.lifecycle import InstancePool
-from repro.core.plan import SYSTEMS, SystemSpec, PhasePlan, compile_plan
+from repro.core.plan import (SYSTEMS, PhasePlan, PlanProgram, SystemSpec,
+                             compile_program)
+from repro.core.transport import TRANSPORTS
 from repro.core.storage import FaultPlan, ObjectStore, RemoteStorage
 from repro.core.supervisor import Supervisor
 from repro.core.workloads import (ComputeSegment, Get, IOProfile, Put,
@@ -287,57 +289,66 @@ class _GuestRun:
 
 
 class _PlanRun:
-    """Walk one compiled plan's breakdown groups on real threads.
+    """Walk one lowered program's breakdown groups on real threads.
 
-    Each group runs as soon as its plan dependencies complete; parallel
+    Drives off the same `plan.PlanProgram` the density simulator
+    interprets — at breakdown-group granularity: an integer indegree
+    countdown over `group_succ` index lists, exactly the DES's
+    per-phase discipline (the old walker re-scanned every group's
+    name-keyed dependency set after each completion). One lowered
+    representation, two executors — they cannot drift.
+
+    Each group runs as soon as its dependencies complete; parallel
     branches (prefetch vs restore) get real threads; barriers fire as
     completion hooks. Per-group wall time is recorded as the breakdown.
     """
 
-    def __init__(self, plan: PhasePlan, actions: dict, ctx: _Invocation,
-                 stall_timeout_s: float = 120.0):
-        self._plan = plan
-        self._actions = actions
+    def __init__(self, program: PlanProgram, actions: dict,
+                 ctx: _Invocation, stall_timeout_s: float = 120.0):
+        self._program = program
+        self._names = program.group_names
+        self._succ = program.group_succ
+        self._actions = [actions[g] for g in self._names]
         self._ctx = ctx
         self._stall = stall_timeout_s
-        self._deps = plan.group_deps()
-        self._order = plan.group_names()
-        self._hooks: dict[str, callable] = {}
+        self._need = list(program.group_indegree)
+        self._hooks: dict[int, callable] = {}
         self.breakdown: dict[str, float] = {}
         self._lock = threading.Lock()
-        self._started: set[str] = set()
-        self._done: set[str] = set()
+        self._started = [False] * len(self._names)
+        self._n_done = 0
         self._active = 0
         self._error: BaseException | None = None
         self._finished = threading.Event()
 
     def on_complete(self, group: str, hook) -> None:
-        self._hooks[group] = hook
+        self._hooks[self._names.index(group)] = hook
 
     def run(self) -> dict[str, float]:
-        roots = [g for g in self._order if not self._deps[g]]
-        for g in roots[1:]:
-            threading.Thread(target=self._chain, args=(g,),
+        roots = self._program.group_roots
+        for gi in roots[1:]:
+            threading.Thread(target=self._chain, args=(gi,),
                              daemon=True).start()
         self._chain(roots[0])
         if not self._finished.wait(timeout=self._stall):
+            done = [n for n, f in zip(self._names, self._started) if f]
             raise TimeoutError(
-                f"plan run stalled ({self._plan.system}): "
-                f"done={sorted(self._done)} of {self._order}")
+                f"plan run stalled ({self._program.plan.system}): "
+                f"started={done} of {list(self._names)}")
         if self._error is not None:
             raise self._error
         return self.breakdown
 
-    def _chain(self, group: str | None) -> None:
-        while group is not None:
+    def _chain(self, gi: int | None) -> None:
+        while gi is not None:
             with self._lock:
-                if group in self._started or self._error is not None:
+                if self._started[gi] or self._error is not None:
                     return
-                self._started.add(group)
+                self._started[gi] = True
                 self._active += 1
             t0 = time.monotonic()
             try:
-                self._actions[group](self._ctx)
+                self._actions[gi](self._ctx)
             except BaseException as e:              # noqa: BLE001
                 with self._lock:
                     self._active -= 1
@@ -346,27 +357,30 @@ class _PlanRun:
                     if self._active == 0:
                         self._finished.set()
                 return
-            self.breakdown[group] = time.monotonic() - t0
-            hook = self._hooks.get(group)
+            self.breakdown[self._names[gi]] = time.monotonic() - t0
+            hook = self._hooks.get(gi)
             if hook is not None:
                 hook()
             with self._lock:
                 self._active -= 1
-                self._done.add(group)
+                self._n_done += 1
                 if self._error is not None:
                     if self._active == 0:
                         self._finished.set()
                     return
-                if len(self._done) == len(self._order):
+                if self._n_done == len(self._names):
                     self._finished.set()
                     return
-                ready = [g for g in self._order
-                         if g not in self._started
-                         and all(d in self._done for d in self._deps[g])]
+                need = self._need
+                ready = []
+                for si in self._succ[gi]:
+                    need[si] -= 1
+                    if need[si] == 0 and not self._started[si]:
+                        ready.append(si)
             for g in ready[1:]:
                 threading.Thread(target=self._chain, args=(g,),
                                  daemon=True).start()
-            group = ready[0] if ready else None
+            gi = ready[0] if ready else None
 
 
 class WorkerNode:
@@ -498,12 +512,15 @@ class WorkerNode:
         # or size-opaque cannot be prefetched (§4.2.3) — its fetch chain
         # correctly serializes after the restore.
         profile = w.profile.effective(ctx.inputs)
-        plan = compile_plan(self.spec, profile, cold=cold_expected)
+        program = compile_program(
+            self.spec, profile, cold=cold_expected,
+            kernel_bypass=TRANSPORTS[self.spec.transport].kernel_bypass)
+        plan = program.plan
         self._make_client(ctx)
         guest = _GuestRun(self, ctx, profile, self.plan_stall_timeout_s)
         ctx.guest = guest
 
-        run = _PlanRun(plan, self._build_actions(plan, guest), ctx,
+        run = _PlanRun(program, self._build_actions(plan, guest), ctx,
                        stall_timeout_s=self.plan_stall_timeout_s)
         # the guest program starts when the VM is up AND the event has
         # been delivered — exactly the restore ∧ rpc_in join.

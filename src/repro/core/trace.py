@@ -11,7 +11,15 @@ from __future__ import annotations
 
 import math
 import random
+import zlib
 from dataclasses import dataclass
+
+
+def _fn_seed(seed: int, function: str) -> int:
+    """Stable per-(seed, function) RNG seed. crc32, not `hash()`: str
+    hashing is salted per process, which silently broke cross-process
+    determinism of every arrival stream."""
+    return (seed * 1_000_003) ^ zlib.crc32(function.encode())
 
 
 @dataclass(frozen=True)
@@ -31,17 +39,30 @@ def sample_rates(functions: list[str], seed: int, *,
 
 def generate_arrivals(spec: ArrivalSpec, duration_s: float, seed: int,
                       *, burst_factor: float = 3.0,
-                      burst_fraction: float = 0.25) -> list[float]:
-    """Markov-modulated Poisson arrivals in [0, duration).
+                      burst_fraction: float = 0.25,
+                      pattern=None) -> list[float]:
+    """Seeded arrival stream in [0, duration) for one function.
 
-    Two phases: 'calm' (rate r_c) and 'burst' (rate r_b = burst_factor
-    * r_c), with mean dwell times chosen so `burst_fraction` of time is
-    bursty and the long-run rate equals spec.mean_rate.
+    With no `pattern`, Markov-modulated Poisson arrivals (two phases:
+    'calm' at rate r_c and 'burst' at r_b = burst_factor * r_c, with
+    mean dwell times chosen so `burst_fraction` of time is bursty and
+    the long-run rate equals spec.mean_rate). A
+    `workloads.ArrivalPattern` selects poisson / mmpp / diurnal
+    generation instead; everything remains deterministic in
+    (seed, function).
     """
-    rng = random.Random((seed * 1_000_003) ^ hash(spec.function))
+    rng = random.Random(_fn_seed(seed, spec.function))
     r_mean = spec.mean_rate
     if r_mean <= 0:
         return []
+    if pattern is not None:
+        if pattern.kind == "poisson":
+            return _poisson_arrivals(rng, r_mean, duration_s)
+        if pattern.kind == "diurnal":
+            return _diurnal_arrivals(rng, r_mean, duration_s,
+                                     pattern.period_s, pattern.amplitude)
+        burst_factor = pattern.burst_factor
+        burst_fraction = pattern.burst_fraction
     # long-run rate = (1-f)*r_c + f*r_b = r_c * (1 - f + f*B)
     r_calm = r_mean / (1 - burst_fraction + burst_fraction * burst_factor)
     r_burst = r_calm * burst_factor
@@ -65,6 +86,38 @@ def generate_arrivals(spec: ArrivalSpec, duration_s: float, seed: int,
         if t < duration_s:
             out.append(t)
     return out
+
+
+def _poisson_arrivals(rng: random.Random, rate: float,
+                      duration_s: float) -> list[float]:
+    """Homogeneous Poisson process at `rate`."""
+    out: list[float] = []
+    t = rng.expovariate(rate)
+    while t < duration_s:
+        out.append(t)
+        t += rng.expovariate(rate)
+    return out
+
+
+def _diurnal_arrivals(rng: random.Random, mean_rate: float,
+                      duration_s: float, period_s: float,
+                      amplitude: float) -> list[float]:
+    """Inhomogeneous Poisson with rate(t) = mean * (1 + A sin(wt + phi)),
+    sampled by thinning against the peak rate. `phi` is drawn per
+    function so a cluster of functions peaks staggered, not in phase.
+    """
+    phi = rng.uniform(0.0, 2.0 * math.pi)
+    r_max = mean_rate * (1.0 + amplitude)
+    w = 2.0 * math.pi / period_s
+    out: list[float] = []
+    t = 0.0
+    while True:
+        t += rng.expovariate(r_max)
+        if t >= duration_s:
+            return out
+        accept = (1.0 + amplitude * math.sin(w * t + phi)) / (1.0 + amplitude)
+        if rng.random() < accept:
+            out.append(t)
 
 
 def interarrival_cv(arrivals: list[float]) -> float:

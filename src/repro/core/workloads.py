@@ -129,6 +129,67 @@ class IOProfile:
                     Put(int(out_mb * MB))))
 
 
+# ---------------------------------------------------------- arrival patterns
+
+@dataclass(frozen=True)
+class ArrivalPattern:
+    """How invocations of a deployed function arrive (paper §6: the
+    density experiment replays Azure-like traffic; the full sweep also
+    stresses the variants under heavier burst regimes and slow diurnal
+    load swings).
+
+    Pure data, like `SystemSpec`: the generator in `core.trace`
+    interprets it, every stream is seeded and process-deterministic.
+
+    * ``poisson`` — homogeneous Poisson (the classic open-loop model);
+    * ``mmpp``    — Markov-modulated Poisson (calm/burst phases;
+      ``burst_factor`` × rate for ``burst_fraction`` of the time);
+    * ``diurnal`` — inhomogeneous Poisson with a sinusoidal rate swing
+      of relative ``amplitude`` over ``period_s`` (phase-shifted per
+      function so the cluster sees staggered peaks).
+    """
+
+    name: str
+    kind: str = "mmpp"              # 'poisson' | 'mmpp' | 'diurnal'
+    burst_factor: float = 3.0
+    burst_fraction: float = 0.25
+    period_s: float = 120.0         # diurnal period
+    amplitude: float = 0.8          # diurnal peak-to-mean rate swing
+
+    def __post_init__(self):
+        if self.kind not in ("poisson", "mmpp", "diurnal"):
+            raise ValueError(f"unknown arrival kind {self.kind!r}")
+        if not 0.0 <= self.amplitude < 1.0:
+            raise ValueError("amplitude must be in [0, 1)")
+        if self.burst_factor <= 0.0:
+            raise ValueError("burst_factor must be > 0")
+        if not 0.0 <= self.burst_fraction < 1.0:
+            raise ValueError("burst_fraction must be in [0, 1)")
+        if self.period_s <= 0.0:
+            raise ValueError("period_s must be > 0")
+
+
+#: named patterns the density sweep iterates over. `azure` is the
+#: historical default (MMPP with the paper-calibrated burst mix).
+ARRIVAL_PATTERNS: dict[str, ArrivalPattern] = {p.name: p for p in (
+    ArrivalPattern("azure"),
+    ArrivalPattern("poisson", kind="poisson"),
+    ArrivalPattern("bursty", kind="mmpp",
+                   burst_factor=8.0, burst_fraction=0.1),
+    ArrivalPattern("diurnal", kind="diurnal"),
+)}
+
+
+def resolve_pattern(pattern: "str | ArrivalPattern") -> ArrivalPattern:
+    if isinstance(pattern, ArrivalPattern):
+        return pattern
+    try:
+        return ARRIVAL_PATTERNS[pattern]
+    except KeyError:
+        raise KeyError(f"unknown arrival pattern {pattern!r}; "
+                       f"known: {sorted(ARRIVAL_PATTERNS)}") from None
+
+
 # ---------------------------------------------------------------- workloads
 
 @dataclass(frozen=True)

@@ -22,7 +22,8 @@ from repro.core import plan as P
 from repro.core import workloads as W
 from repro.core.des import DensitySimulator
 from repro.core.plan import (SYSTEMS, Phase, PhasePlan, compile_plan,
-                             phase_durations, phase_group,
+                             compile_program, duration_vector,
+                             lower_program, phase_durations, phase_group,
                              unloaded_latency)
 from repro.core.runtime import WorkerNode
 from repro.core.workloads import ComputeSegment, Get, IOProfile, Put
@@ -411,6 +412,97 @@ class TestCrossExecutorParity:
         assert phase_group("write_net[0]") == "write[0]"
         assert phase_group("compute[1]") == "compute[1]"
         assert phase_group("restore") == "restore"
+
+
+# -------------------------------------------- PlanProgram lowering (ISSUE 3)
+
+class TestPlanProgram:
+    @pytest.mark.parametrize("system,wname,cold", ALL_COMBOS)
+    def test_lowering_is_faithful(self, system, wname, cold):
+        """Every array of the flat program agrees with the PhasePlan it
+        was lowered from — for every (variant, workload, coldness)."""
+        spec, w = SYSTEMS[system], W.REGISTRY[wname]
+        plan = compile_plan(spec, w.profile, cold=cold)
+        prog = compile_program(spec, w.profile, cold=cold,
+                               kernel_bypass=True)
+        assert prog.plan is plan
+        names = plan.phase_names
+        assert prog.names == names
+        idx = {n: i for i, n in enumerate(names)}
+        for i, ph in enumerate(plan.phases):
+            assert prog.indegree[i] == len(ph.after)
+            assert prog.succ[i] == tuple(idx[s]
+                                         for s in plan.successors(ph.name))
+            assert prog.on_core[i] == (ph.resource in
+                                       (P.GUEST_CORE, P.BACKEND_WORKER))
+        assert prog.roots == tuple(i for i, ph in enumerate(plan.phases)
+                                   if not ph.after)
+        assert names[prog.release_idx] == plan.release_after
+        assert names[prog.respond_idx] == plan.respond_after
+        groups = plan.backend_groups()
+        heads = {m[0] for m in groups.values()}
+        rel = {plan.slot_release_phase(g, True) for g in groups}
+        assert {names[i] for i, a in enumerate(prog.acquires_slot)
+                if a} == heads
+        assert {names[i] for i, r in enumerate(prog.releases_slot)
+                if r} == rel
+        # group-level lowering == the plan's group DAG
+        assert prog.group_names == plan.group_names()
+        gidx = {g: i for i, g in enumerate(prog.group_names)}
+        lifted = {g: set() for g in prog.group_names}
+        for g, ds in plan.group_deps().items():
+            for d in ds:
+                lifted[d].add(gidx[g])
+        for i, g in enumerate(prog.group_names):
+            assert set(prog.group_succ[i]) == lifted[g]
+            assert prog.group_indegree[i] == len(plan.group_deps()[g])
+        assert prog.group_roots == tuple(
+            i for i, g in enumerate(prog.group_names)
+            if not plan.group_deps()[g])
+        # duration vector aligns with the program's index space
+        durs = phase_durations(spec, w, cold)
+        assert duration_vector(spec, w, cold) == tuple(
+            durs.get(n, 0.0) for n in names)
+
+    def test_programs_are_cached_like_plans(self):
+        spec = SYSTEMS["nexus"]
+        a = compile_program(spec, W.SUITE["WEB"].profile, cold=True,
+                            kernel_bypass=True)
+        b = compile_program(spec, W.SUITE["AES"].profile, cold=True,
+                            kernel_bypass=True)
+        assert a is b                      # same shape -> same program
+        c = compile_program(spec, W.SUITE["WEB"].profile, cold=True,
+                            kernel_bypass=False)
+        assert c is not a                  # slot-release rule differs
+
+    def test_kernel_bypass_moves_slot_release(self):
+        """RDMA (kernel bypass) drops the backend slot after the CPU
+        slice; TCP holds it through the wire."""
+        spec = SYSTEMS["nexus"]
+        plan = compile_plan(spec, CANON, cold=False)
+        rdma = lower_program(plan, kernel_bypass=True)
+        tcp = lower_program(plan, kernel_bypass=False)
+        i = {n: k for k, n in enumerate(plan.phase_names)}
+        assert rdma.releases_slot[i["fetch_cpu[0]"]]
+        assert not rdma.releases_slot[i["fetch_net[0]"]]
+        assert tcp.releases_slot[i["fetch_net[0]"]]
+        assert not tcp.releases_slot[i["fetch_cpu[0]"]]
+
+    def test_memoized_queries_match_structure(self):
+        """The __post_init__-memoized successors/ancestors/backend
+        groups equal a from-scratch recomputation."""
+        p = compile_plan(SYSTEMS["nexus"], W.SCENARIOS["SG"].profile,
+                         cold=True)
+        for ph in p.phases:
+            assert p.successors(ph.name) == tuple(
+                q.name for q in p.phases if ph.name in q.after)
+            anc, stack = set(), list(ph.after)
+            while stack:
+                d = stack.pop()
+                if d not in anc:
+                    anc.add(d)
+                    stack.extend(p.phase(d).after)
+            assert p.ancestors(ph.name) == anc
 
 
 # --------------------------------------------------- profile declarations
