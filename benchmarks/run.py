@@ -23,7 +23,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (cold_start, cpu_cycles, density, faasm_gap,
-                            memory_footprint, sim_throughput, warm_path)
+                            fault_tolerance, memory_footprint,
+                            sim_throughput, warm_path)
 
     benches = [
         ("cpu_cycles (Fig 2)", cpu_cycles.run, {}),
@@ -33,6 +34,8 @@ def main() -> None:
         ("sim_throughput (DES engine)", sim_throughput.run,
          {"quick": args.quick}),
         ("density (Fig 6 + full matrix)", density.run,
+         {"quick": args.quick}),
+        ("fault_tolerance (§5, FaultPlane)", fault_tolerance.run,
          {"quick": args.quick}),
         ("faasm_gap (Fig 14)", faasm_gap.run, {}),
     ]

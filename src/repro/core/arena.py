@@ -15,6 +15,7 @@ to the bounded circular buffer in `streaming.py` instead.
 from __future__ import annotations
 
 import threading
+import time
 from dataclasses import dataclass, field
 
 MB = 1024 * 1024
@@ -68,26 +69,60 @@ class TenantArena:
         self._buf = bytearray(self.capacity)
         self._buf_view = memoryview(self._buf)
         self._lock = threading.Lock()
+        self._reclaimed = threading.Condition(self._lock)
         self._free_list: list[tuple[int, int]] = [(0, self.capacity)]
         self.allocated = 0
         self.peak = 0
+        self.alloc_stalls = 0
+
+    def _try_alloc(self, size: int) -> Slot | None:
+        """First-fit attempt; caller holds the lock."""
+        for i, (off, length) in enumerate(self._free_list):
+            if length >= size:
+                if length == size:
+                    self._free_list.pop(i)
+                else:
+                    self._free_list[i] = (off + size, length - size)
+                self.allocated += size
+                self.peak = max(self.peak, self.allocated)
+                return Slot(self, off, size)
+        return None
 
     def alloc(self, size: int) -> Slot:
         if size <= 0:
             raise ArenaError("size must be positive")
         with self._lock:
-            for i, (off, length) in enumerate(self._free_list):
-                if length >= size:
-                    if length == size:
-                        self._free_list.pop(i)
-                    else:
-                        self._free_list[i] = (off + size, length - size)
-                    self.allocated += size
-                    self.peak = max(self.peak, self.allocated)
-                    return Slot(self, off, size)
+            slot = self._try_alloc(size)
+            if slot is not None:
+                return slot
         raise ArenaError(
             f"arena[{self.tenant}] exhausted: need {size}B, "
             f"{self.capacity - self.allocated}B free (fragmented)")
+
+    def alloc_wait(self, size: int, timeout_s: float = 10.0) -> Slot:
+        """Allocate, stalling on exhaustion until enough slots are
+        reclaimed (arena pressure is a *transient* fault: releases
+        notify waiters). Raises `ArenaError` only past `timeout_s` —
+        the crash-only escalation point."""
+        if size <= 0:
+            raise ArenaError("size must be positive")
+        with self._reclaimed:
+            slot = self._try_alloc(size)
+            if slot is not None:
+                return slot
+            self.alloc_stalls += 1
+            deadline = time.monotonic() + timeout_s
+            while True:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0.0:
+                    raise ArenaError(
+                        f"arena[{self.tenant}] exhausted for {timeout_s}s: "
+                        f"need {size}B, "
+                        f"{self.capacity - self.allocated}B free")
+                self._reclaimed.wait(remaining)
+                slot = self._try_alloc(size)
+                if slot is not None:
+                    return slot
 
     def _free(self, slot: Slot) -> None:
         with self._lock:
@@ -102,6 +137,7 @@ class TenantArena:
                 else:
                     merged.append((off, length))
             self._free_list = merged
+            self._reclaimed.notify_all()
 
     def utilization(self) -> float:
         return self.allocated / self.capacity

@@ -37,6 +37,11 @@ class BackendCrashed(ConnectionError):
     """Raised by in-flight ops when the backend process dies."""
 
 
+class LostWriteError(ConnectionError):
+    """An ack-less write has no idempotency record: it never completed
+    (crash took both), so the redrive must carry the payload again."""
+
+
 @dataclass
 class PrefetchHandle:
     """Frontend-visible handle to an in-flight hinted prefetch."""
@@ -57,10 +62,19 @@ class PrefetchHandle:
 
 @dataclass
 class PutTicket:
-    """Tracks one async output write to completion (at-least-once)."""
+    """Tracks one async output write to completion (at-least-once).
+
+    Carries the logical-write identity (tenant, cred, hint) so a
+    frontend whose ack timed out can re-drive the write idempotently
+    (`NexusBackend.redrive_put`) — the dedup table resolves retries of
+    completed writes without moving bytes again.
+    """
 
     invocation_id: str
     future: Future = field(default_factory=Future)
+    tenant: str = ""
+    cred: str = ""
+    out: OutputHint | None = None
 
 
 class NexusBackend:
@@ -70,10 +84,16 @@ class NexusBackend:
                  *, workers: int = 16, arena_mb: float = 64.0,
                  transport_name: str = "tcp",
                  arenas: ArenaRegistry | None = None,
-                 tokens: TokenManager | None = None):
+                 tokens: TokenManager | None = None,
+                 fault_hooks=None,
+                 alloc_timeout_s: float = 10.0):
         self.remote = remote
         self.acct = acct
         self.transport_name = transport_name
+        # FaultPlane taps (faults.FaultHooks), read at call time so the
+        # injector stays armed across supervisor restarts
+        self.fault_hooks = fault_hooks
+        self.alloc_timeout_s = alloc_timeout_s
         # Arenas are file-backed host memory and tokens belong to the
         # cluster orchestrator — both survive a backend crash (§5); the
         # supervisor re-attaches them to the restarted daemon.
@@ -89,7 +109,7 @@ class NexusBackend:
         # write re-executes — idempotent PUTs keep at-least-once intact.
         self._completed_puts: dict[str, int] = {}
         self.stats = {"prefetches": 0, "sync_gets": 0, "puts": 0,
-                      "stream_gets": 0, "dedup_hits": 0}
+                      "stream_gets": 0, "dedup_hits": 0, "acks_dropped": 0}
         self._conn_established: set[str] = set()
 
     # ----------------------------------------------------------- liveness
@@ -174,7 +194,10 @@ class NexusBackend:
                     self.connection_setup(pre_connect)
                 data = self._authorized_get(cred, hint.bucket, hint.key)
                 size = len(data)
-                slot = self.arenas.get(tenant).alloc(max(size, 1))
+                # arena pressure is transient: stall for reclaim rather
+                # than failing the fetch outright (§4.3.1)
+                slot = self.arenas.get(tenant).alloc_wait(
+                    max(size, 1), timeout_s=self.alloc_timeout_s)
                 slot.write(data)
                 # RDMA: NIC DMAs straight into the registered arena —
                 # charged inside the transport model (zero host-kernel).
@@ -193,7 +216,8 @@ class NexusBackend:
         self._check_alive()
         self.stats["sync_gets"] += 1
         data = self._authorized_get(cred, bucket, key)
-        slot = self.arenas.get(tenant).alloc(max(len(data), 1))
+        slot = self.arenas.get(tenant).alloc_wait(
+            max(len(data), 1), timeout_s=self.alloc_timeout_s)
         slot.write(data)
         return slot
 
@@ -209,7 +233,11 @@ class NexusBackend:
                 data = self._authorized_get(cred, bucket, key)
                 for off in range(0, len(data), chunk):
                     buf.write(memoryview(data)[off:off + chunk])
-            finally:
+            except BaseException as e:      # noqa: BLE001 — propagated
+                # a failed pump must surface at the consumer, never
+                # read as a clean (truncated) EOF
+                buf.fail(e)
+            else:
                 buf.close()
 
         self._pool.submit(_run)
@@ -223,7 +251,7 @@ class NexusBackend:
         the invocation response on it (at-least-once)."""
         self._check_alive()
         self.arenas.resolve(tenant, slot)         # isolation check
-        ticket = PutTicket(invocation_id)
+        ticket = PutTicket(invocation_id, tenant=tenant, cred=cred, out=out)
         self.stats["puts"] += 1
         # idempotency is per *logical write*: an invocation may make any
         # number of distinct durable PUTs (fan-out handlers); only a
@@ -249,11 +277,46 @@ class NexusBackend:
                 with self._lock:
                     self._completed_puts[dedup_key] = meta.etag
                 slot.release()
+                # FaultPlane ack-drop tap: the write IS durable and the
+                # idempotency record exists — only the ack is lost. The
+                # frontend's timed-out wait redrives and dedup resolves.
+                hooks = self.fault_hooks
+                if (hooks is not None and hooks.ack_drop is not None
+                        and hooks.ack_drop(dedup_key)):
+                    self.stats["acks_dropped"] += 1
+                    return
                 ticket.future.set_result(meta.etag)
             except BaseException as e:      # noqa: BLE001
+                # the attempt failed BEFORE the release above: free the
+                # slot now (idempotent) — arenas outlive backend crashes
+                # by design, so a leak here would be permanent, and the
+                # frontend's recovery re-submits with a fresh slot.
+                slot.release()
                 ticket.future.set_exception(e)
 
         self._pool.submit(_run)
+        return ticket
+
+    def redrive_put(self, tenant: str, cred: str, out: OutputHint,
+                    invocation_id: str) -> PutTicket:
+        """Idempotent retry of a durable write whose ack never arrived
+        (§5). No payload travels: if the original write completed, the
+        per-logical-write dedup record resolves the retry immediately;
+        if it truly was lost (e.g. the daemon died mid-write and took
+        the dedup table with it), the caller still holds the payload
+        and must re-submit via `submit_put` instead."""
+        self._check_alive()
+        ticket = PutTicket(invocation_id, tenant=tenant, cred=cred, out=out)
+        dedup_key = f"{invocation_id}:{out.bucket}/{out.key}"
+        with self._lock:
+            done = self._completed_puts.get(dedup_key)
+        if done is not None:
+            self.stats["dedup_hits"] += 1
+            ticket.future.set_result(done)
+        else:
+            ticket.future.set_exception(LostWriteError(
+                f"no idempotency record for {dedup_key}: the write was "
+                f"lost, re-submit the payload"))
         return ticket
 
     # ------------------------------------------------------------ teardown

@@ -40,6 +40,8 @@ from dataclasses import dataclass
 from heapq import heappop, heappush
 
 from repro.core import fabric as F
+from repro.core import faults as FA
+from repro.core import metrics as M
 from repro.core import plan as P
 from repro.core import workloads as W
 from repro.core.plan import (SYSTEMS, PlanProgram, SystemSpec, compile_plan,
@@ -333,6 +335,12 @@ _SLOTREL = 1 << 22  # phase drops its backend-group slot when done
 _RELB = 1 << 23    # release barrier fires when this phase completes
 _RESPB = 1 << 24   # respond barrier fires when this phase completes
 
+# attempt stamp (faulted interpreter only): bits above the flag field
+# carry the phase's attempt number at schedule time — a crash abort
+# bumps the attempt, lazily invalidating every event of the dead try.
+_ATT_SHIFT = 25
+_CODE_MASK = (1 << _ATT_SHIFT) - 1
+
 # phase opcodes: what starting a ready phase does. Folded statically
 # per (program, duration vector) — the zero-duration test, the resource
 # class, and the group-head test all vanish from the hot path.
@@ -350,6 +358,47 @@ _F_LATS = 4        # recorded latencies
 _F_BASE = 5        # workload name (fn minus the #i suffix)
 
 
+class _FaultedRun:
+    """One in-flight invocation under the FaultPlane interpreter.
+
+    Same information as the hot engine's flat run record plus the
+    recovery state a crash abort needs: per-phase attempt counters
+    (lazy event invalidation), the in-flight map, held daemon slots,
+    and the delivery ledger sets. Shares the node's ``cpu_hot`` /
+    ``be_hot`` pool state and waiter FIFOs with every other run.
+    """
+
+    __slots__ = ("prog", "durs", "succ", "ops", "ops2", "codes", "intra",
+                 "need", "cpu", "cpu_wait", "be", "be_wait", "inst", "fn",
+                 "t_arr", "key", "attempt", "inflight", "slots_held",
+                 "delivered", "acked", "dead")
+
+    def __init__(self, prog: PlanProgram, tmpl: tuple, node: "SimNode",
+                 inst: "SimInstance", fn: str, t_arr: float):
+        self.prog = prog
+        self.need = list(tmpl[0])
+        self.durs = tmpl[2]
+        self.succ = tmpl[3]
+        self.ops = tmpl[4]
+        self.ops2 = tmpl[5]
+        self.codes = tmpl[7]
+        self.intra = tmpl[8]
+        self.cpu = node.cpu_hot
+        self.cpu_wait = node.cpu_wait
+        self.be = node.be_hot
+        self.be_wait = node.be_wait
+        self.inst = inst
+        self.fn = fn
+        self.t_arr = t_arr
+        self.key = (fn, t_arr)
+        self.attempt = [0] * len(prog.names)
+        self.inflight: dict[int, int] = {}
+        self.slots_held: set[int] = set()
+        self.delivered: set[int] = set()
+        self.acked: set[int] = set()
+        self.dead = False
+
+
 # -------------------------------------------------------------- simulator
 
 @dataclass
@@ -363,6 +412,14 @@ class SimResult:
     cold_starts: int
     completed: int
     rejected: int
+    # FaultPlane outputs (None unless the run had a FaultSchedule):
+    # per-kind recovery counters, the retry cycle books, and the
+    # chaos-harness delivery ledgers — (fn, t_arr) -> delivered logical
+    # PUT ordinals / response count (exactly-once is ledger == plan).
+    fault_stats: dict | None = None
+    retry_cycles: dict | None = None
+    put_ledger: dict | None = None
+    responses: dict | None = None
 
     def slowdowns(self) -> dict[str, float]:
         out = {}
@@ -396,11 +453,26 @@ class DensitySimulator:
                  rate_sigma: float = 1.0, max_vms_per_node: int = 280,
                  suite: dict[str, W.Workload] | None = None,
                  arrival_pattern: str | W.ArrivalPattern = "azure",
-                 engine: str = "program"):
+                 engine: str = "program",
+                 faults: "FA.FaultSchedule | None" = None):
         if engine not in ("program", "legacy"):
             raise ValueError(f"unknown engine {engine!r}")
         self.spec: SystemSpec = SYSTEMS[system]
         self.engine = engine
+        #: FaultPlane: a schedule routes every invocation through the
+        #: faulted PlanProgram interpreter (both engines — the event
+        #: discipline mirrors `_start`/`_hot` exactly, so an *empty*
+        #: schedule reproduces the fault-free engines bit-for-bit).
+        self._faults = faults
+        self._outage_until = 0.0
+        self._live: list = []
+        self.acct = M.CycleAccount()
+        self.fault_stats = {"crashes": 0, "aborted_groups": 0,
+                            "killed_invocations": 0, "storage_retries": 0,
+                            "delayed_acks": 0, "restore_retries": 0,
+                            "alloc_stalls": 0}
+        self.put_ledger: dict = {}
+        self.responses: dict = {}
         self.n_functions = n_functions
         self.duration_s = duration_s
         self.warmup_s = warmup_s
@@ -504,6 +576,17 @@ class DensitySimulator:
                     | (_RESPB if i == prog.respond_idx else 0)
                     for i in range(len(prog.names))]
             roots = set(prog.roots)
+            # FaultPlane extras (trailing slots; the hot path reads
+            # only 0..6): the full static code array, and each phase's
+            # intra-backend-group indegree — what an aborted group's
+            # members reset their countdown to before the re-drive.
+            intra = [0] * len(prog.names)
+            for i, succs in enumerate(prog.succ):
+                gi = prog.bgroup_of[i]
+                if gi >= 0:
+                    for s in succs:
+                        if prog.bgroup_of[s] == gi:
+                            intra[s] += 1
             tmpl = (tuple(1 if i in roots else d
                           for i, d in enumerate(prog.indegree)),
                     len(prog.names), durs,
@@ -511,7 +594,8 @@ class DensitySimulator:
                           for succs in prog.succ)
                     + (tuple(code[r] for r in prog.roots),),
                     ops, tuple(timed),
-                    tuple(code[r] for r in prog.roots))
+                    tuple(code[r] for r in prog.roots),
+                    tuple(code), tuple(intra))
             bundle = (prog, tmpl)
             self._progs[key] = bundle
         return bundle
@@ -615,7 +699,9 @@ class DensitySimulator:
         self._execute(inst, self.loop.now, cold=True)
 
     def _execute(self, inst: SimInstance, t_arr: float, cold: bool) -> None:
-        if self.engine == "program":
+        if self._faults is not None:
+            self._execute_faulted(inst, t_arr, cold)
+        elif self.engine == "program":
             rec = self._fnrec[inst.fn]
             bundle = rec[_F_COLD] if cold else rec[_F_WARM]
             if bundle is None:
@@ -1066,10 +1152,386 @@ class DensitySimulator:
             if remaining[ph.name] == 0:
                 start(ph.name)
 
+    # ------------------------------------ FaultPlane PlanProgram engine
+    #
+    # Recovery semantics in the PlanProgram interpreter (paper §5, one
+    # source of truth with the threaded runtime's FaultInjector). The
+    # event discipline deliberately mirrors `_start`/`_hot` — same
+    # scheduling order, same seq consumption — so an EMPTY schedule is
+    # bit-for-bit the fault-free engines (pinned by tests), and the
+    # faulted goldens pin both engine modes against each other.
+    #
+    # Per-variant failure semantics:
+    # * offloaded fabric: a crash aborts only the in-flight
+    #   backend-group phases; each aborted group re-drives from its
+    #   head behind `restart_delay_s` (idempotent PUTs re-execute) and
+    #   the redo work is charged to the `CycleAccount` books;
+    # * coupled fabric (baseline/wasm): the fabric crashes *inside*
+    #   the guest — any invocation mid-fabric-op dies whole, its
+    #   instance is lost, and the caller re-drives it from scratch.
+
+    def _execute_faulted(self, inst: SimInstance, t_arr: float,
+                         cold: bool) -> None:
+        rec = self._fnrec[inst.fn]
+        bundle = rec[_F_COLD] if cold else rec[_F_WARM]
+        if bundle is None:
+            bundle = self._program(rec[_F_BASE], cold)
+            rec[_F_COLD if cold else _F_WARM] = bundle
+        prog, tmpl = bundle
+        node = self.nodes[inst.node]
+        frun = _FaultedRun(prog, tmpl, node, inst, inst.fn, t_arr)
+        self.put_ledger.setdefault(frun.key, set())
+        self._live.append(frun)
+        for c in tmpl[6]:                  # root codes: zero-indegree
+            self._f_start(frun, c)
+
+    def _f_start(self, frun: "_FaultedRun", code: int) -> None:
+        """Phase became ready (mirror of `_start` + fault gates).
+        `code` is the static phase code; the current attempt is stamped
+        into every scheduled event, so aborts invalidate lazily."""
+        loop = self.loop
+        now = loop.now
+        pi = code & _PI_MASK
+        prog = frun.prog
+        sched = self._faults
+        op = frun.ops[pi]
+        d = frun.durs[pi]
+        if op == _OP_SLOT:
+            gid = prog.bgroup_of[pi]
+            if gid in frun.slots_held:
+                # a re-driven group whose slot survived the fault (TCP
+                # holds it to the wire's end): skip the re-acquire
+                ev = code | (frun.attempt[pi] << _ATT_SHIFT)
+                loop.defer(self._f_exec, frun, ev | _EXEC)
+                return
+            gate = self._outage_until if now < self._outage_until else 0.0
+            if sched.specs:
+                w = sched.window_at(FA.ARENA_EXHAUST, now)
+                if w is not None:
+                    # no slot allocatable: stall until reclaim (the
+                    # threaded analogue is `TenantArena.alloc_wait`)
+                    self.fault_stats["alloc_stalls"] += 1
+                    gate = max(gate, w[1])
+            if gate > now:
+                loop.at(gate, self._f_start_cb, frun, code)
+                return
+        elif sched.specs and d > 0.0:
+            if pi == prog.restore_idx:
+                if sched.window_at(FA.RESTORE_FAIL, now) is not None:
+                    # the failed attempt costs a full extra restore
+                    self.fault_stats["restore_retries"] += 1
+                    self.acct.charge(M.HOST_KERNEL,
+                                     d * F.GHZ_MCYC_PER_S)
+                    self.acct.cross(M.RETRY)
+                    d = 2.0 * d
+            elif prog.fabric[pi] and not prog.on_core[pi]:
+                if sched.window_at(FA.STORAGE_ERROR, now) is not None:
+                    self._f_storage_retry(frun, pi, now)
+                    return
+                w = sched.window_at(FA.STORAGE_SLOW, now)
+                if w is not None:
+                    d *= w[2]
+        ev = code | (frun.attempt[pi] << _ATT_SHIFT)
+        if op == _OP_CORE:
+            state = frun.cpu
+            if state[0] < state[1]:
+                state[0] += 1
+                end = now + d
+                hz = self._horizon
+                state[2] += d if end <= hz else hz - now
+                frun.inflight[pi] = 1          # running on a core
+                loop.at(end, self._f_done, frun, ev | _CORE)
+            else:
+                frun.inflight[pi] = 3          # queued for a core
+                frun.cpu_wait.append((frun, ev))
+        elif op == _OP_WIRE:
+            frun.inflight[pi] = 2              # on the wire
+            loop.at(now + d, self._f_done, frun, ev)
+        elif op == _OP_SLOT:
+            state = frun.be
+            if state[0] < state[1]:
+                state[0] += 1
+                frun.slots_held.add(prog.bgroup_of[pi])
+                loop.defer(self._f_exec, frun, ev | _EXEC)
+            else:
+                frun.inflight[pi] = 4          # queued for a daemon slot
+                frun.be_wait.append((frun, ev))
+        else:                                  # zero duration
+            loop.defer(self._f_done, frun, ev)
+
+    def _f_start_cb(self, frun: "_FaultedRun", code: int) -> None:
+        """Deferred/re-driven start (outage end, retry, window end)."""
+        if not frun.dead:
+            self._f_start(frun, code)
+
+    def _f_exec(self, frun: "_FaultedRun", ev: int) -> None:
+        """Backend slot granted (mirror of `_hot`'s EXEC block)."""
+        pi = ev & _PI_MASK
+        if (ev >> _ATT_SHIFT) != frun.attempt[pi]:
+            return                             # aborted between grant+run
+        loop = self.loop
+        now = loop.now
+        op = frun.ops2[pi]
+        d = frun.durs[pi]
+        ev ^= _EXEC
+        if op == _OP_CORE:
+            state = frun.cpu
+            if state[0] < state[1]:
+                state[0] += 1
+                end = now + d
+                hz = self._horizon
+                state[2] += d if end <= hz else hz - now
+                frun.inflight[pi] = 1
+                loop.at(end, self._f_done, frun, ev | _CORE)
+            else:
+                frun.inflight[pi] = 3
+                frun.cpu_wait.append((frun, ev))
+        elif op == _OP_WIRE:
+            frun.inflight[pi] = 2
+            loop.at(now + d, self._f_done, frun, ev)
+        else:
+            loop.defer(self._f_done, frun, ev)
+
+    def _f_done(self, frun: "_FaultedRun", ev: int) -> None:
+        """Phase completion (mirror of `_hot`'s done block + ledgers)."""
+        pi = ev & _PI_MASK
+        if (ev >> _ATT_SHIFT) != frun.attempt[pi]:
+            return                             # stale: attempt aborted
+        loop = self.loop
+        now = loop.now
+        prog = frun.prog
+        sched = self._faults
+        frun.inflight.pop(pi, None)
+        if ev & _CORE:
+            self._f_core_release(frun)
+        if ev & _SLOTREL:
+            gid = prog.bgroup_of[pi]
+            if gid in frun.slots_held:
+                frun.slots_held.discard(gid)
+                self._f_slot_release(frun)
+        po = prog.put_ordinal[pi]
+        if po >= 0 and not frun.dead:
+            if po not in frun.delivered:
+                frun.delivered.add(po)
+                self.put_ledger[frun.key].add(po)
+                if sched.specs and pi not in frun.acked \
+                        and sched.window_at(FA.ACK_DROP, now) is not None:
+                    # the write IS durable; only its ack died. The
+                    # frontend times out and re-drives; the idempotency
+                    # record resolves the retry — barriers (and the
+                    # caller's response) wait out the redrive.
+                    frun.acked.add(pi)
+                    self.fault_stats["delayed_acks"] += 1
+                    self.acct.charge(M.HOST_USER, FA.RETRY_OVERHEAD_MCYC)
+                    self.acct.cross(M.RETRY)
+                    loop.at(now + sched.ack_retry_s, self._f_done, frun,
+                            ev & ~(_SLOTREL | _CORE))
+                    return
+        if ev & _RELB and not frun.dead:
+            self._release(frun.inst)
+        if ev & _RESPB and not frun.dead:
+            if frun.t_arr >= self.warmup_s:
+                self.latencies[frun.fn].append(now - frun.t_arr)
+            self.completed += 1
+            self.responses[frun.key] = self.responses.get(frun.key, 0) + 1
+            frun.dead = True                   # terminal: reply is last
+            try:
+                self._live.remove(frun)
+            except ValueError:
+                pass
+        need = frun.need
+        for sc in frun.succ[pi]:
+            si = sc & _PI_MASK
+            n = need[si] - 1
+            need[si] = n
+            if n == 0:
+                self._f_start(frun, sc)
+
+    def _f_core_release(self, frun: "_FaultedRun") -> None:
+        """Free a node core; grant the oldest *live* waiter (mirror of
+        `_hot`'s CORE block — stale queued entries are skipped without
+        consuming the core)."""
+        state = frun.cpu
+        state[0] -= 1
+        wait = frun.cpu_wait
+        loop = self.loop
+        while wait:
+            run2, ev2 = wait.popleft()
+            pi2 = ev2 & _PI_MASK
+            if (ev2 >> _ATT_SHIFT) != run2.attempt[pi2]:
+                continue
+            state[0] += 1
+            d2 = run2.durs[pi2]
+            now = loop.now
+            end = now + d2
+            hz = self._horizon
+            state[2] += d2 if end <= hz else hz - now
+            run2.inflight[pi2] = 1
+            loop.at(end, self._f_done, run2, ev2 | _CORE)
+            return
+
+    def _f_slot_release(self, frun: "_FaultedRun") -> None:
+        """Free a daemon connection-pool slot; grant the oldest live
+        waiter. During a crash outage the grant is *held back* to the
+        restart instant — the daemon must exist to accept work."""
+        state = frun.be
+        state[0] -= 1
+        wait = frun.be_wait
+        loop = self.loop
+        while wait:
+            run2, ev2 = wait.popleft()
+            pi2 = ev2 & _PI_MASK
+            if (ev2 >> _ATT_SHIFT) != run2.attempt[pi2]:
+                continue
+            state[0] += 1
+            run2.slots_held.add(run2.prog.bgroup_of[pi2])
+            run2.inflight.pop(pi2, None)
+            if loop.now < self._outage_until:
+                loop.at(self._outage_until, self._f_exec, run2,
+                        ev2 | _EXEC)
+            else:
+                loop.defer(self._f_exec, run2, ev2 | _EXEC)
+            return
+
+    def _f_storage_retry(self, frun: "_FaultedRun", pi: int,
+                         now: float) -> None:
+        """A wire transfer hit a storage-error window: the frontend
+        re-drives the whole fetch/write group from its head once the
+        window clears (idempotent; §5), charging the redo work."""
+        sched = self._faults
+        prog = frun.prog
+        w = sched.window_at(FA.STORAGE_ERROR, now)
+        t_retry = max(w[1] if w is not None else now,
+                      now + sched.retry_backoff_s)
+        self.fault_stats["storage_retries"] += 1
+        gid = prog.bgroup_of[pi]
+        domain = M.HOST_USER if self.spec.offload_sdk else M.GUEST_USER
+        if gid >= 0:
+            head = prog.bgroup_head[pi]
+            redo = self._f_reset_group(frun, gid, free_cores=False)
+            self.acct.charge(domain,
+                             redo * F.GHZ_MCYC_PER_S
+                             + FA.RETRY_OVERHEAD_MCYC)
+            self.acct.cross(M.RETRY)
+            self.loop.at(t_retry, self._f_start_cb, frun,
+                         frun.codes[head])
+        else:
+            self.acct.charge(domain, FA.RETRY_OVERHEAD_MCYC)
+            self.acct.cross(M.RETRY)
+            self.loop.at(t_retry, self._f_start_cb, frun, frun.codes[pi])
+
+    def _f_reset_group(self, frun: "_FaultedRun", gid: int, *,
+                       free_cores: bool) -> float:
+        """Invalidate a backend group's current attempt and rewind its
+        intra-group countdowns so the head can re-drive the chain.
+        Returns the group's on-core redo seconds (the retry work the
+        books charge). Members' extra-group deps completed before the
+        group ever ran — compiled chains only re-fire in-group edges."""
+        prog = frun.prog
+        members = prog.bgroup_members[gid]
+        head = members[0]
+        redo = 0.0
+        for m in members:
+            kind = frun.inflight.pop(m, None)
+            frun.attempt[m] += 1
+            if kind == 1 and free_cores:       # was running on a core
+                self._f_core_release(frun)
+            if m != head:
+                frun.need[m] = frun.intra[m]
+            if prog.on_core[m]:
+                redo += frun.durs[m]
+        return redo
+
+    def _crash_cb(self, _a=None, _b=None) -> None:
+        """A `backend_crash` FaultSpec fires (scheduled by `run`)."""
+        sched = self._faults
+        loop = self.loop
+        now = loop.now
+        self.fault_stats["crashes"] += 1
+        if self.spec.offload_sdk:
+            # crash-only shared daemon: abort every in-flight backend
+            # group; re-drive each from its head behind the restart
+            self._outage_until = max(self._outage_until,
+                                     now + sched.restart_delay_s)
+            for frun in list(self._live):
+                prog = frun.prog
+                gids = sorted({prog.bgroup_of[pi]
+                               for pi in frun.inflight
+                               if prog.bgroup_of[pi] >= 0})
+                for gid in gids:
+                    redo = self._f_reset_group(frun, gid, free_cores=True)
+                    if gid in frun.slots_held:
+                        # the daemon's pool died with it; the re-drive
+                        # re-acquires once the fresh daemon is up
+                        frun.slots_held.discard(gid)
+                        self._f_slot_release(frun)
+                    self.fault_stats["aborted_groups"] += 1
+                    self.acct.charge(M.HOST_USER,
+                                     redo * F.GHZ_MCYC_PER_S
+                                     + FA.RETRY_OVERHEAD_MCYC)
+                    self.acct.cross(M.RETRY)
+                    head = prog.bgroup_members[gid][0]
+                    loop.at(self._outage_until, self._f_start_cb, frun,
+                            frun.codes[head])
+        else:
+            # coupled design: the fabric crashed inside the guest — any
+            # invocation mid-fabric-op dies whole and re-arrives
+            t_retry = now + sched.restart_delay_s
+            for frun in list(self._live):
+                prog = frun.prog
+                if not any(prog.fabric[pi] for pi in frun.inflight):
+                    continue
+                running_cores = sum(1 for k in frun.inflight.values()
+                                    if k == 1)
+                # blanket invalidation FIRST: pending events (zero-delay
+                # completions, queued grants) must not fire on the
+                # corpse, and the freed cores below must not be granted
+                # back to it
+                for i in range(len(frun.attempt)):
+                    frun.attempt[i] += 1
+                frun.inflight.clear()
+                for _ in range(running_cores):
+                    self._f_core_release(frun)
+                frun.dead = True
+                self._live.remove(frun)
+                inst = frun.inst
+                node = self.nodes[inst.node]
+                node.mem_used -= inst.rss_mb
+                node.vms -= 1
+                inst.state = "dead"
+                self.fault_stats["killed_invocations"] += 1
+                redo = sum(frun.durs[i]
+                           for i in range(len(frun.attempt))
+                           if prog.on_core[i])
+                self.acct.charge(M.GUEST_USER,
+                                 redo * F.GHZ_MCYC_PER_S
+                                 + FA.RETRY_OVERHEAD_MCYC)
+                self.acct.cross(M.RETRY)
+                loop.at(t_retry, self._f_rearrive, frun.fn, frun.t_arr)
+
+    def _f_rearrive(self, fn: str, t_arr: float) -> None:
+        """Caller re-drives a killed invocation from scratch; latency
+        keeps accruing from the ORIGINAL arrival (the caller saw one
+        long invocation, not two)."""
+        idle = self.idle[fn]
+        if idle:
+            inst = idle.pop()
+            inst.state = "busy"
+            inst.expire_seq += 1
+            self._execute_faulted(inst, t_arr, cold=False)
+            return
+        inst = self._spawn(fn)
+        if inst is None:
+            self.backlog[fn].append(t_arr)
+            return
+        inst.state = "busy"
+        self._execute_faulted(inst, t_arr, cold=True)
+
     # ---------------------------------------------------------------- run
 
     def run(self) -> SimResult:
         until = self.duration_s + 30.0          # drain tail
+        faulted = self._faults is not None
         if self.engine == "program":
             # batched arrivals: one time-sorted stream, fed to the loop
             # outside the heap (stable sort keeps the per-function
@@ -1080,9 +1542,17 @@ class DensitySimulator:
             stream.sort(key=lambda e: e[0])
             self.loop.feed(stream, self._arrive)
         else:                              # pre-refactor path: heap-load
+            if faulted:
+                self._horizon = until
             for fn, times in self.arrivals.items():
                 for t in times:
                     self.loop.at(t, self._arrive, fn)
+        if faulted:
+            # crash events enter the heap as generic callbacks — after
+            # the arrivals, so exact-time ties resolve arrival-first on
+            # both engines (the feed's tie rule)
+            for t in self._faults.crashes():
+                self.loop.at(t, self._crash_cb)
 
         # memory sampling
         def sample(_a=None, _b=None):
@@ -1092,13 +1562,15 @@ class DensitySimulator:
             if self.loop.now < self.duration_s - 1.0:
                 self.loop.after(1.0, sample)
         self.loop.after(self.warmup_s, sample)
-        if self.engine == "program":
-            self._run_hot(until)
-        else:
+        if faulted or self.engine != "program":
+            # the faulted interpreter is event-driven on both engines;
+            # only fault-free program runs take the fused loop
             self.loop.run(until)
+        else:
+            self._run_hot(until)
 
         horizon = self.duration_s + 30.0
-        if self.engine == "program":
+        if self.engine == "program" or faulted:
             # granted core-time clipped at the horizon (see `_start`)
             cpu_busy = sum(n.cpu_hot[2] for n in self.nodes)
         else:
@@ -1113,7 +1585,11 @@ class DensitySimulator:
             unloaded=unloaded,
             cpu_util=cpu_util, mem_util=mem_util,
             cold_starts=self.cold_starts, completed=self.completed,
-            rejected=self.rejected)
+            rejected=self.rejected,
+            fault_stats=dict(self.fault_stats) if faulted else None,
+            retry_cycles=self.acct.snapshot() if faulted else None,
+            put_ledger=dict(self.put_ledger) if faulted else None,
+            responses=dict(self.responses) if faulted else None)
 
 
 def find_density(system: str, *, lo: int = 20, hi: int = 800,

@@ -21,12 +21,14 @@ instance blocks on its own writes.
 from __future__ import annotations
 
 import threading
+from concurrent.futures import TimeoutError as _FutureTimeout
 from dataclasses import dataclass, field
 from typing import Protocol, runtime_checkable
 
 from repro.core import fabric as F
 from repro.core import metrics as M
-from repro.core.backend import BackendCrashed, NexusBackend, PrefetchHandle
+from repro.core.backend import (BackendCrashed, LostWriteError, NexusBackend,
+                                PrefetchHandle, PutTicket)
 from repro.core.hints import InputHint, OutputHint
 from repro.core.storage import RemoteStorage
 from repro.core.streaming import CircularBuffer
@@ -99,14 +101,44 @@ class NexusClient:
         F.remoted_op_cost(sdk, nominal).charge(self._acct)
 
     def _retry(self, fn):
+        """Transparent retry across backend crashes AND transient
+        storage errors (§5): both surface as `ConnectionError`s, both
+        are converted into latency by re-driving the request against
+        the (possibly restarted) current backend."""
         last: BaseException | None = None
         for _ in range(self._max_retries):
             try:
                 return fn()
-            except BackendCrashed as e:
+            except LostWriteError:
+                raise                           # needs the payload again
+            except ConnectionError as e:        # crash or transient
                 last = e
                 threading.Event().wait(0.002)   # supervisor restart window
         raise last if last else RuntimeError("retry exhausted")
+
+    def wait_ack(self, ticket: PutTicket, timeout_s: float | None = None):
+        """Block until a durable write's ack arrives. A lost ack (the
+        write completed but the response died with the daemon) is
+        re-driven idempotently: the retry carries no payload and the
+        backend's per-logical-write dedup record resolves it (§5). A
+        write that FAILED (transient storage error, crash mid-write)
+        has no dedup record — the redrive then raises `LostWriteError`
+        and the caller must re-submit the payload."""
+        timeout = self.ack_timeout_s if timeout_s is None else timeout_s
+        last: BaseException | None = None
+        for _ in range(self._max_retries):
+            try:
+                return ticket.future.result(timeout=timeout)
+            except LostWriteError:
+                raise                        # needs the payload again
+            except (_FutureTimeout, TimeoutError, ConnectionError) as e:
+                last = e
+                if isinstance(e, BackendCrashed):
+                    threading.Event().wait(0.002)  # restart window
+                t = ticket
+                ticket = self._retry(lambda: self._backend.redrive_put(
+                    t.tenant, t.cred, t.out, t.invocation_id))
+        raise last if last else RuntimeError("ack retry exhausted")
 
     # ------------------------------------------------------------- boto3 API
 
@@ -149,7 +181,8 @@ class NexusClient:
         ticket is recorded so the invocation response can gate on it."""
         def _submit():
             be = self._backend
-            slot = be.arenas.get(self._ctx.tenant).alloc(max(len(Body), 1))
+            slot = be.arenas.get(self._ctx.tenant).alloc_wait(
+                max(len(Body), 1), timeout_s=be.alloc_timeout_s)
             slot.write(Body)
             return be.submit_put(
                 self._ctx.tenant, self._ctx.cred_handle,
@@ -158,7 +191,12 @@ class NexusClient:
         ticket = self._retry(_submit)
         self._charge_stub_call("aws", len(Body))
         if wait:
-            return ticket.future.result(timeout=self.ack_timeout_s)
+            try:
+                return self.wait_ack(ticket)
+            except LostWriteError:
+                # daemon died mid-write, dedup record lost: the payload
+                # is still in hand — at-least-once demands a resubmit.
+                return self.wait_ack(self._retry(_submit))
         self.pending_puts.append(ticket)
         return ticket
 
@@ -175,7 +213,7 @@ class BaselineClient:
 
     def __init__(self, remote: RemoteStorage, acct: M.CycleAccount,
                  lang: str = "py", sleep=None, *, sdk: str = "aws",
-                 virtualized: bool = True):
+                 virtualized: bool = True, fault=None):
         import time
         self._remote = remote
         self._acct = acct
@@ -183,6 +221,14 @@ class BaselineClient:
         self._sdk = sdk
         self._virtualized = virtualized
         self._sleep = sleep or time.sleep
+        #: FaultPlane tap (coupled variants): the fabric runs *inside*
+        #: the guest, so a fabric crash kills the whole invocation —
+        #: there is no supervisor underneath to hide it (§5).
+        self._fault = fault
+
+    def _check_fault(self) -> None:
+        if self._fault is not None and self._fault():
+            raise BackendCrashed("in-guest fabric crashed (coupled design)")
 
     def _run_fabric(self, nbytes: int) -> None:
         nominal = int(nbytes * self._remote.cost_scale)
@@ -194,6 +240,7 @@ class BaselineClient:
         self._sleep(cost.total() / F.GHZ_MCYC_PER_S)
 
     def get_object(self, Bucket: str, Key: str) -> dict:
+        self._check_fault()
         data = self._remote.get(Bucket, Key)
         self._run_fabric(len(data))
         # the guest SDK deserializes into its own buffers: one extra copy
@@ -201,5 +248,6 @@ class BaselineClient:
         return {"Body": memoryview(body), "ContentLength": len(data)}
 
     def put_object(self, Bucket: str, Key: str, Body):
+        self._check_fault()
         self._run_fabric(len(Body))
         return self._remote.put(Bucket, Key, bytes(Body))

@@ -41,7 +41,8 @@ class FunctionInstance:
     """One microVM hosting one function; executes invocations serially."""
 
     def __init__(self, workload: Workload, spec: SystemSpec,
-                 acct: M.CycleAccount, sleep=time.sleep):
+                 acct: M.CycleAccount, sleep=time.sleep,
+                 fault_hooks=None):
         self.id = next(_iid)
         self.workload = workload
         self.spec = spec
@@ -49,6 +50,10 @@ class FunctionInstance:
         self._sleep = sleep
         self._busy = threading.Lock()
         self.state = "cold"
+        # FaultPlane tap (faults.FaultHooks.restore_fail): a failed
+        # snapshot restore costs a full extra restore pass
+        self.fault_hooks = fault_hooks
+        self.restore_retries = 0
         # the memory variant (and with it the snapshot working set) is
         # spec data — adding a system variant cannot silently fall back
         # to the wrong footprint.
@@ -61,19 +66,33 @@ class FunctionInstance:
         return self.memory.total()
 
     def restore(self) -> RestoreBreakdown:
-        """Snapshot restore (REAP): create uVM + insert working set."""
+        """Snapshot restore (REAP): create uVM + insert working set.
+
+        A restore-failure fault (FaultPlane) wastes the whole attempt —
+        the retry pays the full create + working-set insert again, and
+        the page-fault cycles of the dead attempt are still charged.
+        Bounded at 2 failed attempts per restore so a long fault window
+        cannot livelock a cold start."""
         pages = F.working_set_pages_components(self.memory)
         bd = RestoreBreakdown(
             create_s=F.SNAPSHOT_FIXED_S,
             ws_insert_s=pages * F.RESTORE_US_PER_PAGE * 1e-6,
             ws_pages=pages)
+        hooks = self.fault_hooks
+        while (hooks is not None and hooks.restore_fail is not None
+               and self.restore_retries < 2 and hooks.restore_fail()):
+            self.restore_retries += 1
+            self._sleep(bd.total_s)          # the dead attempt's cost
+            self.acct.charge(M.HOST_KERNEL, pages * 2.0e-3)
         self._sleep(bd.total_s)
         # page-fault handling burns host-kernel cycles + exits (no VM
         # boundary -> no exits for the wasm sandbox)
         self.acct.charge(M.HOST_KERNEL, pages * 2.0e-3)
         if self.spec.virtualized:
             self.acct.cross(M.VM_EXIT, pages // 8)  # REAP batches faults
-        self.state = "warm"
+        # a cold acquire restores while the busy lock is already held —
+        # the instance is NOT idle-warm until its release()
+        self.state = "busy" if self._busy.locked() else "warm"
         self.restore_info = bd
         return bd
 
@@ -113,12 +132,13 @@ class InstancePool:
 
     def __init__(self, workload: Workload, spec: SystemSpec,
                  acct: M.CycleAccount, sleep=time.sleep,
-                 max_instances: int = 64):
+                 max_instances: int = 64, fault_hooks=None):
         self.workload = workload
         self.spec = spec
         self.acct = acct
         self._sleep = sleep
         self.max_instances = max_instances
+        self.fault_hooks = fault_hooks
         self._lock = threading.Lock()
         self._instances: list[FunctionInstance] = []
         self.cold_starts = 0
@@ -146,7 +166,8 @@ class InstancePool:
                 raise RuntimeError(
                     f"{self.workload.name}: instance cap reached")
             inst = FunctionInstance(self.workload, self.spec, self.acct,
-                                    self._sleep)
+                                    self._sleep,
+                                    fault_hooks=self.fault_hooks)
             assert inst.acquire()
             self._instances.append(inst)
             self.cold_starts += 1
@@ -158,7 +179,8 @@ class InstancePool:
         Nexus to overlap restore with input prefetch, §4.2.1)."""
         with self._lock:
             inst = FunctionInstance(self.workload, self.spec, self.acct,
-                                    self._sleep)
+                                    self._sleep,
+                                    fault_hooks=self.fault_hooks)
             assert inst.acquire()
             self._instances.append(inst)
             self.cold_starts += 1

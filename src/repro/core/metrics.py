@@ -27,6 +27,7 @@ DOMAINS = (GUEST_USER, GUEST_KERNEL, HOST_USER, HOST_KERNEL)
 VM_EXIT = "vm_exit"            # guest->host trap (virtio kick, MMIO, ...)
 VCPU_WAKEUP = "vcpu_wakeup"    # host wakes a blocked vCPU
 CTRL_MSG = "ctrl_msg"          # vsock control-plane message (Nexus path)
+RETRY = "retry"                # FaultPlane recovery redrive (§5)
 
 
 class CycleAccount:

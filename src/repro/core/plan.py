@@ -471,6 +471,23 @@ class PlanProgram:
     group_succ: tuple[tuple[int, ...], ...]
     group_indegree: tuple[int, ...]
     group_roots: tuple[int, ...]
+    # ---- FaultPlane lowering (des faulted interpreter, core/faults.py)
+    #: phase executes fabric work (fetch/write/connect chains) — the
+    #: blast radius of a fabric crash: under an offloaded SDK these run
+    #: in the shared backend (abort + re-queue behind the restart), in
+    #: a coupled design they run inside the guest (the crash kills the
+    #: whole invocation)
+    fabric: tuple[bool, ...]
+    #: backend-group ordinal per phase (-1: none) and each ordinal's
+    #: head phase index + member list — crash recovery re-drives an
+    #: aborted group from its head
+    bgroup_of: tuple[int, ...]
+    bgroup_head: tuple[int, ...]
+    bgroup_members: tuple[tuple[int, ...], ...]
+    #: logical-PUT ordinal completed by this phase (-1: none) — the
+    #: chaos ledger's exactly-once unit
+    put_ordinal: tuple[int, ...]
+    restore_idx: int
 
     @property
     def n_phases(self) -> int:
@@ -493,6 +510,23 @@ def lower_program(plan: PhasePlan, kernel_bypass: bool = False) -> PlanProgram:
         for d in ds:
             gsucc[gidx[d]].append(gidx[g])
 
+    # FaultPlane lowering: fabric mask, backend-group geometry, logical
+    # PUT ordinals (see the PlanProgram field docs). `connect` is NOT
+    # fabric: threaded connection setup never traverses RemoteStorage,
+    # so storage fault windows must not touch it in the DES either —
+    # one fault surface, two executors.
+    fabric_bases = ("fetch_cpu", "fetch_net", "write_cpu", "write_net")
+    base = [n.partition("[")[0] for n in names]
+    ordinals = [n.partition("[")[2].rstrip("]") for n in names]
+    bg_names = sorted(groups, key=lambda g: idx[groups[g][0]])
+    bg_ord = {g: i for i, g in enumerate(bg_names)}
+    bgroup_of = tuple(bg_ord[p.backend_group] if p.backend_group else -1
+                      for p in plan.phases)
+    bgroup_members = tuple(tuple(idx[m] for m in groups[g])
+                           for g in bg_names)
+    bgroup_head = tuple(bgroup_members[o][0] if o >= 0 else -1
+                        for o in bgroup_of)
+
     return PlanProgram(
         plan=plan, kernel_bypass=kernel_bypass,
         names=names,
@@ -509,6 +543,13 @@ def lower_program(plan: PhasePlan, kernel_bypass: bool = False) -> PlanProgram:
         group_succ=tuple(tuple(sorted(s)) for s in gsucc),
         group_indegree=tuple(len(gdeps[g]) for g in gnames),
         group_roots=tuple(i for i, g in enumerate(gnames) if not gdeps[g]),
+        fabric=tuple(b in fabric_bases for b in base),
+        bgroup_of=bgroup_of,
+        bgroup_head=bgroup_head,
+        bgroup_members=bgroup_members,
+        put_ordinal=tuple(int(o) if b == "write_net" else -1
+                          for b, o in zip(base, ordinals)),
+        restore_idx=names.index("restore"),
     )
 
 

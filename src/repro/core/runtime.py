@@ -35,6 +35,7 @@ from typing import Any
 from repro.core import fabric as F
 from repro.core import metrics as M
 from repro.core.backend import NexusBackend
+from repro.core.faults import FaultHooks
 from repro.core.frontend import (BaselineClient, GuestContext,
                                  HandlerContext, NexusClient)
 from repro.core.hints import extract_hints, make_event
@@ -402,6 +403,10 @@ class WorkerNode:
         self.writeback_ack_timeout_s = writeback_ack_timeout_s
         #: upper bound on any one plan walk / guest observation wait
         self.plan_stall_timeout_s = plan_stall_timeout_s
+        #: FaultPlane taps — `faults.FaultInjector` arms these from a
+        #: `FaultSchedule`; every component reads them at call time, so
+        #: the injection survives supervisor backend restarts.
+        self.fault_hooks = FaultHooks()
         self.store = store if store is not None else ObjectStore()
         self.remote = RemoteStorage(
             self.store, self.spec.transport, self.acct,
@@ -433,7 +438,8 @@ class WorkerNode:
             self._tokens = TokenManager()
         return NexusBackend(self.remote, self.acct,
                             transport_name=self.spec.transport,
-                            arenas=self._arenas, tokens=self._tokens)
+                            arenas=self._arenas, tokens=self._tokens,
+                            fault_hooks=self.fault_hooks)
 
     @property
     def backend(self) -> NexusBackend | None:
@@ -445,7 +451,8 @@ class WorkerNode:
         w = fn if isinstance(fn, Workload) else REGISTRY[fn]
         self._workloads[w.name] = w
         self._pools[w.name] = InstancePool(
-            w, self.spec, self.acct, max_instances=self._max_instances)
+            w, self.spec, self.acct, max_instances=self._max_instances,
+            fault_hooks=self.fault_hooks)
         if self.supervisor:
             self._creds[w.name] = self.backend.register_function(
                 w.name, {"in", "out"})
@@ -484,11 +491,20 @@ class WorkerNode:
     # ----------------------------------------------------------- invocation
 
     def invoke(self, fn_name: str, *, input_key: str | None = None,
-               opaque: bool = False) -> "Future[InvocationResult]":
+               opaque: bool = False,
+               inv_id: str | None = None) -> "Future[InvocationResult]":
         """Submit one invocation; returns the caller's response future.
         The future resolves only after every output is durably written
-        (at-least-once, §4.2.5) — even under async writeback."""
-        inv_id = f"{fn_name}-{next(self._inv_counter)}-{uuid.uuid4().hex[:6]}"
+        (at-least-once, §4.2.5) — even under async writeback.
+
+        `inv_id` pins the invocation id (and with it every output key
+        and PUT idempotency key): a caller re-driving a failed
+        invocation under the same id gets at-least-once semantics with
+        byte-identical durable state — the chaos harness's contract.
+        """
+        if inv_id is None:
+            inv_id = (f"{fn_name}-{next(self._inv_counter)}"
+                      f"-{uuid.uuid4().hex[:6]}")
         w = self._workloads[fn_name]
         inputs = []
         for i in range(len(w.profile.gets)):
@@ -565,9 +581,12 @@ class WorkerNode:
     def _make_client(self, ctx: _Invocation) -> None:
         spec = self.spec
         if spec.coupled:
+            hooks = self.fault_hooks
             ctx.client = BaselineClient(
                 self.remote, self.acct, lang=spec.guest_lang,
-                sdk=spec.sdk, virtualized=spec.virtualized)
+                sdk=spec.sdk, virtualized=spec.virtualized,
+                fault=lambda: (hooks.guest_crash is not None
+                               and hooks.guest_crash()))
         else:
             ctx.gctx = GuestContext(tenant=ctx.w.name,
                                     cred_handle=self._creds[ctx.w.name],
@@ -619,8 +638,10 @@ class WorkerNode:
             if ticket is not None:
                 # the VM may already be released at the plan's barrier;
                 # the group (and the response) still gates on the ack.
-                inv.guest.etags[k] = ticket.future.result(
-                    timeout=self.writeback_ack_timeout_s)
+                # A lost ack is re-driven idempotently (§5) — the
+                # client's wait resolves it from the dedup record.
+                inv.guest.etags[k] = inv.client.wait_ack(
+                    ticket, self.writeback_ack_timeout_s)
         return act
 
     def _act_restore(self, ctx: _Invocation) -> None:

@@ -76,14 +76,48 @@ class ObjectStore:
             self._data.pop(k, None)
             self._meta.pop(k, None)
 
+    def list_bucket(self, bucket: str) -> dict[str, bytes]:
+        """Snapshot of one bucket's durable state: key -> bytes. The
+        chaos harness diffs these byte-for-byte against the fault-free
+        oracle's."""
+        prefix = bucket + "/"
+        with self._lock:
+            return {k[len(prefix):]: bytes(v)
+                    for k, v in self._data.items() if k.startswith(prefix)}
+
 
 @dataclass
 class FaultPlan:
-    """Deterministic fault injection for resilience tests/benchmarks."""
+    """Deterministic fault injection for resilience tests/benchmarks.
+
+    Two modes, composable:
+
+    * counter-based (`slow_every` / `fail_every`): every Nth op is a
+      straggler / transient error — load-independent, the historical
+      hedged-read test harness;
+    * window-based (`slow_windows` / `fail_windows` + `clock`): the
+      `faults.FaultSchedule` storage windows, evaluated against the
+      shared fault clock — what `faults.FaultInjector` arms. A window
+      is ``(start_s, end_s, factor)``; ops started inside a slow
+      window stretch by ``factor``, ops inside a fail window raise a
+      transient `ConnectionError` (frontends retry).
+    """
 
     slow_every: int = 0            # every Nth op is a straggler
     slow_factor: float = 8.0
     fail_every: int = 0            # every Nth op raises (transient)
+    slow_windows: tuple = ()       # (start_s, end_s, factor) on `clock`
+    fail_windows: tuple = ()       # (start_s, end_s, _) on `clock`
+    clock: object = None           # callable -> seconds on the fault clock
+
+    def slow_factor_at(self, t: float) -> float:
+        for s, e, f in self.slow_windows:
+            if s <= t < e:
+                return f
+        return 1.0
+
+    def failing_at(self, t: float) -> bool:
+        return any(s <= t < e for s, e, _f in self.fail_windows)
 
 
 class RemoteStorage:
@@ -116,14 +150,22 @@ class RemoteStorage:
 
     def _service_time(self, nbytes: int, op_no: int) -> float:
         t = self.transport.transfer_latency(int(nbytes * self.cost_scale))
-        if self.faults.slow_every and op_no % self.faults.slow_every == 0:
-            t *= self.faults.slow_factor
+        f = self.faults
+        if f.slow_every and op_no % f.slow_every == 0:
+            t *= f.slow_factor
+        if f.slow_windows and f.clock is not None:
+            t *= f.slow_factor_at(f.clock())
         return t
 
     def _maybe_fail(self, op_no: int) -> None:
-        if self.faults.fail_every and op_no % self.faults.fail_every == 0:
+        f = self.faults
+        if f.fail_every and op_no % f.fail_every == 0:
             self.transient_failures += 1
             raise ConnectionError(f"transient storage failure (op {op_no})")
+        if f.fail_windows and f.clock is not None and f.failing_at(f.clock()):
+            self.transient_failures += 1
+            raise ConnectionError(
+                f"transient storage failure (fault window, op {op_no})")
 
     def get(self, bucket: str, key: str) -> bytes:
         op = self._next_op()

@@ -26,6 +26,7 @@ class CircularBuffer:
         self._tail = 0          # next read
         self._count = 0
         self._closed = False
+        self._error: BaseException | None = None
         self.total_in = 0
         #: optional hook fired exactly once when the producer closes the
         #: ring — by then `total_in` is the full streamed byte count
@@ -55,11 +56,15 @@ class CircularBuffer:
                 self._not_empty.notify()
 
     def read(self, n: int) -> bytes:
-        """Consumer: up to `n` bytes; b'' at end-of-stream."""
+        """Consumer: up to `n` bytes; b'' at end-of-stream. A producer
+        failure (`fail`) re-raises here once the buffered bytes drain —
+        a truncated stream must never read as a clean EOF."""
         with self._not_empty:
             while self._count == 0 and not self._closed:
                 self._not_empty.wait()
             if self._count == 0:
+                if self._error is not None:
+                    raise self._error
                 return b""
             n = min(n, self._count, self.capacity - self._tail)
             out = bytes(self._view[self._tail:self._tail + n])
@@ -84,3 +89,11 @@ class CircularBuffer:
             self._not_full.notify_all()
         if not already and self.on_close is not None:
             self.on_close(self)
+
+    def fail(self, exc: BaseException) -> None:
+        """Producer-side abort: close the ring carrying `exc`, which the
+        consumer's next `read` past the buffered bytes re-raises."""
+        with self._lock:
+            if self._error is None:
+                self._error = exc
+        self.close()

@@ -356,6 +356,56 @@ SCENARIO_NAMES = list(SCENARIOS)
 REGISTRY: dict[str, Workload] = {**SUITE, **SCENARIOS}
 
 
+# ----------------------------------------------------------- chaos suite
+#
+# Tiny-payload workloads for the FaultPlane chaos harness and the
+# fault-tolerance benchmark: threaded invocations complete in
+# milliseconds (the differential harness replays whole fault schedules
+# in real time), and the fan-out shape exercises per-logical-write PUT
+# idempotency under retries. Deliberately NOT in REGISTRY: the paper
+# suite's denominators and the DES parity goldens must not move.
+
+_CH_OUT = 64 * 1024
+
+
+def _fit(digest: bytes, nbytes: int) -> bytes:
+    return (digest * (nbytes // len(digest) + 1))[:nbytes]
+
+
+def _chaos_handler(event, ctx):
+    src, dst = event["inputs"][0], event["outputs"][0]
+    obj = ctx.storage.get_object(Bucket=src["bucket"], Key=src["key"])
+    body = _fit(hashlib.sha256(obj["Body"]).digest(), _CH_OUT)
+    ctx.storage.put_object(Bucket=dst["bucket"], Key=dst["key"], Body=body)
+    return {"statusCode": 200, "bytes_out": len(body)}
+
+
+def _chaos_fan_handler(event, ctx):
+    src = event["inputs"][0]
+    obj = ctx.storage.get_object(Bucket=src["bucket"], Key=src["key"])
+    seed = hashlib.sha256(obj["Body"]).digest()
+    for i, dst in enumerate(event["outputs"]):
+        branch = hashlib.sha256(seed + i.to_bytes(2, "little")).digest()
+        ctx.storage.put_object(Bucket=dst["bucket"], Key=dst["key"],
+                               Body=_fit(branch, _CH_OUT // 2))
+    return {"statusCode": 200, "outputs": len(event["outputs"])}
+
+
+def chaos_suite() -> dict[str, Workload]:
+    """The chaos harness's deployment mix: `CH` (the classic shape) and
+    `CH-FAN` (one GET, two durable PUTs — distinct logical keys whose
+    at-least-once retries must dedup per key, never cross keys)."""
+    return {w.name: w for w in (
+        Workload("CH", IOProfile((
+            Get(96 * 1024), ComputeSegment(2.0), Put(_CH_OUT))),
+            8.0, _chaos_handler),
+        Workload("CH-FAN", IOProfile((
+            Get(96 * 1024), ComputeSegment(1.0),
+            Put(_CH_OUT // 2), Put(_CH_OUT // 2))),
+            8.0, _chaos_fan_handler),
+    )}
+
+
 def compute_io_ratio(w: Workload, io_mcycles_per_mb: float = 12.0) -> float:
     """Approximate compute share of (compute + baseline-I/O) cycles."""
     io = w.io_mb * io_mcycles_per_mb

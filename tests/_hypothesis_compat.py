@@ -1,0 +1,107 @@
+"""Property-test front end: real `hypothesis` when installed, a seeded
+fallback otherwise — the suite RUNS either way, it never skips.
+
+`hypothesis` is a hard dependency of the ``test`` extra
+(``pip install -e .[test]``), so CI always gets the real engine —
+shrinking, the example database, health checks. Environments without it
+(e.g. a bare container running tier-1) fall back to a minimal
+deterministic sampler implementing exactly the strategy subset this
+suite uses: same test bodies, seeded draws keyed on the test's
+qualname, no shrinking. A failing property therefore fails loudly
+everywhere instead of silently skipping where the dependency is absent.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import HealthCheck, given, settings  # noqa: F401
+    from hypothesis import strategies as st              # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:                                      # seeded fallback
+    import random
+    import zlib
+
+    HAVE_HYPOTHESIS = False
+
+    class HealthCheck:                                   # noqa: D401
+        too_slow = "too_slow"
+        filter_too_much = "filter_too_much"
+        data_too_large = "data_too_large"
+
+    class _Strategy:
+        __slots__ = ("_draw",)
+
+        def __init__(self, draw):
+            self._draw = draw
+
+    class _DataStrategy(_Strategy):
+        pass
+
+    class _DataObject:
+        def __init__(self, rng: "random.Random"):
+            self._rng = rng
+
+        def draw(self, strategy: _Strategy, label=None):
+            return strategy._draw(self._rng)
+
+    class _St:
+        """The strategy subset the suite draws from."""
+
+        @staticmethod
+        def integers(min_value=0, max_value=1 << 30):
+            return _Strategy(lambda r: r.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0):
+            return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda r: r.random() < 0.5)
+
+        @staticmethod
+        def binary(min_size=0, max_size=128):
+            return _Strategy(
+                lambda r: r.randbytes(r.randint(min_size, max_size)))
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=16):
+            return _Strategy(
+                lambda r: [elements._draw(r)
+                           for _ in range(r.randint(min_size, max_size))])
+
+        @staticmethod
+        def sampled_from(seq):
+            items = list(seq)
+            return _Strategy(lambda r: items[r.randrange(len(items))])
+
+        @staticmethod
+        def data():
+            return _DataStrategy(None)
+
+    st = _St()
+
+    def settings(max_examples: int = 20, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            # no functools.wraps: pytest must see a fixture-free
+            # (*args) signature, not the wrapped parameter names
+            def wrapper(*args):
+                n = getattr(wrapper, "_max_examples", 20)
+                base = zlib.crc32(fn.__qualname__.encode())
+                for i in range(n):
+                    rng = random.Random((base << 20) + i)
+                    vals = [(_DataObject(rng)
+                             if isinstance(s, _DataStrategy)
+                             else s._draw(rng)) for s in strategies]
+                    fn(*args, *vals)
+            wrapper.__name__ = fn.__name__
+            wrapper.__qualname__ = fn.__qualname__
+            wrapper.__doc__ = fn.__doc__
+            wrapper._max_examples = getattr(fn, "_max_examples", 20)
+            return wrapper
+        return deco

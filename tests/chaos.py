@@ -1,0 +1,181 @@
+"""Differential chaos harness (paper §5 as an executed property).
+
+One `FaultSchedule` is replayed against three executions and the
+results are diffed:
+
+* the THREADED runtime (real threads, real bytes, real crash windows)
+  armed through `faults.FaultInjector`;
+* the DES (`DensitySimulator(faults=...)`), under BOTH engine modes;
+* a fault-free ORACLE of each.
+
+Invariants asserted (the crash-only contract):
+
+* durable outputs stay byte-identical to the oracle's — retried and
+  re-driven writes may bump etags (at-least-once) but never change
+  bytes, lose a logical key, or invent one;
+* every caller response is eventually delivered exactly once (the
+  harness re-drives failed invocations under the same invocation id,
+  like a real FaaS front door — idempotency keys make that safe);
+* at-least-once writes never dupe across distinct logical keys: the
+  delivered-PUT ledger of every invocation equals its plan's PUT set;
+* DES and threaded recovery agree in structure: fault schedules only
+  ever ADD latency, and both executors recover to the oracle's
+  completion set.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+from repro.core.des import DensitySimulator, SimResult
+from repro.core.faults import FaultInjector, FaultSchedule
+from repro.core.runtime import WorkerNode
+from repro.core.workloads import chaos_suite
+
+#: all seven variants — the acceptance surface of the chaos invariant
+ALL_SYSTEMS = ("baseline", "nexus-tcp", "nexus-async", "nexus",
+               "nexus-sdk-only", "nexus-prefetch-only", "wasm")
+
+
+def schedule_from_seed(seed: int, horizon_s: float, *,
+                       intensity: float = 1.0,
+                       restart_delay_s: float | None = None
+                       ) -> FaultSchedule:
+    """The harness's hypothesis surface: hypothesis draws `seed` and
+    `intensity`, `FaultSchedule.generate` turns them into one
+    deterministic schedule — identical in every process and against
+    every executor."""
+    per_s = intensity / horizon_s
+    kw = {}
+    if restart_delay_s is not None:
+        kw["restart_delay_s"] = restart_delay_s
+    return FaultSchedule.generate(
+        seed, horizon_s * 0.8,
+        crash_rate=1.5 * per_s,
+        storage_slow_rate=0.7 * per_s,
+        storage_error_rate=0.5 * per_s,
+        ack_drop_rate=0.7 * per_s,
+        restore_fail_rate=0.5 * per_s,
+        arena_exhaust_rate=0.3 * per_s,
+        mean_window_s=horizon_s * 0.08,
+        slow_factor=6.0,
+        **kw)
+
+
+# ----------------------------------------------------------------- DES side
+
+def run_des(system: str, schedule: FaultSchedule | None, *,
+            engine: str = "program", n: int = 30, seed: int = 2,
+            duration_s: float = 10.0) -> SimResult:
+    sched = schedule if schedule is not None else FaultSchedule.empty()
+    return DensitySimulator(system, n, seed=seed, duration_s=duration_s,
+                            warmup_s=0.0, engine=engine,
+                            faults=sched).run()
+
+
+def check_des_invariants(oracle: SimResult, faulted: SimResult,
+                         label: str = "") -> None:
+    """Exactly-once delivery + zero lost/duplicated logical PUTs,
+    relative to the fault-free oracle of the same arrival stream."""
+    assert faulted.responses is not None and oracle.responses is not None
+    dup = {k: v for k, v in faulted.responses.items() if v != 1}
+    assert not dup, f"{label}: responses delivered != once: {dup}"
+    missing = oracle.responses.keys() - faulted.responses.keys()
+    assert not missing, f"{label}: responses never delivered: {missing}"
+    extra = faulted.responses.keys() - oracle.responses.keys()
+    assert not extra, f"{label}: phantom responses: {extra}"
+    for key, puts in oracle.put_ledger.items():
+        got = faulted.put_ledger.get(key)
+        assert got == puts, (f"{label}: logical PUTs of {key} diverged: "
+                             f"{got} != {puts}")
+    # faults only ever ADD latency: same completions, never faster sum
+    s_o = sum(x for v in oracle.latencies.values() for x in v)
+    s_f = sum(x for v in faulted.latencies.values() for x in v)
+    assert s_f >= s_o - 1e-9, f"{label}: faults made the run faster?"
+
+
+# ------------------------------------------------------------ threaded side
+
+@dataclass
+class ThreadedOutcome:
+    durable: dict[str, bytes]        # out-bucket bytes, keyed logically
+    responses: dict[str, int]        # inv_id -> successful deliveries
+    attempts: dict[str, int]         # inv_id -> invocations driven
+    stats: dict
+    latency_total: float
+
+
+def run_threaded(system: str, schedule: FaultSchedule | None, *,
+                 n_invocations: int = 6, spacing_s: float = 0.12,
+                 max_attempts: int = 8,
+                 ack_timeout_s: float = 0.5) -> ThreadedOutcome:
+    """Drive `n_invocations` of the chaos suite through a WorkerNode
+    while the schedule plays, re-driving failures under the SAME
+    invocation id (idempotency keys keep at-least-once safe) until each
+    caller holds exactly one successful response."""
+    node = WorkerNode(system, writeback_ack_timeout_s=ack_timeout_s,
+                      plan_stall_timeout_s=30.0)
+    suite = chaos_suite()
+    try:
+        for w in suite.values():
+            node.deploy(w)
+            node.seed_input(w.name)
+        names = list(suite)
+        injector = None
+        if schedule is not None and not schedule.is_empty:
+            injector = FaultInjector(node, schedule).start()
+        try:
+            pending = []
+            for i in range(n_invocations):
+                fn = names[i % len(names)]
+                inv_id = f"chaos-{i}"
+                pending.append((fn, inv_id, node.invoke(fn, inv_id=inv_id)))
+                time.sleep(spacing_s)
+            responses: dict[str, int] = {}
+            attempts: dict[str, int] = {}
+            t0 = time.monotonic()
+            for fn, inv_id, fut in pending:
+                attempts[inv_id] = 1
+                while True:
+                    try:
+                        res = fut.result(timeout=60)
+                        assert all(e is not None
+                                   for e in res.output_etags), \
+                            f"{inv_id}: missing durable ack"
+                        responses[inv_id] = responses.get(inv_id, 0) + 1
+                        break
+                    except AssertionError:
+                        raise
+                    except Exception:
+                        # the caller's re-drive: same invocation id,
+                        # same output keys, same idempotency keys
+                        if attempts[inv_id] >= max_attempts:
+                            raise
+                        attempts[inv_id] += 1
+                        fut = node.invoke(fn, inv_id=inv_id)
+            latency_total = time.monotonic() - t0
+        finally:
+            # disarm even on assertion failure: a live injector must
+            # not keep killing/hogging through node.shutdown()
+            if injector is not None:
+                injector.stop()
+        stats = dict(injector.stats) if injector is not None else {}
+        return ThreadedOutcome(node.store.list_bucket("out"), responses,
+                               attempts, stats, latency_total)
+    finally:
+        node.shutdown()
+
+
+def check_threaded_invariants(oracle: ThreadedOutcome,
+                              faulted: ThreadedOutcome,
+                              label: str = "") -> None:
+    assert faulted.durable.keys() == oracle.durable.keys(), (
+        f"{label}: durable key set diverged "
+        f"(lost: {oracle.durable.keys() - faulted.durable.keys()}, "
+        f"phantom: {faulted.durable.keys() - oracle.durable.keys()})")
+    diff = [k for k in oracle.durable
+            if faulted.durable[k] != oracle.durable[k]]
+    assert not diff, f"{label}: durable bytes diverged for {diff}"
+    assert all(v == 1 for v in faulted.responses.values()), (
+        f"{label}: responses delivered != once: {faulted.responses}")
+    assert faulted.responses.keys() == oracle.responses.keys()

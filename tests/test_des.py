@@ -29,14 +29,25 @@ import pytest
 from repro.core import plan as P
 from repro.core import workloads as W
 from repro.core.des import DensitySimulator, find_density
+from repro.core.faults import FaultSchedule, FaultSpec
 from repro.core.plan import SYSTEMS, compile_plan, phase_durations
 from repro.core.trace import ArrivalSpec, generate_arrivals, interarrival_cv
 
 GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "goldens",
                            "des_parity.json")
 
+#: the fixed fault schedule of the faulted goldens (ISSUE 4): two
+#: backend crashes + a storage tail-latency spike, pinned bit-for-bit
+#: under BOTH engines — recovery semantics cannot drift silently.
+GOLDEN_FAULTS = FaultSchedule(
+    (FaultSpec("backend_crash", 6.001),
+     FaultSpec("backend_crash", 11.25),
+     FaultSpec("storage_slow", 8.0, 2.0, factor=8.0)),
+    restart_delay_s=0.4)
+
 #: the exact configurations the goldens were captured at (pre-refactor
-#: walker, crc32-seeded arrivals)
+#: walker, crc32-seeded arrivals; `.../faulted` keys: the FaultPlane
+#: interpreter over the same arrival streams)
 GOLDEN_CONFIGS = {
     **{f"{s}/n120/seed3": dict(system=s, n=120, seed=3, duration_s=20.0,
                                warmup_s=4.0)
@@ -47,7 +58,14 @@ GOLDEN_CONFIGS = {
     "nexus-async/registry/n160/seed5": dict(
         system="nexus-async", n=160, seed=5, duration_s=20.0,
         warmup_s=4.0, suite="REGISTRY"),
+    **{f"{s}/n120/seed3/faulted": dict(system=s, n=120, seed=3,
+                                       duration_s=20.0, warmup_s=4.0,
+                                       faults=GOLDEN_FAULTS)
+       for s in ("nexus", "baseline")},
 }
+
+#: keys every engine mode must reproduce bit-for-bit under faults
+FAULTED_KEYS = [k for k in GOLDEN_CONFIGS if k.endswith("/faulted")]
 
 
 def _digest(result, sim):
@@ -80,7 +98,8 @@ with open(GOLDEN_PATH) as _f:
 
 
 class TestParityGoldens:
-    @pytest.mark.parametrize("key", list(GOLDEN_CONFIGS))
+    @pytest.mark.parametrize("key", [k for k in GOLDEN_CONFIGS
+                                     if k not in FAULTED_KEYS])
     def test_program_engine_reproduces_prerefactor_latencies(self, key):
         """The compiled-program DES reproduces the pre-refactor
         latencies bit-for-bit — full-contention n=400 and the
@@ -95,6 +114,16 @@ class TestParityGoldens:
         goldens were captured from."""
         sim = _build(key, "legacy")
         assert _digest(sim.run(), sim) == GOLDEN[key], key
+
+    @pytest.mark.parametrize("engine", ["program", "legacy"])
+    @pytest.mark.parametrize("key", FAULTED_KEYS)
+    def test_faulted_goldens_pin_both_engines(self, key, engine):
+        """Fixed seed + fixed FaultSchedule: injected crashes and the
+        recovery they force (offloaded: group aborts + re-drives;
+        baseline: whole-invocation kills) are pinned bit-for-bit under
+        BOTH DES engine modes."""
+        sim = _build(key, engine)
+        assert _digest(sim.run(), sim) == GOLDEN[key], (key, engine)
 
 
 class TestEngineEquivalence:

@@ -1,0 +1,414 @@
+"""FaultPlane (ISSUE 4): fault schedules as data, recovery semantics in
+both executors, and the differential chaos harness.
+
+Layers:
+
+* `TestFaultData` — FaultSpec/FaultSchedule validation, determinism of
+  the seeded generator, window queries;
+* `TestSupervisorRestartRace` — the satellite regression: a kill
+  landing inside an in-progress restart window must not be lost;
+* `TestDESFaultPlane` — the faulted PlanProgram interpreter: an EMPTY
+  schedule reproduces the fault-free engines bit-for-bit (the mirror
+  contract), both engine modes agree bit-for-bit under faults, retry
+  work lands in the CycleAccount books, and per-variant crash
+  semantics differ exactly as §5 says (offloaded: groups abort +
+  re-drive; coupled: whole invocations die);
+* `TestDESChaosProperty` / `TestThreadedChaosDifferential` — the
+  acceptance invariant: for hypothesis-generated schedules, all seven
+  variants deliver byte-identical durable outputs and exactly-once
+  responses vs the fault-free oracle, threaded AND DES (both engines),
+  with zero lost or duplicated logical PUTs;
+* `TestThreadedFaultKinds` — targeted seam tests: ack-drop redrives
+  hit the idempotency record (no byte re-send), stream failures
+  surface instead of truncating, restore failures retry.
+"""
+import threading
+import time
+
+import pytest
+
+from repro.core import metrics as M
+from repro.core.backend import NexusBackend
+from repro.core.des import DensitySimulator
+from repro.core.faults import (ACK_DROP, BACKEND_CRASH, FaultInjector,
+                               FaultSchedule, FaultSpec, STORAGE_ERROR,
+                               STORAGE_SLOW)
+from repro.core.runtime import WorkerNode
+from repro.core.storage import ObjectStore, RemoteStorage
+from repro.core.supervisor import Supervisor
+from repro.core.workloads import chaos_suite
+from tests._hypothesis_compat import HealthCheck, given, settings, st
+from tests.chaos import (ALL_SYSTEMS, check_des_invariants,
+                         check_threaded_invariants, run_des, run_threaded,
+                         schedule_from_seed)
+
+COMMON = dict(deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+
+
+# ------------------------------------------------------------- pure data
+
+class TestFaultData:
+    def test_kind_validated(self):
+        with pytest.raises(ValueError, match="unknown fault kind"):
+            FaultSpec("power_surge", 1.0)
+
+    def test_windowed_kinds_need_duration(self):
+        with pytest.raises(ValueError, match="duration_s"):
+            FaultSpec(STORAGE_SLOW, 1.0)
+        FaultSpec(BACKEND_CRASH, 1.0)          # point event: fine
+
+    def test_slow_factor_must_amplify(self):
+        with pytest.raises(ValueError, match="factor"):
+            FaultSpec(STORAGE_SLOW, 1.0, 1.0, factor=0.5)
+
+    def test_schedule_sorts_and_queries(self):
+        s = FaultSchedule((FaultSpec(STORAGE_SLOW, 5.0, 2.0, factor=4.0),
+                           FaultSpec(BACKEND_CRASH, 1.0),
+                           FaultSpec(STORAGE_SLOW, 0.5, 1.0, factor=2.0)))
+        assert [sp.at_s for sp in s.specs] == [0.5, 1.0, 5.0]
+        assert s.crashes() == (1.0,)
+        assert s.window_at(STORAGE_SLOW, 0.75) == (0.5, 1.5, 2.0)
+        assert s.window_at(STORAGE_SLOW, 3.0) is None
+        assert s.horizon() >= 7.0
+
+    def test_generate_is_deterministic_and_seed_sensitive(self):
+        kw = dict(crash_rate=0.2, storage_slow_rate=0.3,
+                  ack_drop_rate=0.2, mean_window_s=0.5)
+        a = FaultSchedule.generate(7, 20.0, **kw)
+        b = FaultSchedule.generate(7, 20.0, **kw)
+        c = FaultSchedule.generate(8, 20.0, **kw)
+        assert a == b
+        assert a != c
+        assert all(sp.at_s < 20.0 for sp in a.specs)
+
+    def test_scaled_stretches_every_time(self):
+        s = FaultSchedule((FaultSpec(BACKEND_CRASH, 2.0),
+                           FaultSpec(ACK_DROP, 1.0, 0.5)),
+                          restart_delay_s=0.4)
+        t = s.scaled(0.5)
+        assert t.crashes() == (1.0,)
+        assert t.windows(ACK_DROP) == ((0.5, 0.75, 8.0),)
+        assert t.restart_delay_s == pytest.approx(0.2)
+
+    def test_empty_is_empty(self):
+        assert FaultSchedule.empty().is_empty
+        assert not schedule_from_seed(3, 10.0).is_empty
+
+
+# -------------------------------------------------- supervisor race fix
+
+class TestSupervisorRestartRace:
+    def _make(self, restart_delay_s):
+        store = ObjectStore()
+        acct = M.CycleAccount()
+        remote = RemoteStorage(store, "tcp", acct)
+        return Supervisor(lambda: NexusBackend(remote, acct),
+                          poll_interval_s=0.001,
+                          restart_delay_s=restart_delay_s)
+
+    def test_kill_during_restart_window_is_not_lost(self):
+        """Regression: the second kill lands while the first restart is
+        still sleeping out `restart_delay_s`; it used to crash the dying
+        backend (a no-op) and vanish. The pending-kill handoff must turn
+        it into a second restart of the fresh backend."""
+        sup = self._make(restart_delay_s=0.15)
+        sup.start()
+        try:
+            sup.kill_backend()
+            time.sleep(0.05)                   # inside the restart sleep
+            assert not sup.backend.alive       # old corpse still swapped in
+            sup.kill_backend()                 # the racing signal
+            deadline = time.monotonic() + 3.0
+            while sup.restarts < 2 and time.monotonic() < deadline:
+                time.sleep(0.01)
+            assert sup.restarts == 2, "racing kill was lost"
+            deadline = time.monotonic() + 1.0
+            while not sup.backend.alive and time.monotonic() < deadline:
+                time.sleep(0.01)
+            assert sup.backend.alive
+        finally:
+            sup.stop()
+
+    def test_plain_kill_still_single_restart(self):
+        sup = self._make(restart_delay_s=0.01)
+        sup.start()
+        try:
+            sup.kill_backend()
+            deadline = time.monotonic() + 2.0
+            while sup.restarts < 1 and time.monotonic() < deadline:
+                time.sleep(0.005)
+            time.sleep(0.05)
+            assert sup.restarts == 1
+            assert sup.backend.alive
+        finally:
+            sup.stop()
+
+
+# --------------------------------------------------- DES fault semantics
+
+KW = dict(seed=3, duration_s=15.0, warmup_s=3.0)
+
+CRASH_SCHEDULE = FaultSchedule(
+    (FaultSpec(BACKEND_CRASH, 6.001), FaultSpec(BACKEND_CRASH, 9.5)),
+    restart_delay_s=0.4)
+
+
+class TestDESFaultPlane:
+    @pytest.mark.parametrize("engine", ["program", "legacy"])
+    def test_empty_schedule_is_bit_for_bit_fault_free(self, engine):
+        """The faulted interpreter's mirror contract: an empty schedule
+        reproduces the fault-free engine exactly — which transitively
+        pins it to the parity goldens."""
+        plain = DensitySimulator("nexus", 120, engine=engine, **KW).run()
+        faulted = DensitySimulator("nexus", 120, engine=engine,
+                                   faults=FaultSchedule.empty(), **KW).run()
+        assert faulted.latencies == plain.latencies
+        assert faulted.cold_starts == plain.cold_starts
+        assert faulted.completed == plain.completed
+
+    @pytest.mark.parametrize("system", ["nexus", "baseline"])
+    def test_engines_bit_identical_under_crashes(self, system):
+        a = DensitySimulator(system, 120, engine="program",
+                             faults=CRASH_SCHEDULE, **KW).run()
+        b = DensitySimulator(system, 120, engine="legacy",
+                             faults=CRASH_SCHEDULE, **KW).run()
+        assert a.latencies == b.latencies
+        assert a.completed == b.completed
+        assert a.cold_starts == b.cold_starts
+        assert a.fault_stats == b.fault_stats
+
+    def test_offloaded_crash_aborts_groups_and_charges_books(self):
+        r = DensitySimulator("nexus", 120, faults=CRASH_SCHEDULE,
+                             **KW).run()
+        assert r.fault_stats["crashes"] == 2
+        assert r.fault_stats["aborted_groups"] > 0
+        assert r.fault_stats["killed_invocations"] == 0
+        # retry work landed in the cycle books (host-user: the daemon
+        # re-executes the aborted groups) + RETRY crossings
+        assert r.retry_cycles["cycles"].get(M.HOST_USER, 0.0) > 0.0
+        assert r.retry_cycles["crossings"].get(M.RETRY, 0) \
+            == r.fault_stats["aborted_groups"]
+
+    def test_coupled_crash_kills_whole_invocations(self):
+        r = DensitySimulator("baseline", 120, faults=CRASH_SCHEDULE,
+                             **KW).run()
+        assert r.fault_stats["killed_invocations"] > 0
+        assert r.fault_stats["aborted_groups"] == 0
+        assert r.retry_cycles["cycles"].get(M.GUEST_USER, 0.0) > 0.0
+        # every killed invocation still completes exactly once
+        assert all(v == 1 for v in r.responses.values())
+
+    def test_crash_recovery_only_adds_latency(self):
+        oracle = DensitySimulator("nexus", 120,
+                                  faults=FaultSchedule.empty(), **KW).run()
+        faulted = DensitySimulator("nexus", 120, faults=CRASH_SCHEDULE,
+                                   **KW).run()
+        check_des_invariants(oracle, faulted, "nexus/crash")
+        s_o = sum(x for v in oracle.latencies.values() for x in v)
+        s_f = sum(x for v in faulted.latencies.values() for x in v)
+        assert s_f > s_o          # the restart delay is real latency
+
+    def test_storage_slow_window_stretches_only_the_window(self):
+        slow = FaultSchedule((FaultSpec(STORAGE_SLOW, 5.0, 3.0,
+                                        factor=10.0),))
+        oracle = DensitySimulator("nexus-tcp", 80,
+                                  faults=FaultSchedule.empty(), **KW).run()
+        faulted = DensitySimulator("nexus-tcp", 80, faults=slow,
+                                   **KW).run()
+        check_des_invariants(oracle, faulted, "nexus-tcp/slow")
+
+    def test_storage_error_window_retries_and_converges(self):
+        err = FaultSchedule((FaultSpec(STORAGE_ERROR, 5.0, 1.0),))
+        r = DensitySimulator("nexus", 80, faults=err, **KW).run()
+        assert r.fault_stats["storage_retries"] > 0
+        assert all(v == 1 for v in r.responses.values())
+
+
+class TestDESChaosProperty:
+    """The acceptance invariant, DES half: hypothesis generates the
+    schedules; every variant, BOTH engines, checked against the
+    fault-free oracle of the same arrival stream."""
+
+    _oracles: dict = {}
+
+    @classmethod
+    def oracle(cls, system):
+        if system not in cls._oracles:
+            cls._oracles[system] = run_des(system, None)
+        return cls._oracles[system]
+
+    @settings(max_examples=3, **COMMON)
+    @given(st.integers(min_value=0, max_value=10_000),
+           st.floats(min_value=0.5, max_value=2.0))
+    def test_all_variants_both_engines_meet_invariants(self, seed,
+                                                       intensity):
+        schedule = schedule_from_seed(seed, 10.0, intensity=intensity,
+                                      restart_delay_s=0.3)
+        for system in ALL_SYSTEMS:
+            oracle = self.oracle(system)
+            runs = {eng: run_des(system, schedule, engine=eng)
+                    for eng in ("program", "legacy")}
+            assert (runs["program"].latencies
+                    == runs["legacy"].latencies), \
+                f"{system}: DES engines diverged under schedule {seed}"
+            assert runs["program"].fault_stats \
+                == runs["legacy"].fault_stats
+            for eng, r in runs.items():
+                check_des_invariants(oracle, r, f"{system}/{eng}/{seed}")
+
+
+class TestThreadedChaosDifferential:
+    """The acceptance invariant, threaded half: the same generated
+    schedules replayed against real threads + real bytes, all seven
+    variants, byte-identical durable state vs the fault-free oracle."""
+
+    _oracles: dict = {}
+
+    @classmethod
+    def oracle(cls, system):
+        if system not in cls._oracles:
+            cls._oracles[system] = run_threaded(system, None)
+        return cls._oracles[system]
+
+    @settings(max_examples=2, **COMMON)
+    @given(st.integers(min_value=0, max_value=10_000))
+    def test_all_variants_byte_identical_durable_state(self, seed):
+        schedule = schedule_from_seed(seed, 1.0, intensity=1.5,
+                                      restart_delay_s=0.02)
+        for system in ALL_SYSTEMS:
+            faulted = run_threaded(system, schedule)
+            check_threaded_invariants(self.oracle(system), faulted,
+                                      f"{system}/{seed}")
+
+    def test_recovery_latency_structure_matches_des(self):
+        """Structural agreement: a crash-heavy schedule inflates total
+        latency in BOTH executors (never deflates), and both recover to
+        the oracle's completion set — the DES's recovery modeling is
+        the threaded runtime's, not a separate physics."""
+        des_sched = FaultSchedule(
+            tuple(FaultSpec(BACKEND_CRASH, t) for t in (2.0, 4.0, 6.0)),
+            restart_delay_s=0.5)
+        o = run_des("nexus", None)
+        f = run_des("nexus", des_sched)
+        des_inflation = (sum(x for v in f.latencies.values() for x in v)
+                         / sum(x for v in o.latencies.values() for x in v))
+        assert des_inflation > 1.0
+
+        thr_sched = FaultSchedule(
+            tuple(FaultSpec(BACKEND_CRASH, t) for t in (0.1, 0.3, 0.5)),
+            restart_delay_s=0.05)
+        to = self.oracle("nexus")
+        tf = run_threaded("nexus", thr_sched)
+        assert tf.responses.keys() == to.responses.keys()
+        assert tf.stats.get("crashes", 0) >= 1
+
+
+# ------------------------------------------------- targeted seam tests
+
+class TestThreadedFaultKinds:
+    def test_ack_drop_redrives_through_idempotency_record(self):
+        """A dropped writeback ack must resolve via the dedup record —
+        one byte-send per logical key, dedup hit on the redrive."""
+        schedule = FaultSchedule((FaultSpec(ACK_DROP, 0.0, 30.0),),
+                                 ack_retry_s=0.1)
+        node = WorkerNode("nexus-async", writeback_ack_timeout_s=0.3)
+        try:
+            w = chaos_suite()["CH-FAN"]
+            node.deploy(w)
+            node.seed_input(w.name)
+            with FaultInjector(node, schedule):
+                res = node.invoke(w.name, inv_id="ackdrop-0").result(
+                    timeout=60)
+            assert all(e is not None for e in res.output_etags)
+            be = node.backend
+            assert be.stats["acks_dropped"] >= 1
+            assert be.stats["dedup_hits"] >= be.stats["acks_dropped"]
+            # at-least-once never re-sent bytes for a completed write:
+            # one store PUT per logical output key (+ the seeded input)
+            assert node.store.puts == 1 + len(res.output_etags)
+        finally:
+            node.shutdown()
+
+    def test_stream_failure_surfaces_not_truncates(self):
+        """A storage error mid-stream must raise at the consumer, never
+        return a truncated payload as a clean EOF."""
+        from repro.core.streaming import CircularBuffer
+        buf = CircularBuffer(capacity=1024)
+
+        def pump():
+            buf.write(b"x" * 2048)
+            buf.fail(ConnectionError("wire died"))
+
+        t = threading.Thread(target=pump)
+        t.start()
+        got = buf.read(2048)
+        assert got                       # buffered bytes still drain
+        with pytest.raises(ConnectionError, match="wire died"):
+            buf.read_all()
+        t.join(timeout=5)
+
+    def test_restore_fail_window_retries_and_costs(self):
+        schedule = FaultSchedule((FaultSpec("restore_fail", 0.0, 10.0),))
+        node = WorkerNode("nexus")
+        try:
+            w = chaos_suite()["CH"]
+            node.deploy(w)
+            node.seed_input(w.name)
+            with FaultInjector(node, schedule) as inj:
+                res = node.invoke(w.name, inv_id="rf-0").result(timeout=60)
+                assert res.cold
+                assert inj.stats["restores_failed"] >= 1
+            insts = node._pools[w.name].instances()
+            assert sum(i.restore_retries for i in insts) >= 1
+        finally:
+            node.shutdown()
+
+    def test_failed_put_attempt_releases_slot_and_recovers(self):
+        """Regression: a PUT whose remote write dies (transient error /
+        crash mid-write) must release its arena slot — arenas outlive
+        backend restarts, so a leak would be permanent — and a blocking
+        caller must recover by re-submitting the payload (the redrive
+        finds no idempotency record and raises LostWriteError)."""
+        from repro.core.frontend import GuestContext, NexusClient
+
+        store = ObjectStore()
+        acct = M.CycleAccount()
+        remote = RemoteStorage(store, "tcp", acct)
+        be = NexusBackend(remote, acct)
+        cred = be.register_function("fn", {"out"})
+        real_put, fails = remote.put, {"n": 1}
+
+        def flaky_put(bucket, key, data):
+            if fails["n"] > 0:
+                fails["n"] -= 1
+                raise ConnectionError("transient storage failure (write)")
+            return real_put(bucket, key, data)
+
+        remote.put = flaky_put
+        ctx = GuestContext(tenant="fn", cred_handle=cred,
+                           invocation_id="inv-tw")
+        client = NexusClient(ctx, lambda: be, acct, ack_timeout_s=5.0)
+        etag = client.put_object(Bucket="out", Key="k", Body=b"z" * 256)
+        assert etag == store.head("out", "k").etag
+        assert bytes(store.get("out", "k")) == b"z" * 256
+        # both attempts' slots are back: nothing pinned in the arena
+        assert be.arenas.get("fn").allocated == 0
+
+    def test_transient_storage_error_retried_transparently(self):
+        """Window-based storage errors on the Nexus path are absorbed
+        by the frontend stub's retry (converted to latency)."""
+        node = WorkerNode("nexus")
+        try:
+            w = chaos_suite()["CH"]
+            node.deploy(w)
+            node.seed_input(w.name)
+            t0 = time.monotonic()
+            schedule = FaultSchedule(
+                (FaultSpec(STORAGE_ERROR, 0.0, 0.001),))
+            with FaultInjector(node, schedule):
+                res = node.invoke(w.name, inv_id="se-0").result(timeout=60)
+            assert all(e is not None for e in res.output_etags)
+            assert time.monotonic() - t0 < 30.0
+        finally:
+            node.shutdown()

@@ -1,0 +1,197 @@
+"""Unit coverage for `lifecycle.InstancePool` / `FunctionInstance` and
+the `arena` reclaim paths (ISSUE 4 satellite) — previously exercised
+only indirectly through end-to-end runs.
+"""
+import threading
+import time
+
+import pytest
+
+from repro.core import fabric as F
+from repro.core import metrics as M
+from repro.core.arena import ArenaError, ArenaRegistry, TenantArena
+from repro.core.lifecycle import FunctionInstance, InstancePool
+from repro.core.plan import SYSTEMS
+from repro.core.runtime import WorkerNode
+from repro.core.workloads import chaos_suite, SUITE
+
+_NOSLEEP = lambda s: None                                  # noqa: E731
+
+
+def make_pool(system="nexus", wl="AES", **kw):
+    return InstancePool(SUITE[wl], SYSTEMS[system], M.CycleAccount(),
+                        sleep=_NOSLEEP, **kw)
+
+
+class TestInstancePool:
+    def test_cold_then_warm_reuse(self):
+        pool = make_pool()
+        inst1, cold1 = pool.acquire()
+        assert cold1 and pool.cold_starts == 1
+        inst1.release()
+        inst2, cold2 = pool.acquire()
+        assert inst2 is inst1 and not cold2
+        assert pool.warm_hits == 1 and pool.cold_starts == 1
+
+    def test_warm_pool_reuse_order_is_first_warm_first(self):
+        """With several warm instances, acquire hands out the OLDEST
+        (list order) — deterministic placement, no churn at the tail."""
+        pool = make_pool()
+        insts = [pool.acquire()[0] for _ in range(3)]
+        for i in insts:
+            i.release()
+        got = [pool.acquire()[0] for _ in range(3)]
+        assert got == insts                    # declaration order
+        assert pool.warm_hits == 3
+
+    def test_concurrent_acquire_never_shares_an_instance(self):
+        pool = make_pool()
+        grabbed, lock = [], threading.Lock()
+
+        def grab():
+            inst, _ = pool.acquire()
+            with lock:
+                grabbed.append(inst)
+
+        ts = [threading.Thread(target=grab) for _ in range(8)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join(timeout=10)
+        assert len(grabbed) == 8
+        assert len({id(i) for i in grabbed}) == 8
+        assert all(i.state == "busy" for i in grabbed)
+
+    def test_instance_cap_enforced(self):
+        pool = make_pool(max_instances=2)
+        pool.acquire(), pool.acquire()
+        with pytest.raises(RuntimeError, match="instance cap"):
+            pool.acquire()
+
+    def test_restore_breakdown_arithmetic(self):
+        pool = make_pool()
+        inst, _ = pool.acquire()
+        bd = inst.restore_info
+        assert bd is not None
+        pages = F.working_set_pages_components(inst.memory)
+        assert bd.ws_pages == pages
+        assert bd.create_s == F.SNAPSHOT_FIXED_S
+        assert bd.ws_insert_s == pytest.approx(
+            pages * F.RESTORE_US_PER_PAGE * 1e-6)
+        assert bd.total_s == pytest.approx(bd.create_s + bd.ws_insert_s)
+
+    def test_leaner_variant_restores_fewer_pages(self):
+        """The §4.2 cold-start claim at the unit level: the offloaded
+        footprint's working set is strictly smaller, so restore is
+        strictly cheaper — same workload, same arithmetic."""
+        base_inst, _ = make_pool("baseline").acquire()
+        nexus_inst, _ = make_pool("nexus").acquire()
+        assert (nexus_inst.restore_info.ws_pages
+                < base_inst.restore_info.ws_pages)
+        assert (nexus_inst.restore_info.total_s
+                < base_inst.restore_info.total_s)
+
+    def test_start_restore_async_overlaps(self):
+        pool = make_pool()
+        inst, done = pool.start_restore_async()
+        assert done.wait(timeout=10)
+        assert inst.state == "busy"            # acquired for the caller
+        assert inst.restore_info is not None
+
+    def test_scale_down_keeps_busy_instances(self):
+        pool = make_pool()
+        busy, _ = pool.acquire()
+        idle, _ = pool.acquire()
+        idle.release()
+        dropped = pool.scale_down(keep=0)
+        assert dropped == 1
+        assert busy in pool.instances()
+        assert idle not in pool.instances()
+
+    def test_early_release_under_async_writeback(self):
+        """§4.2.5 at the pool level: under async writeback the instance
+        returns to the pool at the guest's last program point — strictly
+        before the caller's response resolves (vm_busy < latency)."""
+        node = WorkerNode("nexus-async")
+        try:
+            w = chaos_suite()["CH"]
+            node.deploy(w)
+            node.seed_input(w.name)
+            res = node.invoke(w.name).result(timeout=60)
+            assert "vm_busy" in res.breakdown
+            assert res.breakdown["vm_busy"] < res.latency_s
+            pool = node._pools[w.name]
+            assert pool.has_warm()             # instance already back
+        finally:
+            node.shutdown()
+
+
+class TestArenaReclaim:
+    def test_alloc_wait_blocks_until_release(self):
+        arena = TenantArena("t", capacity_mb=1)
+        hog = arena.alloc(1024 * 1024)
+        got = {}
+
+        def waiter():
+            got["slot"] = arena.alloc_wait(512 * 1024, timeout_s=10.0)
+
+        t = threading.Thread(target=waiter)
+        t.start()
+        time.sleep(0.05)
+        assert "slot" not in got               # genuinely blocked
+        hog.release()
+        t.join(timeout=10)
+        assert got["slot"].size == 512 * 1024
+        assert arena.alloc_stalls == 1
+
+    def test_alloc_wait_times_out(self):
+        arena = TenantArena("t", capacity_mb=1)
+        arena.alloc(1024 * 1024)
+        t0 = time.monotonic()
+        with pytest.raises(ArenaError, match="exhausted for"):
+            arena.alloc_wait(1024, timeout_s=0.1)
+        assert time.monotonic() - t0 >= 0.1
+
+    def test_alloc_wait_fast_path_no_stall(self):
+        arena = TenantArena("t", capacity_mb=1)
+        slot = arena.alloc_wait(1024)
+        assert slot.size == 1024
+        assert arena.alloc_stalls == 0
+
+    def test_release_coalesces_and_wakes_large_waiter(self):
+        """Reclaim must coalesce adjacent frees so a waiter needing the
+        FULL arena eventually succeeds — partial frees keep it blocked."""
+        arena = TenantArena("t", capacity_mb=1)
+        halves = [arena.alloc(512 * 1024), arena.alloc(512 * 1024)]
+        got = {}
+
+        def waiter():
+            got["slot"] = arena.alloc_wait(1024 * 1024, timeout_s=10.0)
+
+        t = threading.Thread(target=waiter)
+        t.start()
+        time.sleep(0.05)
+        halves[0].release()
+        time.sleep(0.05)
+        assert "slot" not in got               # half is not enough
+        halves[1].release()
+        t.join(timeout=10)
+        assert got["slot"].size == 1024 * 1024
+
+    def test_registry_drop_and_total(self):
+        reg = ArenaRegistry(capacity_mb=2.0)
+        reg.get("a"), reg.get("b")
+        assert reg.total_mb() == pytest.approx(4.0)
+        reg.drop("a")
+        assert reg.total_mb() == pytest.approx(2.0)
+        # dropping severs resolution for the old arena's slots
+        slot = reg.get("b").alloc(64)
+        assert reg.resolve("b", slot) is slot
+
+    def test_double_release_is_idempotent(self):
+        arena = TenantArena("t", capacity_mb=1)
+        slot = arena.alloc(4096)
+        slot.release()
+        slot.release()                          # no double-free
+        assert arena.allocated == 0
+        assert arena._free_list == [(0, arena.capacity)]

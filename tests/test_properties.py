@@ -1,14 +1,15 @@
-"""Property-based (hypothesis) tests on system invariants."""
+"""Property-based (hypothesis) tests on system invariants.
+
+The suite always RUNS — never skips: `hypothesis` is a hard dependency
+of the ``test`` extra (CI installs it and gets the real engine), and
+`tests._hypothesis_compat` provides a seeded fallback sampler where the
+package is absent, so a broken invariant fails loudly everywhere.
+"""
 import threading
 
 import numpy as np
-import pytest
 
-pytest.importorskip(
-    "hypothesis",
-    reason="property tests need the 'test' extra (pip install -e .[test])")
-from hypothesis import HealthCheck, given, settings
-from hypothesis import strategies as st
+from tests._hypothesis_compat import HealthCheck, given, settings, st
 
 from repro.core import fabric as F
 from repro.core.arena import TenantArena
