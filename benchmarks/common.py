@@ -1,4 +1,10 @@
-"""Shared helpers for the benchmark harness."""
+"""Shared helpers for the benchmark harness.
+
+Every accessor here must tolerate a missing ``results/`` directory —
+fresh clones (and CI workspaces before the first bench step) have no
+results yet, and a benchmark or the regression gate asking for one
+should get a clean signal, not a raw ``FileNotFoundError`` traceback.
+"""
 from __future__ import annotations
 
 import json
@@ -8,12 +14,18 @@ from typing import Any
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
 
 
-def save_json(name: str, payload: Any) -> str:
+def result_path(name: str) -> str:
+    """Absolute path of one result file; creates ``results/`` if absent
+    so callers may open the path for writing unconditionally."""
     os.makedirs(RESULTS_DIR, exist_ok=True)
-    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    return os.path.abspath(os.path.join(RESULTS_DIR, f"{name}.json"))
+
+
+def save_json(name: str, payload: Any) -> str:
+    path = result_path(name)
     with open(path, "w") as f:
         json.dump(payload, f, indent=1, default=str)
-    return os.path.abspath(path)
+    return path
 
 
 def table(rows: list[dict], cols: list[str], *, title: str = "",
@@ -22,8 +34,10 @@ def table(rows: list[dict], cols: list[str], *, title: str = "",
     out = []
     if title:
         out.append(f"== {title} ==")
-    widths = {c: max(len(c), *(len(_cell(r.get(c), fmt.get(c)))
-                               for r in rows)) for c in cols}
+    # max over a list, not *args: zero rows (fresh clone, no records)
+    # must render an empty table, not raise
+    widths = {c: max([len(c)] + [len(_cell(r.get(c), fmt.get(c)))
+                                 for r in rows]) for c in cols}
     out.append("  ".join(c.ljust(widths[c]) for c in cols))
     out.append("  ".join("-" * widths[c] for c in cols))
     for r in rows:

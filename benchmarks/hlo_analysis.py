@@ -302,6 +302,52 @@ def analyze_file(path: str) -> dict:
         return analyze(f.read())
 
 
+def run() -> dict:
+    """Registered benchmark (ISSUE 5 satellite): loop-aware HLO analysis
+    over whatever dry-run artifacts exist.
+
+    Scans ``results/hlo/*.hlo`` (dumped by ``repro.launch.dryrun``) and
+    summarizes FLOPs / HBM bytes / collective bytes per file into
+    ``results/hlo_analysis.json``. With no artifacts staged (the CI
+    case — dry-runs are a manual, compile-heavy step) it records an
+    empty analysis rather than failing: registration must not make the
+    harness depend on optional inputs.
+    """
+    import glob
+    import os
+
+    from benchmarks.common import RESULTS_DIR, save_json, table
+
+    hlo_dir = os.path.join(RESULTS_DIR, "hlo")
+    files = sorted(glob.glob(os.path.join(hlo_dir, "*.hlo")))
+    analyzed = {}
+    for path in files:
+        a = analyze_file(path)
+        analyzed[os.path.basename(path)] = a
+    if analyzed:
+        rows = [{"file": k,
+                 "TFLOPs": round(v["flops"] / 1e12, 3),
+                 "HBM_GB": round(v["bytes_hbm"] / 1e9, 2),
+                 "HBM_GB_kernelized": round(
+                     v["bytes_hbm_kernelized"] / 1e9, 2),
+                 "collective_GB": round(v["collective_total"] / 1e9, 2)}
+                for k, v in analyzed.items()]
+        print(table(rows, ["file", "TFLOPs", "HBM_GB",
+                           "HBM_GB_kernelized", "collective_GB"],
+                    title="loop-aware HLO analysis (per device)"))
+    else:
+        print(f"no HLO artifacts under {hlo_dir} — run "
+              "`python -m repro.launch.dryrun` and stage *.hlo files "
+              "there to populate this benchmark (recorded as empty).")
+    payload = {"hlo_dir": hlo_dir, "analyzed": analyzed,
+               "n_files": len(analyzed)}
+    save_json("hlo_analysis", payload)
+    return payload
+
+
 if __name__ == "__main__":
     import sys
-    print(json.dumps(analyze_file(sys.argv[1]), indent=1))
+    if len(sys.argv) > 1:
+        print(json.dumps(analyze_file(sys.argv[1]), indent=1))
+    else:
+        run()

@@ -1,92 +1,57 @@
-"""Analytic MODEL_FLOPS per (arch x shape) — the roofline's 'useful
-compute' reference.
+"""Analytic MODEL_FLOPS benchmark harness.
 
-Conventions (per the assignment):
-* train:   6 * N * D   (N = params, D = tokens; MoE: N_active)
-           + exact attention-score flops (which 6ND omits),
-* prefill: 2 * N * D + attention,
-* decode:  2 * N * B per token + attention over the live cache.
-
-Attention score/value flops per layer: 4 * B * S_q * S_kv_eff * H * hd
-(QK^T + PV, x2 mul-add), causal halves S_kv_eff, sliding windows cap it.
+The arithmetic itself lives in `repro.models.flops` (the package needs
+it: `repro.core.calibrate` derives the committed MLServe calibration
+from it, so it must be importable without the benchmarks tree). This
+module re-exports it for the existing ``benchmarks.model_flops``
+import surface and adds the registered ``run()`` table.
 """
 from __future__ import annotations
 
-from repro.configs.base import InputShape, ModelConfig
+from repro.models.flops import hbm_bytes_ideal, model_flops
+
+__all__ = ["model_flops", "hbm_bytes_ideal", "run"]
 
 
-def _attn_flops_layer(cfg: ModelConfig, B: int, Sq: int, Skv: int,
-                      causal: bool = True) -> float:
-    if cfg.attn_free:
-        return 0.0
-    window = cfg.sliding_window
-    if window:
-        s_eff = min(window, Skv) if Sq == 1 else min(window, Skv) * Sq
-    else:
-        s_eff = Skv if Sq == 1 else (Sq * Skv / 2 if causal else Sq * Skv)
-    H, hd = cfg.num_heads, cfg.head_dim
-    return 4.0 * B * s_eff * H * hd
+def run() -> dict:
+    """Registered benchmark (ISSUE 5 satellite): the analytic MODEL_FLOPS
+    table over every assigned (arch x shape) cell, persisted to
+    ``results/model_flops.json``. Pure arithmetic over the configs —
+    deterministic, so the CI regression gate can pin it bit-tight.
+    """
+    from repro.configs import ARCH_IDS, registry
+    from repro.configs.base import SHAPES, cell_is_runnable
+
+    from benchmarks.common import save_json, table
+
+    rows = []
+    for arch in ARCH_IDS:
+        cfg = registry.get(arch)
+        for sname, shape in SHAPES.items():
+            ok, why = cell_is_runnable(cfg, shape)
+            if not ok:
+                rows.append({"arch": arch, "shape": sname, "skip": why})
+                continue
+            f = model_flops(cfg, shape)
+            rows.append({
+                "arch": arch, "shape": sname,
+                "gflops": round(f["total"] / 1e9, 3),
+                "core_gflops": round(f["core"] / 1e9, 3),
+                "attn_gflops": round(f["attention"] / 1e9, 3),
+                "ssm_gflops": round(f["ssm"] / 1e9, 3),
+                "hbm_GB_ideal": round(
+                    hbm_bytes_ideal(cfg, shape) / 1e9, 4)})
+    print(table([r for r in rows if "skip" not in r],
+                ["arch", "shape", "gflops", "core_gflops", "attn_gflops",
+                 "ssm_gflops", "hbm_GB_ideal"],
+                title="analytic MODEL_FLOPS per (arch x shape), per step"))
+    skipped = [r for r in rows if "skip" in r]
+    if skipped:
+        print(f"skipped cells: {[(r['arch'], r['shape']) for r in skipped]}")
+    payload = {"cells": rows}
+    save_json("model_flops", payload)
+    return payload
 
 
-def _ssm_flops_layer(cfg: ModelConfig, B: int, S: int) -> float:
-    if cfg.family not in ("ssm", "hybrid"):
-        return 0.0
-    di, N = cfg.d_inner, cfg.ssm_state
-    # recurrence + y-contraction: ~8 flops per (t, channel, state)
-    return 8.0 * B * S * di * N
-
-
-def model_flops(cfg: ModelConfig, shape: InputShape) -> dict:
-    B, S = shape.global_batch, shape.seq_len
-    N_active = cfg.active_param_count()
-    L = cfg.num_layers
-
-    if shape.kind == "train":
-        D = B * S
-        core = 6.0 * N_active * D
-        attn = 3.0 * L * _attn_flops_layer(cfg, B, S, S)   # fwd + 2x bwd
-        ssm = 3.0 * L * _ssm_flops_layer(cfg, B, S)
-        if cfg.is_encoder_decoder:
-            attn *= 2.0                                    # enc + cross
-    elif shape.kind == "prefill":
-        D = B * S
-        core = 2.0 * N_active * D
-        attn = L * _attn_flops_layer(cfg, B, S, S)
-        ssm = L * _ssm_flops_layer(cfg, B, S)
-        if cfg.is_encoder_decoder:
-            attn *= 2.0
-    else:  # decode: one token against a seq_len cache
-        core = 2.0 * N_active * B
-        attn = L * _attn_flops_layer(cfg, B, 1, S)
-        ssm = L * _ssm_flops_layer(cfg, B, 1)
-        if cfg.is_encoder_decoder:
-            attn *= 2.0
-
-    return {"core": core, "attention": attn, "ssm": ssm,
-            "total": core + attn + ssm}
-
-
-def hbm_bytes_ideal(cfg: ModelConfig, shape: InputShape,
-                    devices: int = 256) -> float:
-    """Ideal per-device HBM traffic: params read once (sharded) +
-    activations in/out once per layer + cache traffic (decode)."""
-    B, S = shape.global_batch, shape.seq_len
-    pbytes = cfg.param_count() * 2 / devices             # bf16, sharded
-    if shape.kind == "train":
-        pbytes *= 3                                       # fwd + bwd + opt
-        act = cfg.num_layers * B * S * cfg.d_model * 2 * 4 / devices
-        return pbytes + act
-    if shape.kind == "prefill":
-        act = cfg.num_layers * B * S * cfg.d_model * 2 * 2 / devices
-        return pbytes + act
-    # decode: stream the KV cache (or SSM state) once
-    from repro.models.kv_cache import cache_width
-    if cfg.attn_free:
-        cache = cfg.num_layers * B * cfg.d_inner * cfg.ssm_state * 4
-    else:
-        W = cache_width(cfg, S)
-        cache = (cfg.num_layers * B * W * cfg.num_kv_heads
-                 * cfg.head_dim * 2 * 2)
-        if cfg.family == "hybrid":
-            cache += cfg.num_layers * B * cfg.d_inner * cfg.ssm_state * 4
-    return pbytes + cache / devices
+if __name__ == "__main__":
+    run()

@@ -50,6 +50,14 @@ def _advice(dom: str, rec: dict, ratio: float) -> str:
 def load_records(path: str | None = None) -> list[dict]:
     path = path or os.path.join(RESULTS_DIR, "roofline.jsonl")
     recs = []
+    if not os.path.exists(path):
+        # fresh clones have no results/ at all — an empty report, not a
+        # traceback (benchmarks.run only registers this bench when the
+        # file exists; the direct `python -m benchmarks.roofline` path
+        # must degrade the same way)
+        print(f"no dry-run records at {path} — run "
+              "`python -m repro.launch.dryrun --all` first")
+        return recs
     with open(path) as f:
         for line in f:
             r = json.loads(line)

@@ -23,17 +23,22 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (cold_start, cpu_cycles, density, faasm_gap,
-                            fault_tolerance, memory_footprint,
+                            fault_tolerance, hlo_analysis,
+                            memory_footprint, ml_serving, model_flops,
                             sim_throughput, warm_path)
 
     benches = [
         ("cpu_cycles (Fig 2)", cpu_cycles.run, {}),
         ("memory_footprint (Fig 3/10/11)", memory_footprint.run, {}),
+        ("model_flops (analytic reference)", model_flops.run, {}),
+        ("hlo_analysis (loop-aware HLO scan)", hlo_analysis.run, {}),
         ("warm_path (Fig 7/8/9)", warm_path.run, {}),
         ("cold_start (Fig 12/13)", cold_start.run, {}),
         ("sim_throughput (DES engine)", sim_throughput.run,
          {"quick": args.quick}),
         ("density (Fig 6 + full matrix)", density.run,
+         {"quick": args.quick}),
+        ("ml_serving (MLServe: calibrated ML suite)", ml_serving.run,
          {"quick": args.quick}),
         ("fault_tolerance (§5, FaultPlane)", fault_tolerance.run,
          {"quick": args.quick}),

@@ -1,0 +1,195 @@
+#!/usr/bin/env python
+"""Benchmark-regression gate (ISSUE 5 satellite).
+
+Diffs fresh ``results/*.json`` (produced by the CI ``--quick`` bench
+steps) against the committed baselines under ``benchmarks/baselines/``
+and fails the job on drift. Before this gate, the perf trajectory was
+upload-only: results rode along as artifacts and nobody failed when a
+number moved.
+
+``benchmarks/baselines/spec.json`` declares what is gated and how
+tightly, per result file:
+
+    {"density": {"rel_tol": 0.02,
+                 "include": ["density", "matrix_summary"],
+                 "ignore": ["sweep_wall_s", "workers"]}}
+
+* ``rel_tol`` / ``abs_tol`` — numeric leaves must satisfy
+  ``|a-b| <= abs_tol + rel_tol * max(|a|, |b|)``;
+* ``include`` — top-level keys to gate (others skipped: wall-clock
+  timings etc. stay un-gated);
+* ``ignore`` — key names skipped at ANY depth.
+
+Non-numeric leaves must match exactly; a key or element present on one
+side only is drift (shape changes are regressions too). Baselines are
+(re)recorded with ``--write`` after an intentional change — review the
+diff like any other code change.
+
+Usage:
+    python scripts/check_bench.py              # gate (exit 1 on drift)
+    python scripts/check_bench.py --write      # re-record baselines
+    python scripts/check_bench.py --only density,ml_serving
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import shutil
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+RESULTS_DIR = os.path.join(REPO, "results")
+BASELINE_DIR = os.path.join(REPO, "benchmarks", "baselines")
+SPEC_PATH = os.path.join(BASELINE_DIR, "spec.json")
+
+_NUM = (int, float)
+
+
+def _is_num(v) -> bool:
+    return isinstance(v, _NUM) and not isinstance(v, bool)
+
+
+def compare(base, fresh, *, rel_tol: float, abs_tol: float,
+            ignore: frozenset, path: str = "$") -> list[str]:
+    """All drift findings between two JSON trees (empty list = clean)."""
+    drift: list[str] = []
+    if isinstance(base, dict) and isinstance(fresh, dict):
+        for k in sorted(set(base) | set(fresh)):
+            if k in ignore:
+                continue
+            p = f"{path}.{k}"
+            if k not in fresh:
+                drift.append(f"{p}: missing from fresh results")
+            elif k not in base:
+                drift.append(f"{p}: new key absent from baseline")
+            else:
+                drift += compare(base[k], fresh[k], rel_tol=rel_tol,
+                                 abs_tol=abs_tol, ignore=ignore, path=p)
+    elif isinstance(base, list) and isinstance(fresh, list):
+        if len(base) != len(fresh):
+            drift.append(f"{path}: length {len(base)} -> {len(fresh)}")
+        for i, (b, f) in enumerate(zip(base, fresh)):
+            drift += compare(b, f, rel_tol=rel_tol, abs_tol=abs_tol,
+                             ignore=ignore, path=f"{path}[{i}]")
+    elif _is_num(base) and _is_num(fresh):
+        # NaN never satisfies a > comparison, which would make a metric
+        # that regressed TO NaN invisible — treat any NaN as drift
+        if math.isnan(base) or math.isnan(fresh):
+            drift.append(f"{path}: {base} -> {fresh} (NaN is drift)")
+        elif abs(base - fresh) > abs_tol + rel_tol * max(abs(base),
+                                                         abs(fresh)):
+            drift.append(f"{path}: {base} -> {fresh} "
+                         f"(rel_tol={rel_tol}, abs_tol={abs_tol})")
+    elif base != fresh:
+        drift.append(f"{path}: {base!r} -> {fresh!r}")
+    return drift
+
+
+def check_payload(base: dict, fresh: dict, spec: dict) -> list[str]:
+    """Gate one result payload against its baseline under one spec
+    entry. Exposed for the unit tests."""
+    rel = float(spec.get("rel_tol", 0.0))
+    at = float(spec.get("abs_tol", 1e-12))
+    ignore = frozenset(spec.get("ignore", ()))
+    include = spec.get("include")
+    if include is not None:
+        base = {k: v for k, v in base.items() if k in include}
+        fresh = {k: v for k, v in fresh.items() if k in include}
+        for k in include:
+            if k not in base:
+                return [f"$.{k}: gated key missing from baseline"]
+    return compare(base, fresh, rel_tol=rel, abs_tol=at, ignore=ignore)
+
+
+def _load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default=RESULTS_DIR)
+    ap.add_argument("--baselines", default=BASELINE_DIR)
+    ap.add_argument("--spec", default=None,
+                    help="spec path (default: <baselines>/spec.json)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of gated names")
+    ap.add_argument("--write", action="store_true",
+                    help="record current results as the new baselines")
+    args = ap.parse_args(argv)
+    spec_path = args.spec or os.path.join(args.baselines, "spec.json")
+    spec = _load(spec_path)
+    names = sorted(spec)
+    if args.only:
+        wanted = set(args.only.split(","))
+        unknown = wanted - set(names)
+        if unknown:
+            # a typo'd --only must not silently gate nothing and pass
+            print(f"[check_bench] FAIL: unknown gated name(s) "
+                  f"{sorted(unknown)}; spec declares {names}")
+            return 1
+        names = [n for n in names if n in wanted]
+    if not names:
+        print("[check_bench] FAIL: nothing to gate (empty spec/selection)")
+        return 1
+
+    if args.write:
+        os.makedirs(args.baselines, exist_ok=True)
+        recorded = 0
+        for name in names:
+            src = os.path.join(args.results, f"{name}.json")
+            if not os.path.exists(src):
+                print(f"[check_bench] SKIP {name}: no {src}")
+                continue
+            shutil.copyfile(src,
+                            os.path.join(args.baselines, f"{name}.json"))
+            print(f"[check_bench] recorded baseline {name}.json")
+            recorded += 1
+        if not recorded:
+            # recording nothing must not look like success — the user
+            # would commit believing the baselines moved
+            print("[check_bench] FAIL: no fresh results to record — "
+                  "run the bench steps first")
+            return 1
+        return 0
+
+    failures = 0
+    for name in names:
+        fresh_path = os.path.join(args.results, f"{name}.json")
+        base_path = os.path.join(args.baselines, f"{name}.json")
+        if not os.path.exists(base_path):
+            print(f"[check_bench] FAIL {name}: baseline missing "
+                  f"({base_path}) — record with --write")
+            failures += 1
+            continue
+        if not os.path.exists(fresh_path):
+            print(f"[check_bench] FAIL {name}: fresh result missing "
+                  f"({fresh_path}) — did the bench step run?")
+            failures += 1
+            continue
+        drift = check_payload(_load(base_path), _load(fresh_path),
+                              spec[name])
+        if drift:
+            failures += 1
+            print(f"[check_bench] FAIL {name}: {len(drift)} drifting "
+                  f"metric(s)")
+            for d in drift[:40]:
+                print(f"    {d}")
+            if len(drift) > 40:
+                print(f"    ... and {len(drift) - 40} more")
+        else:
+            print(f"[check_bench] OK   {name}")
+    if failures:
+        print(f"[check_bench] DRIFT in {failures}/{len(names)} gated "
+              f"benchmark(s); if intentional, re-record with "
+              f"`python scripts/check_bench.py --write` and commit")
+        return 1
+    print(f"[check_bench] all {len(names)} gated benchmark(s) within "
+          f"tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,86 @@
+#!/usr/bin/env python
+"""Regenerate / drift-check the DES parity goldens (ISSUE 5 satellite).
+
+``tests/goldens/des_parity.json`` pins the DES latency streams
+bit-for-bit (sha256 over float hex) at the configurations declared in
+``tests/test_des.py``. The goldens were captured from the preserved
+pre-refactor walker (``engine="legacy"``); the faulted keys are pinned
+under both engines, which this script regenerates via the same legacy
+reference.
+
+Nightly CI runs ``--check``: the file must regenerate **bit-identically**
+from a fresh process, or the job fails — catching any nondeterminism
+(process-salted hashing, dict-order dependence, platform-float drift)
+the fixed-seed unit tests cannot see from inside one process.
+
+Usage:
+    python scripts/regen_goldens.py --check    # exit 1 on drift
+    python scripts/regen_goldens.py --write    # rewrite the golden file
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "tests"))
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+
+def regenerate() -> dict:
+    # the golden *definitions* (configs, digest, builder) live with the
+    # tests — one source of truth, this script only drives them
+    import test_des as T
+
+    out = {}
+    for key in T.GOLDEN_CONFIGS:
+        sim = T._build(key, "legacy")
+        out[key] = T._digest(sim.run(), sim)
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    mode = ap.add_mutually_exclusive_group(required=True)
+    mode.add_argument("--check", action="store_true")
+    mode.add_argument("--write", action="store_true")
+    args = ap.parse_args()
+
+    import test_des as T
+
+    fresh = regenerate()
+    if args.write:
+        with open(T.GOLDEN_PATH, "w") as f:
+            json.dump(fresh, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {T.GOLDEN_PATH} ({len(fresh)} keys)")
+        return 0
+
+    with open(T.GOLDEN_PATH) as f:
+        committed = json.load(f)
+    drift = []
+    for key in sorted(set(committed) | set(fresh)):
+        if key not in fresh:
+            drift.append(f"{key}: in golden file but no longer declared")
+        elif key not in committed:
+            drift.append(f"{key}: declared but missing from golden file")
+        elif committed[key] != fresh[key]:
+            drift.append(f"{key}: regenerated digest differs "
+                         f"(sha256 {committed[key]['sha256'][:12]} -> "
+                         f"{fresh[key]['sha256'][:12]})")
+    if drift:
+        print("[regen_goldens] DRIFT:")
+        for d in drift:
+            print(f"    {d}")
+        print("[regen_goldens] if intentional, rewrite with --write and "
+              "commit the diff")
+        return 1
+    print(f"[regen_goldens] all {len(fresh)} golden keys regenerate "
+          f"bit-identically")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -461,16 +461,40 @@ class WorkerNode:
     def _input_key(fn_name: str, i: int) -> str:
         return f"{fn_name}-input" if i == 0 else f"{fn_name}-input-{i}"
 
-    def seed_input(self, fn_name: str, key: str | None = None) -> list[str]:
+    def seed_input(self, fn_name: str, key: str | None = None,
+                   payloads: "list[bytes] | None" = None) -> list[str]:
         """Stage every declared input object in remote storage (one per
-        `Get` in the workload's IOProfile); returns the keys."""
+        `Get` in the workload's IOProfile); returns the keys.
+
+        By default each object is synthetic filler at the byte-scaled
+        declared size. `payloads` seeds REAL bytes verbatim instead
+        (one per `Get`, byte_scale must be 1.0 so the handler sees them
+        untouched) — the MLServe path stages serialized params/KV
+        tensors this way.
+        """
         w = self._workloads[fn_name]
+        if payloads is not None:
+            if len(payloads) != len(w.profile.gets):
+                raise ValueError(
+                    f"{fn_name}: {len(payloads)} payloads for "
+                    f"{len(w.profile.gets)} declared GETs")
+            if self.byte_scale != 1.0:
+                # scaled nodes truncate PUT bodies and size costs by
+                # byte_scale — real payloads would be corrupted deep in
+                # the handler; fail here, where the mistake is.
+                raise ValueError(
+                    f"{fn_name}: seeding real payloads requires "
+                    f"byte_scale=1.0 (node has {self.byte_scale})")
         keys = []
         for i, g in enumerate(w.profile.gets):
             k = key if (key is not None and i == 0) \
                 else self._input_key(fn_name, i)
-            real = max(int(g.size_bytes * self.byte_scale), 1024)
-            self.store.put("in", k, bytes([i % 251]) * real)
+            if payloads is not None:
+                data = bytes(payloads[i])
+            else:
+                real = max(int(g.size_bytes * self.byte_scale), 1024)
+                data = bytes([i % 251]) * real
+            self.store.put("in", k, data)
             keys.append(k)
         return keys
 

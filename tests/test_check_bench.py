@@ -1,0 +1,165 @@
+"""The CI benchmark-regression gate (ISSUE 5 satellite).
+
+`scripts/check_bench.py` is what turns the per-PR results artifact
+from upload-only into an enforced contract. These tests prove the gate
+*fires* — a deliberately tolerance-violating fixture fails it — and
+that it passes on the committed baselines, so a green CI actually
+means "within tolerance of the recorded perf", not "the script ran".
+"""
+import importlib.util
+import json
+import os
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_spec = importlib.util.spec_from_file_location(
+    "check_bench", os.path.join(REPO, "scripts", "check_bench.py"))
+check_bench = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(check_bench)
+
+BASELINE_DIR = os.path.join(REPO, "benchmarks", "baselines")
+
+
+# ------------------------------------------------------- comparison kernel
+
+class TestComparison:
+    BASE = {"density": {"nexus": 440, "baseline": 320},
+            "rows": [{"system": "nexus", "gain_%": 37.5}],
+            "label": "fig6", "wall_s": 12.0}
+
+    def test_identical_payload_is_clean(self):
+        assert check_bench.check_payload(self.BASE, self.BASE,
+                                         {"rel_tol": 0.0}) == []
+
+    def test_within_tolerance_is_clean(self):
+        fresh = json.loads(json.dumps(self.BASE))
+        fresh["density"]["nexus"] = 444          # +0.9%
+        assert check_bench.check_payload(self.BASE, fresh,
+                                         {"rel_tol": 0.02}) == []
+
+    def test_gate_fires_on_tolerance_violation(self):
+        """The acceptance fixture: a metric drifting past rel_tol MUST
+        produce a finding."""
+        fresh = json.loads(json.dumps(self.BASE))
+        fresh["density"]["nexus"] = 380           # -13.6%
+        drift = check_bench.check_payload(self.BASE, fresh,
+                                          {"rel_tol": 0.02})
+        assert len(drift) == 1
+        assert "density.nexus" in drift[0]
+
+    def test_gate_fires_on_shape_change(self):
+        fresh = json.loads(json.dumps(self.BASE))
+        del fresh["density"]["baseline"]
+        fresh["rows"].append({"system": "wasm", "gain_%": 1.0})
+        drift = check_bench.check_payload(self.BASE, fresh,
+                                          {"rel_tol": 1.0})
+        assert any("missing from fresh" in d for d in drift)
+        assert any("length" in d for d in drift)
+
+    def test_gate_fires_on_non_numeric_change(self):
+        fresh = json.loads(json.dumps(self.BASE))
+        fresh["label"] = "fig7"
+        drift = check_bench.check_payload(self.BASE, fresh,
+                                          {"rel_tol": 1.0})
+        assert drift and "label" in drift[0]
+
+    def test_include_limits_the_gate(self):
+        fresh = json.loads(json.dumps(self.BASE))
+        fresh["wall_s"] = 900.0                   # un-gated timing
+        fresh["label"] = "something else"         # un-gated
+        assert check_bench.check_payload(
+            self.BASE, fresh,
+            {"rel_tol": 0.0, "include": ["density", "rows"]}) == []
+
+    def test_ignore_skips_keys_at_depth(self):
+        fresh = json.loads(json.dumps(self.BASE))
+        fresh["rows"][0]["gain_%"] = 99.0
+        assert check_bench.check_payload(
+            self.BASE, fresh, {"rel_tol": 0.0, "ignore": ["gain_%"]}) == []
+
+    def test_bools_compare_exactly_not_numerically(self):
+        base = {"pass": True}
+        drift = check_bench.check_payload(base, {"pass": False},
+                                          {"rel_tol": 10.0})
+        assert drift
+
+    def test_nan_is_always_drift(self):
+        """A metric regressing TO NaN must fire the gate — NaN never
+        trips a > comparison, so it needs the explicit check."""
+        base = {"slowdown": 3.1}
+        drift = check_bench.check_payload(base, {"slowdown": float("nan")},
+                                          {"rel_tol": 10.0})
+        assert drift and "NaN" in drift[0]
+
+    def test_abs_tol_floor(self):
+        base, fresh = {"x": 0.0}, {"x": 1e-9}
+        assert check_bench.check_payload(base, fresh,
+                                         {"rel_tol": 0.0,
+                                          "abs_tol": 1e-6}) == []
+        assert check_bench.check_payload(base, fresh,
+                                         {"rel_tol": 0.0,
+                                          "abs_tol": 1e-12})
+
+
+# ------------------------------------------------------------- end to end
+
+def _write(path, payload):
+    with open(path, "w") as f:
+        json.dump(payload, f)
+
+
+class TestEndToEnd:
+    def _setup(self, tmp_path, fresh_value):
+        results = tmp_path / "results"
+        baselines = tmp_path / "baselines"
+        results.mkdir()
+        baselines.mkdir()
+        _write(baselines / "spec.json",
+               {"demo": {"rel_tol": 0.02, "ignore": ["wall_s"]}})
+        _write(baselines / "demo.json",
+               {"metric": 100.0, "wall_s": 5.0})
+        _write(results / "demo.json",
+               {"metric": fresh_value, "wall_s": 77.0})
+        return [f"--results={results}", f"--baselines={baselines}"]
+
+    def test_main_passes_within_tolerance(self, tmp_path, capsys):
+        assert check_bench.main(self._setup(tmp_path, 101.0)) == 0
+        assert "OK   demo" in capsys.readouterr().out
+
+    def test_main_fails_on_violating_fixture(self, tmp_path, capsys):
+        assert check_bench.main(self._setup(tmp_path, 110.0)) == 1
+        out = capsys.readouterr().out
+        assert "FAIL demo" in out and "metric" in out
+
+    def test_main_fails_on_missing_fresh_result(self, tmp_path, capsys):
+        args = self._setup(tmp_path, 100.0)
+        os.remove(os.path.join(str(tmp_path / "results"), "demo.json"))
+        assert check_bench.main(args) == 1
+        assert "fresh result missing" in capsys.readouterr().out
+
+    def test_unknown_only_name_fails(self, tmp_path, capsys):
+        """A typo'd --only must not silently gate nothing and pass."""
+        args = self._setup(tmp_path, 100.0)
+        assert check_bench.main(args + ["--only", "demo-typo"]) == 1
+        assert "unknown gated name" in capsys.readouterr().out
+
+    def test_write_records_baselines(self, tmp_path, capsys):
+        args = self._setup(tmp_path, 123.0)
+        assert check_bench.main(args + ["--write"]) == 0
+        assert check_bench.main(args) == 0        # now self-consistent
+
+
+# ------------------------------------------- the committed baselines gate
+
+class TestCommittedBaselines:
+    def test_spec_and_baselines_are_consistent(self):
+        """Every gated name has a committed baseline file, and the gate
+        passes when the fresh results ARE the baselines (the committed
+        state is self-consistent — CI can only fail on real drift)."""
+        with open(os.path.join(BASELINE_DIR, "spec.json")) as f:
+            spec = json.load(f)
+        assert spec, "empty gate spec"
+        for name in spec:
+            path = os.path.join(BASELINE_DIR, f"{name}.json")
+            assert os.path.exists(path), f"baseline missing for {name}"
+        assert check_bench.main([f"--results={BASELINE_DIR}",
+                                 f"--baselines={BASELINE_DIR}"]) == 0
