@@ -15,6 +15,13 @@ binary-refined past the coarse step, fanned out over the machine's
 cores. Results land in ``results/density.json``: the paper figure
 under ``density``/``gains``/``operating_point`` (unchanged keys) and
 the matrix under ``matrix``/``matrix_summary``.
+
+The HotLoop PR (ISSUE 6) adds a validation lap: every matrix cell is
+re-searched with ``find_density(fast=True)`` — the fluid mean-value
+bracket (`repro.core.fluid`) plus the exact boundary walk — and the
+returned densities must match the exact matrix cell-for-cell while
+spending a fraction of the exact probes (``fast_path`` in the
+payload: total and coarse-sweep probe ratios).
 """
 from __future__ import annotations
 
@@ -40,11 +47,11 @@ SEEDS = (1, 2, 3)
 
 
 def _search(args) -> tuple[tuple, int, list]:
-    (system, seed, pattern, duration, step, refine_to) = args
+    (system, seed, pattern, duration, step, refine_to, fast) = args
     best, results = find_density(
         system, lo=160, hi=800, step=step, seed=seed,
         refine_to=refine_to, duration_s=duration, warmup_s=10.0,
-        arrival_pattern=pattern)
+        arrival_pattern=pattern, fast=fast)
     probes = [{"n": r.n_functions,
                "slowdown": round(r.geomean_slowdown(), 2),
                "cpu": round(r.cpu_util, 3), "mem": round(r.mem_util, 3),
@@ -61,7 +68,7 @@ def run(quick: bool = False) -> dict:
         else ("azure", "poisson", "bursty", "diurnal")
 
     # ------------------------- the full matrix: system x seed x pattern
-    jobs = [(s, seed, pat, duration, step, refine_to)
+    jobs = [(s, seed, pat, duration, step, refine_to, False)
             for s in ALL_SYSTEMS for seed in SEEDS for pat in patterns]
     workers = min(os.cpu_count() or 1, len(jobs))
     t0 = time.time()
@@ -69,12 +76,45 @@ def run(quick: bool = False) -> dict:
         found = list(pool.map(_search, jobs))
     sweep_wall = time.time() - t0
 
+    # ------- fluid-bracketed fast mode: same densities, fewer probes.
+    # Every cell of the matrix re-searched with `fast=True`; the
+    # returned densities must MATCH the exact matrix cell-for-cell.
+    fjobs = [j[:-1] + (True,) for j in jobs]
+    t0 = time.time()
+    with ProcessPoolExecutor(max_workers=workers) as pool:
+        fast_found = list(pool.map(_search, fjobs))
+    fast_wall = time.time() - t0
+
     matrix: dict[str, dict] = {}
     sweep: dict[str, list] = {}
     for (system, seed, pattern), best, probes in found:
         matrix.setdefault(pattern, {}).setdefault(system, {})[seed] = best
         if pattern == "azure" and seed == SEEDS[0]:
             sweep[system] = probes          # Fig 6a probe trajectories
+
+    exact_by_key = {key: (best, probes) for key, best, probes in found}
+    mismatches = []
+    probes_exact = probes_fast = 0
+    sweep_exact = sweep_fast = 0        # coarse/bracketing phase only
+    for key, best, probes in fast_found:
+        e_best, e_probes = exact_by_key[key]
+        if best != e_best:
+            mismatches.append({"key": list(key), "exact": e_best,
+                               "fast": best})
+        probes_exact += len(e_probes)
+        probes_fast += len(probes)
+        sweep_exact += sum(1 for p in e_probes if (p["n"] - 160) % step == 0)
+        sweep_fast += sum(1 for p in probes if (p["n"] - 160) % step == 0)
+    fast_path = {
+        "searches": len(fjobs),
+        "densities_match": not mismatches,
+        "mismatches": mismatches,
+        "probes_exact": probes_exact, "probes_fast": probes_fast,
+        "probe_ratio": round(probes_exact / max(probes_fast, 1), 2),
+        "sweep_probes_exact": sweep_exact, "sweep_probes_fast": sweep_fast,
+        "sweep_probe_ratio": round(sweep_exact / max(sweep_fast, 1), 2),
+        "fast_wall_s": round(fast_wall, 1),
+    }
 
     summary = []
     for pattern in patterns:
@@ -124,10 +164,19 @@ def run(quick: bool = False) -> dict:
                       f"{len(SEEDS)} seeds x {len(patterns)} patterns "
                       f"({len(jobs)} density searches, "
                       f"{sweep_wall:.0f}s on {workers} workers)"))
+    print()
+    print(f"fluid fast path: {fast_path['searches']} searches re-run "
+          f"fast=True — densities "
+          f"{'all match' if fast_path['densities_match'] else 'MISMATCH'}; "
+          f"probes {probes_exact} -> {probes_fast} "
+          f"({fast_path['probe_ratio']}x total, "
+          f"{fast_path['sweep_probe_ratio']}x on the coarse sweep), "
+          f"{fast_wall:.0f}s")
 
     payload = {"density": density, "gains": rows, "sweep": sweep,
                "operating_point": op_rows,
                "matrix": matrix, "matrix_summary": summary,
+               "fast_path": fast_path,
                "sweep_wall_s": round(sweep_wall, 1),
                "workers": workers,
                "config": {"duration_s": duration, "step": step,

@@ -1,24 +1,42 @@
-"""DES throughput — PlanProgram engine vs the pre-refactor walker.
+"""DES throughput — the engine matrix and the event-efficiency ledger.
 
 The density experiment's cost is simulator throughput: Fig 6 needs a
 7-variant x multi-seed x high-n sweep of minutes-long virtual runs.
-This benchmark is the first point in that perf trajectory
-(``results/sim_throughput.json``): simulated invocations/sec and
-events/sec at the paper-scale n=400 density point, for
+This benchmark tracks that perf trajectory
+(``results/sim_throughput.json``) across the full engine matrix at the
+paper-scale n=400 density point:
 
-* ``engine="legacy"`` — the pre-refactor hot path, preserved verbatim
-  (per-invocation closure graphs, name-keyed dicts, O(V) successor
-  scans, heap-loaded arrivals, heap-routed zero-delay events);
-* ``engine="program"`` — the flat PlanProgram interpreter (indegree
-  countdown, index-coded events, batched arrivals, memoized duration
-  vectors), bit-for-bit identical output (`tests/test_des.py` goldens);
+* ``engine="legacy"``  — the pre-refactor walker, preserved verbatim
+  (per-invocation closure graphs, name-keyed dicts, heap-routed
+  zero-delay events);
+* ``engine="classic"`` — the flat PlanProgram fused loop (indegree
+  countdown, index-coded events, batched arrivals), bit-for-bit
+  identical output;
+* ``engine="hot"``     — classic plus cohort compression: solo-schedule
+  invocations replay as compiled straight-line arithmetic and collapse
+  to 1-2 barrier events, materializing back to event-driven execution
+  only under contention. The default engine;
+* ``engine="calendar"``— hot-engine semantics on a calendar-queue
+  scheduler instead of the binary heap.
 
-plus the end-to-end number the refactor buys: aggregate simulated
-invocations/sec of the previously-unaffordable 7-variant sweep slice,
-run the old way (serial, legacy engine) vs the new way (program engine
-across all cores). The ≥10x target applies to the sweep: per-run
-engine speedup x core-level parallelism; a single run's speedup is
-bounded by the event-heap floor (~7 heap events per invocation).
+One wall-clock target rides on the matrix, evaluated on the ``nexus``
+config (the solo-schedule regime the 7-variant sweep spends most of
+its probes in): hot must deliver >= 2x the classic engine's
+single-core inv/s (the HotLoop criterion; ~10x vs legacy falls out of
+the same cell). The ``baseline`` column is printed alongside as the
+contended counter-case — at n=400 baseline is past its density knee,
+cohorts materialize back to event-driven execution, and compression
+deliberately gates off (~1x vs classic is expected there, not a
+regression). The 7-variant sweep slice (hot engine fanned across
+cores vs the pre-refactor serial loop) is reported too; it scales
+with core count on top of the single-core ratio.
+
+Wall-clock is machine-dependent, so the regression gate
+(``scripts/check_bench.py``) pins the *deterministic* ``efficiency``
+section instead: events per invocation, the compressed-cohort
+fraction, materialization counts, bundle-cache hit/miss counts, and
+the exact-vs-fluid density probe counts. Those are pure functions of
+(seed, config) — any drift is a semantic change, not noise.
 """
 from __future__ import annotations
 
@@ -27,19 +45,27 @@ import os
 import time
 from concurrent.futures import ProcessPoolExecutor
 
-from repro.core.des import DensitySimulator
+from repro.core.des import (DensitySimulator, bundle_cache_stats,
+                            find_density)
 from repro.core.plan import SYSTEMS
 
 from benchmarks.common import save_json, table
 
-TARGET_SPEEDUP = 10.0
+TARGET_HOT_SPEEDUP = 2.0        # single-core: hot vs classic, nexus config
 N_FUNCTIONS = 400
+ENGINE_MATRIX = ("legacy", "classic", "hot", "calendar")
+
+# the efficiency ledger runs at one fixed config regardless of --quick,
+# so the committed baseline gates both CI and full runs
+EFF_DURATION_S = 20.0
+EFF_FLUID_KW = dict(lo=160, hi=480, step=40, seed=1, refine_to=8,
+                    duration_s=10.0, warmup_s=4.0)
 
 
 def _timed_run(system: str, engine: str, n: int, duration_s: float,
                seed: int = 1) -> dict:
     """One simulation, timed around `run()` only (setup excluded for
-    both engines alike), garbage collector paused like any serious DES."""
+    every engine alike), garbage collector paused like any serious DES."""
     sim = DensitySimulator(system, n, seed=seed, duration_s=duration_s,
                            warmup_s=duration_s / 6.0, engine=engine)
     gc_was = gc.isenabled()
@@ -70,28 +96,76 @@ def _sweep_job(args) -> tuple[int, float]:
     return r["completed"], r["wall_s"]
 
 
+def _efficiency() -> dict:
+    """Deterministic event-economy counters — the gated section.
+
+    Counts, not wall-clock: events scheduled per completed invocation,
+    the fraction of invocations that ran as compressed cohorts, how
+    often contention forced materialization, bundle-cache traffic, and
+    how many exact-engine probes the fluid-bracketed density search
+    spends vs the exact sweep. All are pure functions of (seed, config).
+    """
+    bundle_cache_stats(reset=True)
+    eff: dict = {}
+    for system in ("baseline", "nexus"):
+        sim = DensitySimulator(system, N_FUNCTIONS, seed=1,
+                               duration_s=EFF_DURATION_S,
+                               warmup_s=EFF_DURATION_S / 4.0, engine="hot")
+        r = sim.run()
+        eff[system] = {
+            "completed": r.completed,
+            "events": sim.loop.events_scheduled,
+            "events_per_inv": round(sim.loop.events_scheduled
+                                    / r.completed, 4),
+            "compressed_invocations": sim.compressed_invocations,
+            "compressed_fraction": round(sim.compressed_invocations
+                                         / r.completed, 4),
+            "materializations": sim.materializations,
+        }
+    cache = bundle_cache_stats()
+    eff["bundle_cache"] = {"hits": cache["hits"],
+                           "misses": cache["misses"]}
+
+    d_exact, r_exact = find_density("nexus", **EFF_FLUID_KW)
+    d_fast, r_fast = find_density("nexus", fast=True, **EFF_FLUID_KW)
+    eff["fluid"] = {"density_exact": d_exact, "density_fast": d_fast,
+                    "match": d_exact == d_fast,
+                    "probes_exact": len(r_exact),
+                    "probes_fast": len(r_fast)}
+    return eff
+
+
 def run(quick: bool = False) -> dict:
     duration = 20.0 if quick else 45.0
     trials = 2 if quick else 3
     systems = list(SYSTEMS)
 
-    # ---- per-run engine comparison at the n=400 density point
-    per_run = {}
-    for engine in ("legacy", "program"):
-        rows = [_best_of(trials, s, engine, N_FUNCTIONS, duration)
-                for s in ("baseline", "nexus")]
-        per_run[engine] = rows
-    speedup_per_run = {
-        row_p["system"]: row_p["inv_per_s"] / row_l["inv_per_s"]
-        for row_p, row_l in zip(per_run["program"], per_run["legacy"])}
+    # ---- the engine matrix at the n=400 density point
+    bundle_cache_stats(reset=True)
+    t_matrix0 = time.perf_counter()
+    per_run: dict[str, list[dict]] = {}
+    for engine in ENGINE_MATRIX:
+        per_run[engine] = [_best_of(trials, s, engine, N_FUNCTIONS, duration)
+                           for s in ("baseline", "nexus")]
+    matrix_wall = time.perf_counter() - t_matrix0
+    cache = bundle_cache_stats()
+    compile_share = cache["compile_s"] / matrix_wall if matrix_wall else 0.0
+
+    def _speedup(a: str, b: str) -> dict[str, float]:
+        return {ra["system"]: ra["inv_per_s"] / rb["inv_per_s"]
+                for ra, rb in zip(per_run[a], per_run[b])}
+
+    speedup_hot_vs_classic = _speedup("hot", "classic")
+    speedup_hot_vs_legacy = _speedup("hot", "legacy")
+    speedup_calendar_vs_legacy = _speedup("calendar", "legacy")
 
     # ---- the sweep slice: all 7 variants x 2 seeds at n=400.
     # Old way: the pre-refactor bench loop — serial, one process.
-    # New way: program engine fanned out over the machine's cores.
+    # New way: hot engine fanned out over the machine's cores.
     # Both sides are end-to-end wall clock (simulator construction and
     # pool startup included).
     seeds = (1, 2)
-    jobs = [(s, "program", N_FUNCTIONS, duration, sd)
+    jobs = [(s, "hot", N_FUNCTIONS, duration, sd)
             for s in systems for sd in seeds]
     workers = min(os.cpu_count() or 1, len(jobs))
     t0 = time.perf_counter()
@@ -111,46 +185,74 @@ def run(quick: bool = False) -> dict:
         "duration_s": duration, "workers": workers,
         "prerefactor_serial": {"invocations": old_inv, "wall_s": old_wall,
                                "inv_per_s": old_inv / old_wall},
-        "program_parallel": {"invocations": new_inv, "wall_s": new_wall,
-                             "inv_per_s": new_inv / new_wall},
+        "hot_parallel": {"invocations": new_inv, "wall_s": new_wall,
+                         "inv_per_s": new_inv / new_wall},
     }
-    speedup_sweep = (sweep["program_parallel"]["inv_per_s"]
+    speedup_sweep = (sweep["hot_parallel"]["inv_per_s"]
                      / sweep["prerefactor_serial"]["inv_per_s"])
 
+    # ---- the deterministic ledger (the part check_bench gates)
+    efficiency = _efficiency()
+
     rows = []
-    for engine in ("legacy", "program"):
+    for engine in ENGINE_MATRIX:
         for r in per_run[engine]:
             rows.append({"engine": engine, "system": r["system"],
                          "inv/s": round(r["inv_per_s"]),
                          "events/s": round(r["events_per_s"]),
                          "wall_s": round(r["wall_s"], 2)})
     print(table(rows, ["engine", "system", "inv/s", "events/s", "wall_s"],
-                title=f"DES throughput at n={N_FUNCTIONS} "
+                title=f"DES engine matrix at n={N_FUNCTIONS} "
                       f"({duration:.0f}s virtual)"))
     print()
     print(table([{"mode": "pre-refactor (serial, legacy engine)",
                   "inv/s": round(old_inv / old_wall),
                   "wall_s": round(old_wall, 1)},
-                 {"mode": f"PlanProgram x{workers} workers",
+                 {"mode": f"hot engine x{workers} workers",
                   "inv/s": round(new_inv / new_wall),
                   "wall_s": round(new_wall, 1)}],
                 ["mode", "inv/s", "wall_s"],
                 title="7-variant x 2-seed sweep slice (the workload the "
                       "rearchitecture is for)"))
-    print(f"\nper-run engine speedup: "
-          + ", ".join(f"{s} {v:.1f}x" for s, v in speedup_per_run.items()))
-    print(f"sweep speedup: {speedup_sweep:.1f}x "
-          f"(target >= {TARGET_SPEEDUP:.0f}x; {workers} cores)")
+    print("\nhot vs classic:  "
+          + ", ".join(f"{s} {v:.2f}x"
+                      for s, v in speedup_hot_vs_classic.items())
+          + f"  (target: nexus >= {TARGET_HOT_SPEEDUP:.0f}x; baseline is "
+          "past its knee at n=400 -- compression gates off under "
+          "contention)")
+    print("hot vs legacy:   "
+          + ", ".join(f"{s} {v:.2f}x"
+                      for s, v in speedup_hot_vs_legacy.items()))
+    print(f"sweep speedup: {speedup_sweep:.1f}x over the pre-refactor "
+          f"serial loop ({workers} cores; scales with core count)")
+    print(f"bundle cache: {cache['hits']} hits / {cache['misses']} misses, "
+          f"compile {cache['compile_s']*1e3:.0f}ms "
+          f"({100*compile_share:.1f}% of matrix wall)")
+    for system in ("baseline", "nexus"):
+        e = efficiency[system]
+        print(f"efficiency[{system}]: {e['events_per_inv']:.2f} events/inv, "
+              f"{100*e['compressed_fraction']:.1f}% compressed, "
+              f"{e['materializations']} materializations")
+    f = efficiency["fluid"]
+    print(f"fluid density search: exact {f['probes_exact']} probes, "
+          f"fast {f['probes_fast']} probes, "
+          f"density {f['density_exact']} vs {f['density_fast']} "
+          f"({'match' if f['match'] else 'MISMATCH'})")
 
     payload = {
         "n_functions": N_FUNCTIONS, "duration_s": duration,
         "cpu_count": os.cpu_count(),
         "per_run": per_run,
-        "speedup_per_run": speedup_per_run,
+        "speedup_hot_vs_classic": speedup_hot_vs_classic,
+        "speedup_hot_vs_legacy": speedup_hot_vs_legacy,
+        "speedup_calendar_vs_legacy": speedup_calendar_vs_legacy,
         "sweep": sweep,
         "speedup_sweep": speedup_sweep,
-        "target_speedup": TARGET_SPEEDUP,
-        "meets_target": speedup_sweep >= TARGET_SPEEDUP,
+        "bundle_cache": {**cache, "compile_share": compile_share},
+        "efficiency": efficiency,
+        "target_hot_speedup": TARGET_HOT_SPEEDUP,
+        "meets_target": (speedup_hot_vs_classic["nexus"]
+                         >= TARGET_HOT_SPEEDUP),
     }
     save_json("sim_throughput", payload)
     return payload

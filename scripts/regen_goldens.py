@@ -27,6 +27,7 @@ import sys
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 sys.path.insert(0, os.path.join(REPO, "tests"))
 sys.path.insert(0, os.path.join(REPO, "src"))
+sys.path.insert(0, REPO)            # `tests.*` absolute imports
 
 
 def regenerate() -> dict:

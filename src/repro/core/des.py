@@ -24,10 +24,27 @@ runtime drives its walker off the identical lowered program, so variant
 behaviour cannot drift between the two executors; per-phase durations
 come from `plan.duration_vector` — the same calibration.
 
-``engine="legacy"`` keeps the pre-refactor PhasePlan-walking
-interpreter: `benchmarks/sim_throughput.py` measures the speedup
-against it and the parity goldens assert both engines produce
-bit-for-bit identical latencies.
+Four engines share this machinery, every one pinned bit-for-bit to the
+same latency streams by `tests/goldens/des_parity.json`:
+
+* ``"legacy"``   — the pre-refactor PhasePlan-walking interpreter,
+  preserved verbatim as the parity reference;
+* ``"classic"``  — the fused PlanProgram loop (`_run_hot`) without
+  cohort compression (historical alias: ``"program"``);
+* ``"hot"``      — the default: classic plus *compressed cohorts* —
+  an invocation whose node has free capacity replays its whole DAG as
+  compiled straight-line arithmetic (`_form_compressed`) and collapses
+  to 1–2 barrier heap events; a failed scalar grant `_materialize`s
+  the node's oldest compressed runs back to event-driven execution at
+  the identical floats, so contention never changes a result;
+* ``"calendar"`` — hot-engine semantics driven through the `EventLoop`
+  with a `CalendarQueue` (bucketed O(1)-amortized scheduling) in place
+  of the binary heap.
+
+`benchmarks/sim_throughput.py` records the engine matrix and the
+deterministic event-economy counters; `find_density(fast=True)` adds a
+fluid-model bracket (`repro.core.fluid`) so density search spends ~5x
+fewer exact probes without changing its answer.
 
 SLO (paper): p99 latency < 5x the function's unloaded median; density =
 max deployed functions whose geometric-mean slowdown meets the SLO.
@@ -38,6 +55,7 @@ import math
 from collections import deque
 from dataclasses import dataclass
 from heapq import heappop, heappush
+from time import perf_counter as _perf_counter
 
 from repro.core import fabric as F
 from repro.core import faults as FA
@@ -46,10 +64,113 @@ from repro.core import plan as P
 from repro.core import workloads as W
 from repro.core.plan import (SYSTEMS, PlanProgram, SystemSpec, compile_plan,
                              compile_program)
-from repro.core.trace import ArrivalSpec, generate_arrivals, sample_rates
+from repro.core.trace import (ArrivalSpec, generate_arrivals, merge_streams,
+                              sample_rates)
 from repro.core.transport import TRANSPORTS
 
 _INF = math.inf
+
+
+# ----------------------------------------------------------- calendar queue
+
+class CalendarQueue:
+    """Brown-style calendar queue over full ``(t, seq, ...)`` records.
+
+    The scheduler behind ``engine="calendar"``: timed events hash into
+    fixed-width time buckets (small heaps) and the next event is found
+    by scanning forward from the current virtual day — O(1) amortized
+    when event times are spread over the calendar, vs the binary heap's
+    O(log n). The *monotone bulk* of events already bypasses the heap
+    (arrival feed, keep-alive timer deque); the calendar replaces the
+    heap for the residual — phase completions, crashes, samples.
+
+    Exactness guarantees (what the parity goldens pin):
+
+    * records carry the loop's shared seq counter, and every comparison
+      is a full-record tuple comparison, so the (t, seq) total order —
+      and therefore tie-breaking — is *identical* to the heap's;
+    * the head record is extracted eagerly: ``peek`` is O(1) field
+      access and a push that undercuts the head swaps into it, so the
+      event loop's next-event probe costs the same as ``q[0]``;
+    * a record's virtual day is computed once, with the same arithmetic
+      the scan uses (``int(t * inv_width)``), so float rounding at
+      bucket boundaries cannot strand an event: push and scan always
+      agree on which day a record belongs to.
+    """
+
+    __slots__ = ("_buckets", "_nb", "_mask", "_width", "_inv_width",
+                 "_count", "_head")
+
+    def __init__(self, width: float = 0.002, nbuckets: int = 1024):
+        # power-of-two bucket count: day -> bucket is a mask, not a mod
+        nb = 1
+        while nb < nbuckets:
+            nb <<= 1
+        self._nb = nb
+        self._mask = nb - 1
+        self._width = width
+        self._inv_width = 1.0 / width
+        self._buckets: list[list] = [[] for _ in range(nb)]
+        self._count = 0
+        self._head = None           # eagerly-extracted minimum record
+
+    def __len__(self) -> int:
+        return self._count + (self._head is not None)
+
+    def push(self, rec) -> None:
+        h = self._head
+        if h is None:
+            self._head = rec
+            return
+        if rec < h:                 # undercuts the head: swap in
+            self._head = rec
+            rec = h
+        heappush(self._buckets[int(rec[0] * self._inv_width) & self._mask],
+                 rec)
+        self._count += 1
+        if self._count > 8 * self._nb:
+            self._resize(self._nb * 2)
+
+    def peek(self):
+        return self._head
+
+    def pop(self):
+        rec = self._head
+        self._head = self._extract() if self._count else None
+        return rec
+
+    def _extract(self):
+        """Remove and return the smallest bucketed record. Scans one
+        calendar year from the head's day, taking the first bucket head
+        still inside its own day of the scan; records further out wait
+        for a later year (classic calendar-queue discipline). Falls
+        back to a direct min scan when a whole year is empty."""
+        day0 = int(self._head[0] * self._inv_width)
+        buckets = self._buckets
+        mask = self._mask
+        inv_w = self._inv_width
+        for k in range(self._nb):
+            b = buckets[(day0 + k) & mask]
+            if b and int(b[0][0] * inv_w) <= day0 + k:
+                self._count -= 1
+                return heappop(b)
+        best_b = None
+        for b in buckets:           # sparse year: direct min scan
+            if b and (best_b is None or b[0] < best_b[0]):
+                best_b = b
+        self._count -= 1
+        return heappop(best_b)
+
+    def _resize(self, nb: int) -> None:
+        old = self._buckets
+        self._nb = nb
+        self._mask = nb - 1
+        self._buckets = [[] for _ in range(nb)]
+        inv_w = self._inv_width
+        mask = self._mask
+        for b in old:
+            for rec in b:
+                heappush(self._buckets[int(rec[0] * inv_w) & mask], rec)
 
 
 # --------------------------------------------------------------- event loop
@@ -78,7 +199,7 @@ class EventLoop:
     """
 
     __slots__ = ("_q", "_pending", "_seq", "now", "_feed", "_feed_cb", "_fi",
-                 "hot", "timerq", "timer_cb", "classic")
+                 "hot", "timerq", "timer_cb", "classic", "cal")
 
     def __init__(self, classic: bool = False):
         self._q: list = []
@@ -88,6 +209,10 @@ class EventLoop:
         self._feed: list = []
         self._feed_cb = None
         self._fi = 0
+        #: optional CalendarQueue replacing the binary heap for timed
+        #: records (``engine="calendar"``) — same records, same shared
+        #: seq counter, same (t, seq) total order
+        self.cal = None
         #: handler for sentinel records (callback `None`): the owner's
         #: inlined hot path, called as ``hot(a, b)``. Callback records
         #: dispatch ``cb(a, b)`` as usual.
@@ -115,14 +240,16 @@ class EventLoop:
 
     def at(self, t: float, cb, a=None, b=None) -> None:
         self._seq = s = self._seq + 1
-        heappush(self._q, (t, s, cb, a, b))
+        if self.cal is None:
+            heappush(self._q, (t, s, cb, a, b))
+        else:
+            self.cal.push((t, s, cb, a, b))
 
     def after(self, dt: float, cb, a=None, b=None) -> None:
         if dt <= 0.0:
             self.defer(cb, a, b)
         else:
-            self._seq = s = self._seq + 1
-            heappush(self._q, (self.now + dt, s, cb, a, b))
+            self.at(self.now + dt, cb, a, b)
 
     def defer(self, cb, a=None, b=None) -> None:
         """Schedule at the current instant (after already-queued
@@ -133,6 +260,35 @@ class EventLoop:
         else:
             self._pending.append((s, cb, a, b))
 
+    # ------------------------------------------------- schedule choke points
+    #
+    # Every hot-record schedule goes through exactly these two helpers
+    # (or the fused `_run_hot`, which inlines them and re-syncs the seq
+    # counter around any out-of-line call): one place consumes the
+    # shared seq counter and picks the queue, so tie-ordering cannot
+    # drift between the method paths, the fused loop, and the calendar
+    # engine.
+
+    def sched(self, t: float, run, code: int) -> None:
+        """Schedule a timed hot record ``(t, seq, run, code)``."""
+        self._seq = s = self._seq + 1
+        if self.cal is None:
+            heappush(self._q, (t, s, run, code))
+        else:
+            self.cal.push((t, s, run, code))
+
+    def sched0(self, run, code: int) -> None:
+        """Schedule a hot record at the current instant (zero-delay
+        FIFO: O(1), yet ordered exactly as a same-time heap push)."""
+        self._seq = s = self._seq + 1
+        self._pending.append((s, run, code))
+
+    def sched_timer(self, t: float, a, b) -> None:
+        """Append a constant-delay timer record — fire times are
+        monotone by construction, so the deque IS the priority queue."""
+        self._seq = s = self._seq + 1
+        self.timerq.append((t, s, a, b))
+
     def feed(self, events: list, cb) -> None:
         """Attach a time-sorted ``[(t, arg), ...]`` stream delivered as
         ``cb(arg, None)`` — arrivals bypass the heap entirely."""
@@ -141,6 +297,9 @@ class EventLoop:
         self._fi = 0
 
     def run(self, until: float) -> None:
+        if self.cal is not None:
+            self._run_cal(until)
+            return
         q = self._q
         pending = self._pending
         hot = self.hot
@@ -201,6 +360,86 @@ class EventLoop:
                 if t_q > until:
                     break
                 e = heappop(q)
+                self.now = e[0]
+                if len(e) == 4:                # hot record (run, code)
+                    hot(e[2], e[3])
+                else:
+                    e[2](e[3], e[4])
+                continue
+            if t_r > until:
+                break
+            e = timers.popleft()
+            self.now = e[0]
+            tcb(e[2], e[3])
+        self._fi = fi
+        self.now = until
+
+    def _run_cal(self, until: float) -> None:
+        """`run`, with the binary heap swapped for the calendar queue.
+        Event-source arbitration is identical — the calendar's eager
+        head makes the next-timed-event probe the same O(1) field read
+        as ``q[0]``, and records carry the same shared seq counter."""
+        cal = self.cal
+        pending = self._pending
+        hot = self.hot
+        timers = self.timerq if self.timerq is not None else ()
+        tcb = self.timer_cb
+        feed, fcb = self._feed, self._feed_cb
+        fi, nf = self._fi, len(self._feed)
+        t_f = feed[fi][0] if fi < nf else _INF
+        while True:
+            h = cal._head
+            if pending:
+                if t_f <= self.now:            # exact tie: arrivals were
+                    self.now = t_f             # scheduled first -> win
+                    arg = feed[fi][1]
+                    fi += 1
+                    t_f = feed[fi][0] if fi < nf else _INF
+                    fcb(arg, None)
+                    continue
+                # smallest seq among same-time candidates wins
+                win = pending[0][0]
+                src = 0
+                if h is not None and h[0] <= self.now and h[1] < win:
+                    win = h[1]
+                    src = 1
+                if timers and timers[0][0] <= self.now \
+                        and timers[0][1] < win:
+                    src = 2
+                if src == 1:
+                    e = cal.pop()
+                    self.now = e[0]
+                    if len(e) == 4:            # hot record (run, code)
+                        hot(e[2], e[3])
+                    else:
+                        e[2](e[3], e[4])
+                    continue
+                if src == 2:
+                    e = timers.popleft()
+                    self.now = e[0]
+                    tcb(e[2], e[3])
+                    continue
+                e = pending.popleft()
+                if len(e) == 3:                # hot record
+                    hot(e[1], e[2])
+                else:
+                    e[1](e[2], e[3])
+                continue
+            t_q = h[0] if h is not None else _INF
+            t_r = timers[0][0] if timers else _INF
+            if t_f <= t_q and t_f <= t_r:      # arrivals win exact ties
+                if t_f > until:
+                    break
+                self.now = t_f
+                arg = feed[fi][1]
+                fi += 1
+                t_f = feed[fi][0] if fi < nf else _INF
+                fcb(arg, None)
+                continue
+            if t_q < t_r or (t_q == t_r and h[1] < timers[0][1]):
+                if t_q > until:
+                    break
+                e = cal.pop()
                 self.now = e[0]
                 if len(e) == 4:                # hot record (run, code)
                     hot(e[2], e[3])
@@ -282,7 +521,7 @@ class SimInstance:
 
 class SimNode:
     __slots__ = ("cpu", "mem_cap", "mem_used", "mem_peak", "vms", "backend",
-                 "cpu_hot", "cpu_wait", "be_hot", "be_wait")
+                 "cpu_hot", "cpu_wait", "be_hot", "be_wait", "cruns")
 
     def __init__(self, loop: EventLoop, cores: int, mem_mb: float,
                  backend_base_mb: float, backend_workers: int):
@@ -295,15 +534,21 @@ class SimNode:
         # worker pool — a real contention point at high density (§7.2.1
         # notes host-user cycles rise 71% as work moves into it).
         self.backend = CorePool(loop, backend_workers)
-        # program-engine pool state: [busy, slots, busy_integral] plus a
-        # FIFO of (run, phase) waiters — list indexing beats attribute
-        # dispatch at hot-path rates. The legacy engine keeps the
-        # CorePool objects above; one simulator uses exactly one of the
-        # two representations.
-        self.cpu_hot = [0, cores, 0.0]
+        # program-engine pool state: [busy, slots, busy_integral, node]
+        # plus a FIFO of (run, phase) waiters — list indexing beats
+        # attribute dispatch at hot-path rates. The trailing node
+        # backref lets a failed grant find the node's compressed runs
+        # to materialize. The legacy engine keeps the CorePool objects
+        # above; one simulator uses exactly one of the two
+        # representations.
+        self.cpu_hot = [0, cores, 0.0, self]
         self.cpu_wait: deque = deque()
-        self.be_hot = [0, backend_workers, 0.0]
+        self.be_hot = [0, backend_workers, 0.0, self]
         self.be_wait: deque = deque()
+        #: live cohort-compressed invocations on this node (their core/
+        #: slot needs are reserved in the pool counters above; a failed
+        #: scalar grant materializes them back to event-driven runs)
+        self.cruns: list = []
 
 
 # --------------------------------------------- program-engine hot records
@@ -341,6 +586,28 @@ _RESPB = 1 << 24   # respond barrier fires when this phase completes
 _ATT_SHIFT = 25
 _CODE_MASK = (1 << _ATT_SHIFT) - 1
 
+# compressed-run event (fault-free hot/calendar engines only, so the
+# bit cannot collide with the attempt stamp above): the record slot
+# carries a crun list, not a run list, and _RELB/_RESPB say which
+# barrier(s) fire. A whole uncontended invocation is 1-2 such events.
+_CRUN = 1 << 25
+
+# crun layout: one cohort-compressed invocation. The solo schedule
+# (ready/end per phase) is replayed at formation; only the barrier
+# events are real. `dead` lazily invalidates the barrier events after
+# a materialization converted the run back to event-driven execution.
+_C_INST = 0        # SimInstance
+_C_T = 1           # arrival time
+_C_LATS = 2        # the function's latency list
+_C_NODE = 3        # SimNode (reservation release, cruns membership)
+_C_WC = 4          # reserved cores
+_C_WB = 5          # reserved backend slots
+_C_DEAD = 6        # materialized or completed: barrier events are stale
+_C_ENDS = 7        # per-phase completion times (solo replay)
+_C_READY = 8       # per-phase ready times (= max parent end, or t_arr)
+_C_BND = 9         # (prog, tmpl) bundle
+_C_RELDONE = 10    # release barrier already fired
+
 # phase opcodes: what starting a ready phase does. Folded statically
 # per (program, duration vector) — the zero-duration test, the resource
 # class, and the group-head test all vanish from the hot path.
@@ -348,6 +615,21 @@ _OP_SLOT = 0       # backend-group head: take a slot, then _EXEC
 _OP_ZERO = 1       # zero duration: complete via the zero-delay FIFO
 _OP_CORE = 2       # timed, on a node core
 _OP_WIRE = 3       # timed, pure latency
+
+# compression template (tmpl[9]): the static inputs of the solo-
+# schedule replay, built once per (variant, workload, coldness):
+_CT_PRED = 0       # predecessor index tuples (PlanProgram.pred)
+_CT_DURS = 1       # duration vector (== tmpl[2])
+_CT_CORE = 2       # indices of timed on-core phases (integral/width)
+_CT_WC = 3         # max concurrent cores of the solo schedule
+_CT_WB = 4         # max concurrent backend slots of the solo schedule
+_CT_REL = 5        # release barrier phase index
+_CT_RESP = 6       # respond barrier phase index
+_CT_N = 7          # phase count
+_CT_GROUPS = 8     # (head, slot-release phase) per backend group
+_CT_ONCORE = 9     # per-phase: timed and on a core (holds a core slot)
+_CT_SOLO = 10      # compiled solo replay: t0 -> (ready, ends, max end)
+_CT_CORESUM = 11   # sum of core-phase durations (prepaid busy integral)
 
 # per-function record (one dict hit per arrival instead of five):
 _F_IDLE = 0        # warm instances
@@ -441,6 +723,175 @@ class SimResult:
         return self.completed > 0 and self.geomean_slowdown() < factor
 
 
+# ---------------------------------------------------- shared bundle cache
+
+#: process-wide (PlanProgram, template) bundles, keyed on
+#: (variant name, Workload, coldness, kernel-bypass) — Workloads are
+#: frozen dataclasses, so equal declarations hit the same entry across
+#: simulator instances: a density search compiles each template once.
+_BUNDLES: dict = {}
+_BUNDLE_STATS = {"hits": 0, "misses": 0, "compile_s": 0.0}
+
+
+def bundle_cache_stats(reset: bool = False) -> dict:
+    """Snapshot (optionally reset) the shared template-cache counters:
+    hits/misses across every DensitySimulator in the process plus the
+    wall-clock seconds spent compiling on misses."""
+    out = dict(_BUNDLE_STATS)
+    if reset:
+        _BUNDLE_STATS.update(hits=0, misses=0, compile_s=0.0)
+    return out
+
+
+def _hold_width(items, anc) -> int:
+    """Max simultaneous holds the event engine can observe for one
+    run's solo resource intervals. `items` are (start, end,
+    start_phase, end_phase); `anc` is a per-phase ancestor bitmask.
+
+    Two holds that merely touch at a boundary count as concurrent
+    *unless* the releasing phase is an ancestor of the acquiring one:
+    a phase cannot become ready until every ancestor's completion
+    event has been processed, and the event engine frees a resource
+    before cascading successors, so a dependency-ordered handoff never
+    overlaps. Unrelated boundary coincidences keep the conservative
+    closed-interval reading — over-reserving only sends an invocation
+    down the scalar path, while under-reserving would let a run
+    proceed where the event-driven engine could have queued it."""
+    best = 0
+    for idx, (s, _e, si, _ei) in enumerate(items):
+        c = 1                       # the hold starting here
+        for jdx, (s2, e2, _sp2, ep2) in enumerate(items):
+            if jdx == idx:
+                continue
+            if s2 <= s and (e2 > s or
+                            (e2 == s and not (anc[si] >> ep2) & 1)):
+                c += 1
+        if c > best:
+            best = c
+    return best
+
+
+def _build_bundle(spec: SystemSpec, w: "W.Workload", cold: bool,
+                  kernel_bypass: bool):
+    """(PlanProgram, run-record template) for one (variant, workload,
+    coldness): the program engines' whole structural + cost input.
+
+    The template is the invariant prefix of the flat run record (the
+    ``_R_*`` layout): (indegree, virtual_root_idx, durs, succ+,
+    on_core, acquires_slot, releases_slot+, release_idx, respond_idx,
+    roots). The successor/slot arrays carry one extra *virtual* phase
+    whose successors are the roots: an arrival "completes" it, so
+    invocation start reuses the hot block's successor machinery
+    verbatim. Trailing slots: [7]/[8] FaultPlane lowering, [9] the
+    cohort-compression template (``_CT_*`` layout)."""
+    prog = compile_program(spec, w.profile, cold=cold,
+                           kernel_bypass=kernel_bypass)
+    durs = P.duration_vector(spec, w, cold)
+    timed = [(_OP_ZERO if d <= 0.0 else
+              (_OP_CORE if oc else _OP_WIRE))
+             for d, oc in zip(durs, prog.on_core)]
+    ops = tuple(_OP_SLOT if acq else t
+                for acq, t in zip(prog.acquires_slot, timed))
+    code = [i
+            | (_SLOTREL if prog.releases_slot[i] else 0)
+            | (_RELB if i == prog.release_idx else 0)
+            | (_RESPB if i == prog.respond_idx else 0)
+            for i in range(len(prog.names))]
+    roots = set(prog.roots)
+    # FaultPlane extras (trailing slots; the hot path reads only
+    # 0..6): the full static code array, and each phase's
+    # intra-backend-group indegree — what an aborted group's members
+    # reset their countdown to before the re-drive.
+    intra = [0] * len(prog.names)
+    for i, succs in enumerate(prog.succ):
+        gi = prog.bgroup_of[i]
+        if gi >= 0:
+            for s in succs:
+                if prog.bgroup_of[s] == gi:
+                    intra[s] += 1
+    # ---- cohort-compression template: solo-schedule replay at t0=0
+    # gives each phase's ready/end offsets; the core/slot interval
+    # overlaps bound the run's concurrent resource use (its
+    # reservation). Durations are per-template constants, so the
+    # widths are too.
+    n = len(durs)
+    pred = prog.pred
+    ready0 = [0.0] * n
+    ends0 = [0.0] * n
+    for i in range(n):
+        m = 0.0
+        for p in pred[i]:
+            e = ends0[p]
+            if e > m:
+                m = e
+        ready0[i] = m
+        ends0[i] = m + durs[i]
+    core_idx = tuple(i for i in range(n) if timed[i] == _OP_CORE)
+    groups = tuple(
+        (members[0],
+         next(m for m in members if prog.releases_slot[m]))
+        for members in prog.bgroup_members)
+    anc = [0] * n                   # index order is topological
+    for i in range(n):
+        a = 0
+        for p in pred[i]:
+            a |= anc[p] | (1 << p)
+        anc[i] = a
+    w_cpu = _hold_width([(ready0[i], ends0[i], i, i) for i in core_idx],
+                        anc)
+    w_be = _hold_width([(ready0[h], ends0[r], h, r) for h, r in groups],
+                       anc)
+    # ---- compiled solo replay: the per-arrival DAG walk unrolled to
+    # straight-line code with durations constant-folded (repr() is an
+    # exact float round-trip), performing the *same IEEE adds and
+    # maxes* as the interpreted loop — bit-parity is preserved while
+    # the per-invocation cost drops to one small function call.
+    src = ["def _solo(t0):"]
+    for i in range(n):
+        ps = pred[i]
+        if not ps:
+            src.append(f"    r{i} = t0")
+        else:
+            src.append(f"    r{i} = e{ps[0]}")
+            for p in ps[1:]:
+                src.append(f"    if e{p} > r{i}: r{i} = e{p}")
+        src.append(f"    e{i} = r{i} + {durs[i]!r}")
+    src.append("    m = e0")
+    for i in range(1, n):
+        src.append(f"    if e{i} > m: m = e{i}")
+    src.append("    return ("
+               + "".join(f"r{i}, " for i in range(n)) + "), ("
+               + "".join(f"e{i}, " for i in range(n)) + "), m")
+    ns: dict = {}
+    exec("\n".join(src), ns)            # noqa: S102 - self-generated
+    core_sum = 0.0                      # prepaid busy integral for a
+    for i in core_idx:                  # run fully inside the horizon
+        core_sum += durs[i]             # (same add order as the clip
+    ct = (pred, durs, core_idx, w_cpu, w_be,    # loop)
+          prog.release_idx, prog.respond_idx, n, groups,
+          tuple(t == _OP_CORE for t in timed),
+          ns["_solo"], core_sum)
+    tmpl = (tuple(1 if i in roots else d
+                  for i, d in enumerate(prog.indegree)),
+            len(prog.names), durs,
+            tuple(tuple(code[s] for s in succs)
+                  for succs in prog.succ)
+            + (tuple(code[r] for r in prog.roots),),
+            ops, tuple(timed),
+            tuple(code[r] for r in prog.roots),
+            tuple(code), tuple(intra), ct)
+    return (prog, tmpl)
+
+
+#: selectable DES engines (see README "Engines"):
+#: * ``legacy``   — pre-refactor PhasePlan walker (parity reference);
+#: * ``classic``  — PR-3 fused PlanProgram loop, every phase an event;
+#: * ``hot``      — classic + cohort compression (default);
+#: * ``calendar`` — hot's semantics on a CalendarQueue scheduler.
+ENGINES = ("hot", "classic", "calendar", "legacy")
+_ENGINE_ALIASES = {"program": "classic"}
+
+
 class DensitySimulator:
     """One run: `n_functions` deployed on a cluster for `duration_s`."""
 
@@ -453,12 +904,21 @@ class DensitySimulator:
                  rate_sigma: float = 1.0, max_vms_per_node: int = 280,
                  suite: dict[str, W.Workload] | None = None,
                  arrival_pattern: str | W.ArrivalPattern = "azure",
-                 engine: str = "program",
+                 engine: str = "hot",
                  faults: "FA.FaultSchedule | None" = None):
-        if engine not in ("program", "legacy"):
+        # "program" is the PR-3 name of the uncompressed PlanProgram
+        # engine, kept as an alias so existing callers measure exactly
+        # what they always measured.
+        engine = _ENGINE_ALIASES.get(engine, engine)
+        if engine not in ENGINES:
             raise ValueError(f"unknown engine {engine!r}")
         self.spec: SystemSpec = SYSTEMS[system]
         self.engine = engine
+        #: cohort compression on (hot/calendar): uncontended invocations
+        #: collapse to 1-2 barrier events via the solo-schedule replay
+        self._compress = engine in ("hot", "calendar")
+        self.compressed_invocations = 0
+        self.materializations = 0
         #: FaultPlane: a schedule routes every invocation through the
         #: faulted PlanProgram interpreter (both engines — the event
         #: discipline mirrors `_start`/`_hot` exactly, so an *empty*
@@ -477,6 +937,8 @@ class DensitySimulator:
         self.duration_s = duration_s
         self.warmup_s = warmup_s
         self.loop = EventLoop(classic=(engine == "legacy"))
+        if engine == "calendar":
+            self.loop.cal = CalendarQueue()
         #: events after this instant can never run (`run` drains up to
         #: it); the program engine skips scheduling beyond it
         self._horizon = _INF
@@ -549,54 +1011,28 @@ class DensitySimulator:
 
     def _program(self, base_name: str, cold: bool):
         """(PlanProgram, run-record template) for one workload — the
-        program engine's whole structural + cost input, memoized. The
-        template is the invariant prefix of the flat run record (the
-        ``_R_*`` layout): (indegree, virtual_root_idx, durs, succ+,
-        on_core, acquires_slot, releases_slot+, release_idx,
-        respond_idx, roots). The successor/slot arrays carry one extra
-        *virtual* phase whose successors are the roots: an arrival
-        "completes" it, so invocation start reuses the hot block's
-        successor machinery verbatim."""
+        program engine's whole structural + cost input. Two-level
+        cache: a per-sim dict in front of the process-wide
+        `_BUNDLES` table keyed on (variant, workload, coldness,
+        kernel-bypass) — a density search builds each template exactly
+        once across all its probes instead of once per probe
+        (`bundle_cache_stats` reports the hit rate and compile-time
+        share; `benchmarks/sim_throughput.py` prints it)."""
         key = (base_name, cold)
         bundle = self._progs.get(key)
         if bundle is None:
             w = self._suite[base_name]
-            prog = compile_program(
-                self.spec, w.profile, cold=cold,
-                kernel_bypass=self.transport.kernel_bypass)
-            durs = P.duration_vector(self.spec, w, cold)
-            timed = [(_OP_ZERO if d <= 0.0 else
-                      (_OP_CORE if oc else _OP_WIRE))
-                     for d, oc in zip(durs, prog.on_core)]
-            ops = tuple(_OP_SLOT if acq else t
-                        for acq, t in zip(prog.acquires_slot, timed))
-            code = [i
-                    | (_SLOTREL if prog.releases_slot[i] else 0)
-                    | (_RELB if i == prog.release_idx else 0)
-                    | (_RESPB if i == prog.respond_idx else 0)
-                    for i in range(len(prog.names))]
-            roots = set(prog.roots)
-            # FaultPlane extras (trailing slots; the hot path reads
-            # only 0..6): the full static code array, and each phase's
-            # intra-backend-group indegree — what an aborted group's
-            # members reset their countdown to before the re-drive.
-            intra = [0] * len(prog.names)
-            for i, succs in enumerate(prog.succ):
-                gi = prog.bgroup_of[i]
-                if gi >= 0:
-                    for s in succs:
-                        if prog.bgroup_of[s] == gi:
-                            intra[s] += 1
-            tmpl = (tuple(1 if i in roots else d
-                          for i, d in enumerate(prog.indegree)),
-                    len(prog.names), durs,
-                    tuple(tuple(code[s] for s in succs)
-                          for succs in prog.succ)
-                    + (tuple(code[r] for r in prog.roots),),
-                    ops, tuple(timed),
-                    tuple(code[r] for r in prog.roots),
-                    tuple(code), tuple(intra))
-            bundle = (prog, tmpl)
+            gkey = (self.spec.name, w, cold, self.transport.kernel_bypass)
+            bundle = _BUNDLES.get(gkey)
+            if bundle is None:
+                t0 = _perf_counter()
+                bundle = _build_bundle(self.spec, w, cold,
+                                       self.transport.kernel_bypass)
+                _BUNDLE_STATS["compile_s"] += _perf_counter() - t0
+                _BUNDLE_STATS["misses"] += 1
+                _BUNDLES[gkey] = bundle
+            else:
+                _BUNDLE_STATS["hits"] += 1
             self._progs[key] = bundle
         return bundle
 
@@ -670,12 +1106,11 @@ class DensitySimulator:
         inst.expire_seq += 1
         self.idle[inst.fn].append(inst)
         loop = self.loop
-        if self.engine == "program":
+        if self.engine != "legacy":
             t = loop.now + self.KEEPALIVE_S
             if t > self._horizon:
                 return  # unobservable: the loop drains before it fires
-            loop._seq = s = loop._seq + 1
-            self._retq.append((t, s, inst, inst.expire_seq))
+            loop.sched_timer(t, inst, inst.expire_seq)
         else:           # pre-refactor: keep-alive timers in the heap
             loop.after(self.KEEPALIVE_S, self._retire, inst,
                        inst.expire_seq)
@@ -701,7 +1136,7 @@ class DensitySimulator:
     def _execute(self, inst: SimInstance, t_arr: float, cold: bool) -> None:
         if self._faults is not None:
             self._execute_faulted(inst, t_arr, cold)
-        elif self.engine == "program":
+        elif self.engine != "legacy":
             rec = self._fnrec[inst.fn]
             bundle = rec[_F_COLD] if cold else rec[_F_WARM]
             if bundle is None:
@@ -709,6 +1144,18 @@ class DensitySimulator:
                 rec[_F_COLD if cold else _F_WARM] = bundle
             tmpl = bundle[1]
             node = self.nodes[inst.node]
+            if self._compress:
+                ct = tmpl[9]
+                cpu = node.cpu_hot
+                be = node.be_hot
+                if not node.cpu_wait and not node.be_wait \
+                        and cpu[0] + ct[_CT_WC] <= cpu[1] \
+                        and be[0] + ct[_CT_WB] <= be[1]:
+                    # replay base is *now* (service start), not t_arr:
+                    # backlog serves start when the instance frees up
+                    self._form_compressed(inst, t_arr, self.loop.now,
+                                          bundle, node, rec[_F_LATS])
+                    return
             run = [list(tmpl[0]), tmpl[2], tmpl[3], tmpl[4], tmpl[5],
                    node.cpu_hot, node.cpu_wait, node.be_hot, node.be_wait,
                    rec[_F_LATS], inst, t_arr]
@@ -716,6 +1163,161 @@ class DensitySimulator:
                 self._start(run, c)
         else:
             self._execute_legacy(inst, t_arr, cold)
+
+    # -------------------------------------- cohort-compressed fast path
+    #
+    # An uncontended invocation's whole event cascade is determined at
+    # arrival: with its maximum core/slot concurrency reserved up
+    # front, no grant inside the run can ever queue, so its phase
+    # end-times are exactly the solo schedule's —
+    # ``end[i] = max(parent ends, t_arr) + d[i]`` in topological order,
+    # the *same IEEE adds and maxes* the event engine performs (its
+    # `now` at a phase grant IS the max parent end, carried as a float
+    # through the heap). The run collapses to its observable events —
+    # the release and respond barriers — and every internal phase event
+    # is elided. The whole same-timestamp cohort of each arrival is
+    # thereby drained as one batch over the program's predecessor
+    # arrays instead of one heap event per phase.
+    #
+    # Reservations are deliberately conservative (`_hold_width` counts
+    # unrelated boundary-adjacent holds as concurrent): an over-reserved run just
+    # falls back to the scalar path, while under-reserving could let a
+    # compressed run proceed where the event engine would have queued
+    # it. If a scalar grant later finds a pool full while reservations
+    # exist, `_materialize` converts the node's compressed runs back to
+    # event-driven execution at the stored schedule times — contended
+    # cohorts stay event-for-event equal to the scalar engine.
+
+    def _form_compressed(self, inst: SimInstance, t_arr: float, t0: float,
+                         bundle: tuple, node: SimNode, lats: list) -> None:
+        """Admit one invocation to the compressed path: replay the solo
+        schedule from service-start time `t0`, reserve its widths,
+        schedule only its barriers. `t_arr` is kept for latency."""
+        tmpl = bundle[1]
+        ct = tmpl[9]
+        durs = ct[1]
+        ready, ends, emax = ct[_CT_SOLO](t0)
+        hz = self._horizon
+        cpu = node.cpu_hot
+        if emax <= hz:                 # granted core-time, clipped at
+            cpu[2] += ct[_CT_CORESUM]  # the horizon (mirrors _start)
+        else:
+            acc = 0.0
+            for i in ct[2]:
+                e = ends[i]
+                if e <= hz:
+                    acc += durs[i]
+                else:
+                    s0 = ready[i]
+                    if s0 < hz:
+                        acc += hz - s0
+            cpu[2] += acc
+        cpu[0] += ct[3]
+        node.be_hot[0] += ct[4]
+        crun = [inst, t_arr, lats, node, ct[3], ct[4], False,
+                ends, ready, bundle, False]
+        node.cruns.append(crun)
+        self.compressed_invocations += 1
+        loop = self.loop
+        rel, resp = ct[5], ct[6]
+        if rel == resp:
+            if ends[resp] <= hz:
+                loop.sched(ends[resp], crun, _CRUN | _RELB | _RESPB)
+        else:
+            if ends[rel] <= hz:
+                loop.sched(ends[rel], crun, _CRUN | _RELB)
+            if ends[resp] <= hz:
+                loop.sched(ends[resp], crun, _CRUN | _RESPB)
+
+    def _materialize(self, node: SimNode, state: list | None = None) -> None:
+        """Convert compressed runs on `node` back to event-driven
+        execution at their stored schedules, correcting the pool
+        counters from reservations to actual holds. Done phases are
+        dropped, in-flight phases get completion events at their solo
+        end-times (the same floats the scalar engine would carry),
+        future phases get indegree countdowns over their unfinished
+        parents. Called only from a failed scalar grant, with loop
+        state synced.
+
+        With `state` (the pool the grant failed on), conversion is
+        *partial*: oldest runs convert until the pool has room, so one
+        contended grant doesn't forfeit the whole node's compression —
+        which runs stay compressed is free policy, since compressed
+        and scalar timing are identical by construction. If every run
+        converts and the pool is still full, the caller enqueues a
+        waiter — preserving the invariant that waiters only exist on
+        crun-free nodes. Pool corrections for all converted runs land
+        before any barrier fires: a barrier's `_release` can re-enter
+        `_execute`, which must see consistent pools."""
+        loop = self.loop
+        now = loop.now
+        hz = self._horizon
+        cpu = node.cpu_hot
+        be = node.be_hot
+        self.materializations += 1
+        cruns = node.cruns
+        due = []
+        while cruns and (state is None or state[0] >= state[1]):
+            crun = cruns.pop(0)  # oldest first; re-entrant formations
+                                 # append behind and survive
+            crun[_C_DEAD] = True
+            prog, tmpl = crun[_C_BND]
+            ct = tmpl[9]
+            pred = ct[0]
+            durs = ct[1]
+            oncore = ct[9]
+            codes = tmpl[7]
+            ends = crun[_C_ENDS]
+            ready = crun[_C_READY]
+            n = ct[7]
+            need = [0] * n
+            run = [need, tmpl[2], tmpl[3], tmpl[4], tmpl[5],
+                   cpu, node.cpu_wait, be, node.be_wait,
+                   crun[_C_LATS], crun[_C_INST], crun[_C_T]]
+            cores_held = 0
+            for i in range(n):
+                e = ends[i]
+                if e <= now:                # done
+                    continue
+                if ready[i] <= now:         # in-flight: real event now
+                    if oncore[i]:
+                        cores_held += 1
+                        loop.sched(e, run, codes[i] | _CORE)
+                    else:
+                        loop.sched(e, run, codes[i])
+                else:                       # future: countdown resumes
+                    c = 0
+                    for p in pred[i]:
+                        if ends[p] > now:
+                            c += 1
+                    need[i] = c
+                    if oncore[i]:           # roll back the prepaid
+                        if e <= hz:         # integral (re-added at its
+                            cpu[2] -= durs[i]   # real grant)
+                        elif ready[i] < hz:
+                            cpu[2] -= hz - ready[i]
+            slots_held = 0
+            for h, r in ct[8]:
+                if ready[h] <= now < ends[r]:
+                    slots_held += 1
+            cpu[0] += cores_held - crun[_C_WC]
+            be[0] += slots_held - crun[_C_WB]
+            due.append(crun)
+        for crun in due:
+            # a barrier due exactly `now` may still sit in the queue
+            # behind the triggering event — its record is dead, so it
+            # fires here (a strictly-earlier barrier already fired)
+            prog, tmpl = crun[_C_BND]
+            ct = tmpl[9]
+            ends = crun[_C_ENDS]
+            if not crun[_C_RELDONE] and ends[ct[5]] <= now:
+                crun[_C_RELDONE] = True
+                self._release(crun[_C_INST])
+            if ends[ct[6]] <= now:
+                t0 = crun[_C_T]
+                if t0 >= self.warmup_s:
+                    crun[_C_LATS].append(now - t0)
+                self.completed += 1
 
     # ------------------------------------------- PlanProgram engine (hot)
     #
@@ -743,31 +1345,30 @@ class DensitySimulator:
         if op == _OP_CORE:
             # guest vCPU and backend work contend on node cores
             state = run[_R_CPU]
+            if state[0] >= state[1] and state[3].cruns:
+                self._materialize(state[3], state)
             if state[0] < state[1]:
                 state[0] += 1
                 d = run[_R_DURS][code & _PI_MASK]
                 end = now + d
                 hz = self._horizon
                 state[2] += d if end <= hz else hz - now
-                loop._seq = s = loop._seq + 1
-                heappush(loop._q, (end, s, run, code | _CORE))
+                loop.sched(end, run, code | _CORE)
             else:
                 run[_R_CPUW].append((run, code))
         elif op == _OP_WIRE:               # pure latency
-            loop._seq = s = loop._seq + 1
-            heappush(loop._q,
-                     (now + run[_R_DURS][code & _PI_MASK], s, run, code))
+            loop.sched(now + run[_R_DURS][code & _PI_MASK], run, code)
         elif op == _OP_SLOT:               # backend-group head
             state = run[_R_BE]
+            if state[0] >= state[1] and state[3].cruns:
+                self._materialize(state[3], state)
             if state[0] < state[1]:
                 state[0] += 1
-                loop._seq = s = loop._seq + 1
-                loop._pending.append((s, run, code | _EXEC))
+                loop.sched0(run, code | _EXEC)
             else:
                 run[_R_BEW].append((run, code))
         else:                              # zero duration
-            loop._seq = s = loop._seq + 1
-            loop._pending.append((s, run, code))
+            loop.sched0(run, code)
 
     def _hot(self, run: list, code: int) -> None:
         """Dispatch one hot event record — the whole per-phase state
@@ -778,28 +1379,45 @@ class DensitySimulator:
         same machine; the engine-parity test pins the two."""
         loop = self.loop
         now = loop.now
+        if code & _CRUN:                   # compressed-run barrier event
+            if not run[_C_DEAD]:           # (`run` is a crun record)
+                if code & _RELB:
+                    run[_C_RELDONE] = True
+                    self._release(run[_C_INST])
+                # re-check dead: `_release` can re-enter `_materialize`,
+                # which may convert THIS crun and fire its due respond
+                # barrier itself
+                if code & _RESPB and not run[_C_DEAD]:
+                    t_arr = run[_C_T]
+                    if t_arr >= self.warmup_s:
+                        run[_C_LATS].append(now - t_arr)
+                    self.completed += 1
+                    node = run[_C_NODE]
+                    node.cpu_hot[0] -= run[_C_WC]
+                    node.be_hot[0] -= run[_C_WB]
+                    run[_C_DEAD] = True
+                    node.cruns.remove(run)
+            return
         pi = code & _PI_MASK
         if code & _EXEC:
             op = run[_R_OPS2][pi]
             if op == _OP_CORE:
                 state = run[_R_CPU]
+                if state[0] >= state[1] and state[3].cruns:
+                    self._materialize(state[3], state)
                 if state[0] < state[1]:
                     state[0] += 1
                     d = run[_R_DURS][pi]
                     end = now + d
                     hz = self._horizon
                     state[2] += d if end <= hz else hz - now
-                    loop._seq = s = loop._seq + 1
-                    heappush(loop._q, (end, s, run, (code ^ _EXEC) | _CORE))
+                    loop.sched(end, run, (code ^ _EXEC) | _CORE)
                 else:
                     run[_R_CPUW].append((run, code ^ _EXEC))
             elif op == _OP_WIRE:
-                loop._seq = s = loop._seq + 1
-                heappush(loop._q,
-                         (now + run[_R_DURS][pi], s, run, code ^ _EXEC))
+                loop.sched(now + run[_R_DURS][pi], run, code ^ _EXEC)
             else:                          # zero duration
-                loop._seq = s = loop._seq + 1
-                loop._pending.append((s, run, code ^ _EXEC))
+                loop.sched0(run, code ^ _EXEC)
             return
         if code & _CORE:
             state = run[_R_CPU]
@@ -812,8 +1430,7 @@ class DensitySimulator:
                 end = now + d
                 hz = self._horizon
                 state[2] += d if end <= hz else hz - now
-                loop._seq = s = loop._seq + 1
-                heappush(loop._q, (end, s, run2, c2 | _CORE))
+                loop.sched(end, run2, c2 | _CORE)
         # ---------------------------------------------------- phase done
         if code & _SLOTREL:
             state = run[_R_BE]
@@ -822,8 +1439,7 @@ class DensitySimulator:
             if wait:
                 state[0] += 1
                 run2, c2 = wait.popleft()
-                loop._seq = s = loop._seq + 1
-                loop._pending.append((s, run2, c2 | _EXEC))
+                loop.sched0(run2, c2 | _EXEC)
         if code & _RELB:
             self._release(run[_R_INST])
         if code & _RESPB:
@@ -874,6 +1490,11 @@ class DensitySimulator:
         warmup = self.warmup_s
         keepalive = self.KEEPALIVE_S
         hz = self._horizon
+        compress = self._compress
+        crr = _CRUN | _RELB | _RESPB
+        crel = _CRUN | _RELB
+        cresp = _CRUN | _RESPB
+        ncomp = 0
         completed = 0
         run = None
         while True:
@@ -889,6 +1510,7 @@ class DensitySimulator:
                     loop._seq, loop.now = seq, now
                     self._arrive(fn)
                     seq = loop._seq
+                    t_r = retq[0][0] if retq else inf
                     continue
                 # smallest seq among same-time candidates wins
                 win = pending[0][0]
@@ -907,6 +1529,7 @@ class DensitySimulator:
                         loop._seq, loop.now = seq, now
                         e[2](e[3], e[4])
                         seq = loop._seq
+                        t_r = retq[0][0] if retq else inf
                         continue
                 elif src == 2:
                     e = retq.popleft()
@@ -921,6 +1544,7 @@ class DensitySimulator:
                         loop._seq, loop.now = seq, now
                         e[1](e[2], e[3])
                         seq = loop._seq
+                        t_r = retq[0][0] if retq else inf
                         continue
             else:
                 t_q = q[0][0] if q else inf
@@ -952,6 +1576,52 @@ class DensitySimulator:
                             bundle = rec[3] = self._program(rec[5], True)
                     tmpl = bundle[1]
                     node = nodes[inst.node]
+                    if compress:           # cohort-compressed fast path
+                        # (inlined `_form_compressed` — kept in
+                        # lockstep, like the `_start`/`_hot` blocks)
+                        ct = tmpl[9]
+                        cstate = node.cpu_hot
+                        bstate = node.be_hot
+                        if not node.cpu_wait and not node.be_wait \
+                                and cstate[0] + ct[3] <= cstate[1] \
+                                and bstate[0] + ct[4] <= bstate[1]:
+                            ready, ends, emax = ct[10](now)
+                            if emax <= hz:
+                                cstate[2] += ct[11]
+                            else:
+                                acc = 0.0
+                                cds = ct[1]
+                                for i in ct[2]:
+                                    e = ends[i]
+                                    if e <= hz:
+                                        acc += cds[i]
+                                    else:
+                                        s0 = ready[i]
+                                        if s0 < hz:
+                                            acc += hz - s0
+                                cstate[2] += acc
+                            cstate[0] += ct[3]
+                            bstate[0] += ct[4]
+                            crun = [inst, now, rec[4], node, ct[3],
+                                    ct[4], False, ends, ready, bundle,
+                                    False]
+                            node.cruns.append(crun)
+                            ncomp += 1
+                            rel, resp = ct[5], ct[6]
+                            e_resp = ends[resp]
+                            if rel == resp:
+                                if e_resp <= hz:
+                                    seq += 1
+                                    push(q, (e_resp, seq, crun, crr))
+                            else:
+                                e_rel = ends[rel]
+                                if e_rel <= hz:
+                                    seq += 1
+                                    push(q, (e_rel, seq, crun, crel))
+                                if e_resp <= hz:
+                                    seq += 1
+                                    push(q, (e_resp, seq, crun, cresp))
+                            continue
                     run = [list(tmpl[0]), tmpl[2], tmpl[3], tmpl[4],
                            tmpl[5], node.cpu_hot, node.cpu_wait,
                            node.be_hot, node.be_wait, rec[4], inst, now]
@@ -969,6 +1639,7 @@ class DensitySimulator:
                         loop._seq, loop.now = seq, now
                         e[2](e[3], e[4])
                         seq = loop._seq
+                        t_r = retq[0][0] if retq else inf
                         continue
                 else:
                     if t_r > until:
@@ -989,11 +1660,54 @@ class DensitySimulator:
 
             # ----- hot block: one phase event (kept in lockstep with
             # `_start`/`_hot`); run + code = phase index | flag bits
+            if code & _CRUN:               # compressed-run barrier event
+                if not run[6]:             # (`run` is a crun record)
+                    if code & _RELB:
+                        run[10] = True
+                        inst = run[0]
+                        rec = fnrec[inst.fn]
+                        bl = rec[1]
+                        if bl:
+                            t_arr = bl.popleft()
+                            loop._seq, loop.now = seq, now
+                            self._execute(inst, t_arr, False)
+                            seq = loop._seq
+                            t_r = retq[0][0] if retq else inf
+                        else:
+                            inst.state = "warm"
+                            inst.expire_seq += 1
+                            rec[0].append(inst)
+                            t_ret = now + keepalive
+                            if t_ret <= hz:
+                                seq += 1
+                                if not retq:
+                                    t_r = t_ret
+                                retq.append((t_ret, seq, inst,
+                                             inst.expire_seq))
+                    # re-check dead: serving the backlog can re-enter
+                    # `_materialize`, which may convert THIS crun and
+                    # fire its due respond barrier itself
+                    if code & _RESPB and not run[6]:
+                        t_arr = run[1]
+                        if t_arr >= warmup:
+                            run[2].append(now - t_arr)
+                        completed += 1
+                        node = run[3]
+                        node.cpu_hot[0] -= run[4]
+                        node.be_hot[0] -= run[5]
+                        run[6] = True
+                        node.cruns.remove(run)
+                continue
             pi = code & _PI_MASK
             if code & _EXEC:               # backend slot granted
                 op = run[4][pi]
                 if op == 2:                # _OP_CORE
                     state = run[5]
+                    if state[0] >= state[1] and state[3].cruns:
+                        loop._seq, loop.now = seq, now
+                        self._materialize(state[3], state)
+                        seq = loop._seq
+                        t_r = retq[0][0] if retq else inf
                     if state[0] < state[1]:
                         state[0] += 1
                         d = run[1][pi]
@@ -1041,6 +1755,7 @@ class DensitySimulator:
                     loop._seq, loop.now = seq, now
                     self._execute(inst, t_arr, False)
                     seq = loop._seq
+                    t_r = retq[0][0] if retq else inf
                 else:
                     inst.state = "warm"
                     inst.expire_seq += 1
@@ -1065,6 +1780,11 @@ class DensitySimulator:
                     op = run[3][si]
                     if op == 2:            # _OP_CORE
                         state = run[5]
+                        if state[0] >= state[1] and state[3].cruns:
+                            loop._seq, loop.now = seq, now
+                            self._materialize(state[3], state)
+                            seq = loop._seq
+                            t_r = retq[0][0] if retq else inf
                         if state[0] < state[1]:
                             state[0] += 1
                             d = run[1][si]
@@ -1079,6 +1799,11 @@ class DensitySimulator:
                         push(q, (now + run[1][si], seq, run, sc))
                     elif op == 0:          # _OP_SLOT: backend-group head
                         state = run[7]
+                        if state[0] >= state[1] and state[3].cruns:
+                            loop._seq, loop.now = seq, now
+                            self._materialize(state[3], state)
+                            seq = loop._seq
+                            t_r = retq[0][0] if retq else inf
                         if state[0] < state[1]:
                             state[0] += 1
                             seq += 1
@@ -1089,6 +1814,7 @@ class DensitySimulator:
                         seq += 1
                         pending.append((seq, run, sc))
         self.completed += completed
+        self.compressed_invocations += ncomp
         loop._seq = seq
         loop._fi = fi
         loop.now = until
@@ -1532,15 +2258,12 @@ class DensitySimulator:
     def run(self) -> SimResult:
         until = self.duration_s + 30.0          # drain tail
         faulted = self._faults is not None
-        if self.engine == "program":
+        if self.engine != "legacy":
             # batched arrivals: one time-sorted stream, fed to the loop
-            # outside the heap (stable sort keeps the per-function
+            # outside the heap (stable merge keeps the per-function
             # scheduling order on exact time ties, like the heap did)
             self._horizon = until
-            stream = [(t, fn) for fn, times in self.arrivals.items()
-                      for t in times]
-            stream.sort(key=lambda e: e[0])
-            self.loop.feed(stream, self._arrive)
+            self.loop.feed(merge_streams(self.arrivals), self._arrive)
         else:                              # pre-refactor path: heap-load
             if faulted:
                 self._horizon = until
@@ -1562,15 +2285,17 @@ class DensitySimulator:
             if self.loop.now < self.duration_s - 1.0:
                 self.loop.after(1.0, sample)
         self.loop.after(self.warmup_s, sample)
-        if faulted or self.engine != "program":
-            # the faulted interpreter is event-driven on both engines;
-            # only fault-free program runs take the fused loop
+        if faulted or self.engine in ("legacy", "calendar"):
+            # the faulted interpreter is event-driven on every engine,
+            # and the calendar engine exercises the method-dispatch
+            # loop (`EventLoop._run_cal`); only fault-free classic/hot
+            # runs take the fused loop
             self.loop.run(until)
         else:
             self._run_hot(until)
 
         horizon = self.duration_s + 30.0
-        if self.engine == "program" or faulted:
+        if self.engine != "legacy" or faulted:
             # granted core-time clipped at the horizon (see `_start`)
             cpu_busy = sum(n.cpu_hot[2] for n in self.nodes)
         else:
@@ -1594,13 +2319,22 @@ class DensitySimulator:
 
 def find_density(system: str, *, lo: int = 20, hi: int = 800,
                  step: int = 20, slo: float = 5.0, seed: int = 0,
-                 refine_to: int = 1, **kw) -> tuple[int, list[SimResult]]:
+                 refine_to: int = 1, fast: bool = False,
+                 **kw) -> tuple[int, list[SimResult]]:
     """Max deployed-function count meeting the SLO, plus every probe.
 
     Coarse upward sweep in `step` increments until the first SLO
     failure, then binary search between the last pass and the first
     fail down to `refine_to` granularity — the reported density is no
     longer quantized to `step`.
+
+    With ``fast=True`` the fluid model (`repro.core.fluid`) predicts
+    the failing grid point, and the exact engine only walks from there
+    to the true pass/fail boundary before running the identical binary
+    refinement. The returned density equals the exact search's
+    whenever pass/fail is monotone along the grid — the assumption the
+    coarse sweep itself rests on — while running ~5x fewer exact
+    probes (``len(results)`` counts them).
     """
     results: list[SimResult] = []
 
@@ -1611,14 +2345,40 @@ def find_density(system: str, *, lo: int = 20, hi: int = 800,
 
     best = 0
     first_fail = None
-    n = lo
-    while n <= hi:
-        if probe(n).meets_slo(slo):
-            best = n
-            n += step
+    if fast:
+        from repro.core.fluid import fluid_first_fail
+        est = fluid_first_fail(system, lo=lo, hi=hi, step=step,
+                               slo=slo, seed=seed, **kw)
+        last = lo + ((hi - lo) // step) * step
+        g = min(max(est if est is not None else last, lo), last)
+        if probe(g).meets_slo(slo):
+            best = g
+            n = g + step           # walk up to the first failure
+            while n <= hi:
+                if probe(n).meets_slo(slo):
+                    best = n
+                    n += step
+                else:
+                    first_fail = n
+                    break
         else:
-            first_fail = n
-            break
+            first_fail = g
+            n = g - step           # walk down to the last pass
+            while n >= lo:
+                if probe(n).meets_slo(slo):
+                    best = n
+                    break
+                first_fail = n
+                n -= step
+    else:
+        n = lo
+        while n <= hi:
+            if probe(n).meets_slo(slo):
+                best = n
+                n += step
+            else:
+                first_fail = n
+                break
 
     if first_fail is not None:
         lo_b, hi_b = best, first_fail

@@ -460,6 +460,14 @@ class PlanProgram:
     names: tuple[str, ...]
     on_core: tuple[bool, ...]
     succ: tuple[tuple[int, ...], ...]
+    #: cohort-friendly layout (the vectorized hot path consumes these):
+    #: predecessors per phase, plus the successor lists flattened to a
+    #: CSR pair — ``succ_flat[succ_off[i]:succ_off[i+1]]`` — so a batch
+    #: of same-instant completions walks one flat integer array instead
+    #: of nested tuples.
+    pred: tuple[tuple[int, ...], ...]
+    succ_flat: tuple[int, ...]
+    succ_off: tuple[int, ...]
     indegree: tuple[int, ...]
     roots: tuple[int, ...]
     acquires_slot: tuple[bool, ...]
@@ -527,12 +535,22 @@ def lower_program(plan: PhasePlan, kernel_bypass: bool = False) -> PlanProgram:
     bgroup_head = tuple(bgroup_members[o][0] if o >= 0 else -1
                         for o in bgroup_of)
 
+    succ = tuple(tuple(idx[s] for s in plan.successors(n)) for n in names)
+    succ_off: list[int] = [0]
+    succ_flat: list[int] = []
+    for row in succ:
+        succ_flat.extend(row)
+        succ_off.append(len(succ_flat))
+
     return PlanProgram(
         plan=plan, kernel_bypass=kernel_bypass,
         names=names,
         on_core=tuple(p.resource in (GUEST_CORE, BACKEND_WORKER)
                       for p in plan.phases),
-        succ=tuple(tuple(idx[s] for s in plan.successors(n)) for n in names),
+        succ=succ,
+        pred=tuple(tuple(idx[d] for d in p.after) for p in plan.phases),
+        succ_flat=tuple(succ_flat),
+        succ_off=tuple(succ_off),
         indegree=tuple(len(p.after) for p in plan.phases),
         roots=tuple(i for i, p in enumerate(plan.phases) if not p.after),
         acquires_slot=tuple(n in heads for n in names),

@@ -120,6 +120,44 @@ def _diurnal_arrivals(rng: random.Random, mean_rate: float,
             out.append(t)
 
 
+def merge_streams(arrivals: dict[str, list[float]]
+                  ) -> list[tuple[float, str]]:
+    """Merge per-function arrival lists into one time-sorted stream.
+
+    Equivalent to concatenating ``(t, fn)`` pairs in dict order and
+    stable-sorting on time — exact-time ties across functions keep
+    dict-insertion order, which is the tie rule every engine's arrival
+    feed depends on.  The sort runs as a numpy stable argsort over one
+    flat float64 vector; ``.tolist()`` converts back at the boundary so
+    callers keep pure Python floats (np.float64 scalars would poison
+    downstream arithmetic performance).
+    """
+    import numpy as np
+
+    names: list[str] = []
+    lists: list[list[float]] = []
+    total = 0
+    for fn, times in arrivals.items():
+        if times:
+            names.append(fn)
+            lists.append(times)
+            total += len(times)
+    if not total:
+        return []
+    flat = np.empty(total, dtype=np.float64)
+    owner = np.empty(total, dtype=np.intp)
+    off = 0
+    for i, times in enumerate(lists):
+        end = off + len(times)
+        flat[off:end] = times
+        owner[off:end] = i
+        off = end
+    order = np.argsort(flat, kind="stable")
+    ts = flat[order].tolist()
+    fns = owner[order].tolist()
+    return [(t, names[i]) for t, i in zip(ts, fns)]
+
+
 def interarrival_cv(arrivals: list[float]) -> float:
     """Coefficient of variation of inter-arrivals (burstiness check)."""
     if len(arrivals) < 3:

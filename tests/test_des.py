@@ -6,9 +6,13 @@ equivalence*: the flat PlanProgram interpreter must reproduce the
 pre-refactor PhasePlan-walking DES bit-for-bit. Three layers pin it:
 
 * stored goldens (`tests/goldens/des_parity.json`), captured from the
-  pre-refactor walker at fixed configs — both the preserved
-  ``engine="legacy"`` reference and the default program engine must
-  reproduce every latency stream exactly (sha256 over float hex);
+  pre-refactor walker at fixed configs — the preserved
+  ``engine="legacy"`` reference and every optimized engine
+  (``classic``: the fused PlanProgram loop; ``hot``: classic plus
+  compressed solo-schedule cohorts; ``calendar``: hot semantics on a
+  calendar-queue scheduler) must reproduce every latency stream
+  exactly (sha256 over float hex) — full-contention n=400 included,
+  where the hot engine's materialization path fires constantly;
 * a direct legacy-vs-program comparison on a config outside the golden
   set;
 * the program engine's two dispatch paths (the fused `_run_hot` loop
@@ -32,6 +36,7 @@ from repro.core.des import DensitySimulator, find_density
 from repro.core.faults import FaultSchedule, FaultSpec
 from repro.core.plan import SYSTEMS, compile_plan, phase_durations
 from repro.core.trace import ArrivalSpec, generate_arrivals, interarrival_cv
+from tests._hypothesis_compat import HealthCheck, given, settings, st
 
 GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "goldens",
                            "des_parity.json")
@@ -55,6 +60,9 @@ GOLDEN_CONFIGS = {
                  "nexus-sdk-only", "nexus-prefetch-only", "wasm")},
     "nexus/n400/seed1": dict(system="nexus", n=400, seed=1,
                              duration_s=30.0, warmup_s=5.0),
+    # heavily contended: compression forms and materializes constantly
+    "baseline/n400/seed1": dict(system="baseline", n=400, seed=1,
+                                duration_s=30.0, warmup_s=5.0),
     "nexus-async/registry/n160/seed5": dict(
         system="nexus-async", n=160, seed=5, duration_s=20.0,
         warmup_s=4.0, suite="REGISTRY"),
@@ -98,14 +106,24 @@ with open(GOLDEN_PATH) as _f:
 
 
 class TestParityGoldens:
+    @pytest.mark.parametrize("engine", ["classic", "hot", "calendar"])
     @pytest.mark.parametrize("key", [k for k in GOLDEN_CONFIGS
                                      if k not in FAULTED_KEYS])
-    def test_program_engine_reproduces_prerefactor_latencies(self, key):
-        """The compiled-program DES reproduces the pre-refactor
-        latencies bit-for-bit — full-contention n=400 and the
-        multi-I/O registry mix included."""
-        sim = _build(key, "program")
-        assert _digest(sim.run(), sim) == GOLDEN[key], key
+    def test_optimized_engines_reproduce_prerefactor_latencies(
+            self, key, engine):
+        """Every optimized engine reproduces the pre-refactor latencies
+        bit-for-bit — the full-contention n=400 configs (where the hot
+        engine's cohort compression forms and materializes constantly)
+        and the multi-I/O registry mix included."""
+        sim = _build(key, engine)
+        assert _digest(sim.run(), sim) == GOLDEN[key], (key, engine)
+
+    def test_program_alias_is_classic(self):
+        """The historical ``engine="program"`` spelling keeps working
+        and means the classic fused-loop engine."""
+        sim = _build("nexus/n120/seed3", "program")
+        assert sim.engine == "classic"
+        assert _digest(sim.run(), sim) == GOLDEN["nexus/n120/seed3"]
 
     @pytest.mark.parametrize("key", ["baseline/n120/seed3",
                                      "nexus/n120/seed3"])
@@ -115,15 +133,29 @@ class TestParityGoldens:
         sim = _build(key, "legacy")
         assert _digest(sim.run(), sim) == GOLDEN[key], key
 
-    @pytest.mark.parametrize("engine", ["program", "legacy"])
+    @pytest.mark.parametrize("engine", ["legacy", "classic", "hot",
+                                        "calendar"])
     @pytest.mark.parametrize("key", FAULTED_KEYS)
-    def test_faulted_goldens_pin_both_engines(self, key, engine):
+    def test_faulted_goldens_pin_every_engine(self, key, engine):
         """Fixed seed + fixed FaultSchedule: injected crashes and the
         recovery they force (offloaded: group aborts + re-drives;
         baseline: whole-invocation kills) are pinned bit-for-bit under
-        BOTH DES engine modes."""
+        EVERY DES engine mode."""
         sim = _build(key, engine)
         assert _digest(sim.run(), sim) == GOLDEN[key], (key, engine)
+
+    def test_empty_fault_schedule_reproduces_hot_engine(self):
+        """A FaultSchedule with no faults routes through the faulted
+        interpreter yet reproduces the vectorized hot engine
+        bit-for-bit — the `_execute_faulted` discipline has not
+        drifted from `_start`/`_hot` (ISSUE 6 satellite)."""
+        from repro.core.faults import FaultSchedule
+        kw = dict(seed=1, duration_s=20.0, warmup_s=4.0)
+        hot = DensitySimulator("nexus", 160, engine="hot", **kw)
+        dig_hot = _digest(hot.run(), hot)
+        faulted = DensitySimulator("nexus", 160, engine="hot",
+                                   faults=FaultSchedule(()), **kw)
+        assert _digest(faulted.run(), faulted) == dig_hot
 
 
 class TestEngineEquivalence:
@@ -367,3 +399,43 @@ class TestFindDensityRefinement:
         assert fails and best < min(fails)
         assert any(r.n_functions == best and r.meets_slo()
                    for r in results)
+
+
+# ------------------------------------------- fluid-bracketed fast path
+
+class TestFluidFastPath:
+    """`find_density(fast=True)`: the fluid mean-value model predicts
+    the failing grid point, the exact engine walks from there to the
+    true pass/fail boundary, and the refinement code is shared — so
+    the returned density must EQUAL the exact search's whenever
+    pass/fail is monotone along the grid (the assumption the exact
+    coarse sweep itself rests on)."""
+
+    #: tiny overloaded cluster: each probe is cheap, the SLO boundary
+    #: sits well inside the grid
+    KW = dict(duration_s=8.0, warmup_s=2.0, nodes=1, cores=4,
+              mem_gb=4.0, backend_workers=8, max_vms_per_node=64,
+              mean_rate=2.5)
+
+    def _both(self, system, seed):
+        exact = find_density(system, lo=4, hi=120, step=24, seed=seed,
+                             refine_to=1, **self.KW)
+        fast = find_density(system, lo=4, hi=120, step=24, seed=seed,
+                            refine_to=1, fast=True, **self.KW)
+        return exact, fast
+
+    def test_fast_matches_exact_on_real_cluster(self):
+        (d_exact, r_exact), (d_fast, r_fast) = self._both("nexus", 2)
+        assert d_fast == d_exact
+        # the bracket may land a step or two off on this tiny cluster;
+        # it must never degenerate into a full re-sweep
+        assert len(r_fast) <= len(r_exact) + 2
+
+    @settings(max_examples=6, deadline=None, derandomize=True,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(st.sampled_from(sorted(SYSTEMS)), st.integers(0, 30))
+    def test_fluid_bracketed_equals_exact(self, system, seed):
+        """Property: fluid-bracketed search equals the exact search
+        over random (variant, seed) draws."""
+        (d_exact, _), (d_fast, _) = self._both(system, seed)
+        assert d_fast == d_exact, (system, seed)
