@@ -6,9 +6,8 @@ working-set page counts implied by each system's snapshot footprint.
 """
 from __future__ import annotations
 
-from repro.core import fabric as F
-from repro.core.runtime import SYSTEMS, WorkerNode
-from repro.core.workloads import NAMES, SUITE
+from repro.core.runtime import WorkerNode
+from repro.core.workloads import NAMES
 
 from benchmarks.common import pct, save_json, table
 

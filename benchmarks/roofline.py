@@ -25,7 +25,7 @@ from repro.configs import registry
 from repro.configs.base import SHAPES
 
 from benchmarks.common import RESULTS_DIR, save_json, table
-from benchmarks.model_flops import hbm_bytes_ideal, model_flops
+from benchmarks.model_flops import model_flops
 
 PEAK_FLOPS = 197e12          # bf16 per chip
 HBM_BW = 819e9               # bytes/s per chip

@@ -13,7 +13,7 @@ protocol. Reports:
 from __future__ import annotations
 
 from repro.core import metrics as M
-from repro.core.runtime import SYSTEMS, WorkerNode
+from repro.core.runtime import WorkerNode
 from repro.core.workloads import NAMES, SCENARIO_NAMES
 
 from benchmarks.common import pct, save_json, table

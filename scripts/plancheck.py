@@ -1,0 +1,27 @@
+#!/usr/bin/env python
+"""PlanCheck CLI (ISSUE 7): the exhaustive static-analysis matrix.
+
+Thin launcher over ``repro.core.analysis.driver`` — infers and matches
+every registered handler's IOProfile (ProfileInfer), then verifies
+every compiled plan/program over the full variant × workload ×
+coldness matrix under both kernel-bypass lowerings (PlanVerify). CI's
+``static-analysis`` job runs this next to ruff/mypy; it is also the
+quickest local answer to "did my plan-compiler change break a
+structural invariant some behavioral test doesn't happen to walk".
+
+Usage:
+    python scripts/plancheck.py --all        # the full matrix (CI)
+    python scripts/plancheck.py              # same; --all is the default
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+from repro.core.analysis.driver import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main())

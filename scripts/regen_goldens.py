@@ -42,6 +42,39 @@ def regenerate() -> dict:
     return out
 
 
+def verify_golden_plans() -> int:
+    """PlanVerify over every plan/program behind the golden configs
+    (ISSUE 7 satellite): golden drift and *structural* drift gate
+    together. Each (variant, workload, coldness) cell a golden run can
+    compile is verified — under the variant's native kernel-bypass
+    lowering, against its aligned duration vector. Returns the cell
+    count; raises `PlanCheckError` on the first violation."""
+    import test_des as T
+    from repro.core import workloads as W
+    from repro.core.analysis.verify import verify_program
+    from repro.core.plan import SYSTEMS, compile_program, duration_vector
+    from repro.core.transport import TRANSPORTS
+
+    seen = set()
+    for cfg in T.GOLDEN_CONFIGS.values():
+        spec = SYSTEMS[cfg["system"]]
+        suite = W.REGISTRY if cfg.get("suite") == "REGISTRY" else W.SUITE
+        kb = TRANSPORTS[spec.transport].kernel_bypass
+        for w in suite.values():
+            for cold in (False, True):
+                cell = (spec.name, w.name, cold)
+                if cell in seen:
+                    continue
+                seen.add(cell)
+                prog = compile_program(spec, w.profile, cold,
+                                       kernel_bypass=kb)
+                verify_program(
+                    prog, durations=duration_vector(spec, w, cold),
+                    subject=f"golden:{spec.name}/{w.name}/"
+                            f"{'cold' if cold else 'warm'}")
+    return len(seen)
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     mode = ap.add_mutually_exclusive_group(required=True)
@@ -50,6 +83,16 @@ def main() -> int:
     args = ap.parse_args()
 
     import test_des as T
+
+    if args.check:
+        from repro.core.analysis.diag import PlanCheckError
+        try:
+            n_cells = verify_golden_plans()
+        except PlanCheckError as e:
+            print(f"[regen_goldens] STRUCTURAL DRIFT: {e}")
+            return 1
+        print(f"[regen_goldens] {n_cells} golden plan/program cells "
+              f"verified")
 
     fresh = regenerate()
     if args.write:

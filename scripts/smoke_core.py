@@ -2,8 +2,7 @@
 import sys
 import time
 
-from repro.core.runtime import SYSTEMS, WorkerNode
-from repro.core.workloads import SUITE
+from repro.core.runtime import WorkerNode
 
 FAIL = []
 for system in ("baseline", "nexus-tcp", "nexus-async", "nexus"):

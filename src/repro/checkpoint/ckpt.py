@@ -18,7 +18,6 @@ the backend with exact-size hints, overlapped with process/mesh setup.
 """
 from __future__ import annotations
 
-import io
 import json
 import threading
 

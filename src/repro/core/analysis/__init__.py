@@ -1,0 +1,34 @@
+"""PlanCheck: static analysis over handlers and compiled plans.
+
+Two cooperating analyzers (ISSUE 7):
+
+* `infer` — ProfileInfer: statically recovers a handler's ordered
+  storage-call sequence from its AST and matches it against the
+  declared `IOProfile` (`check_workload`), diagnosing the patterns
+  that break transparent offloading;
+* `verify` — PlanVerify: re-derives and checks every structural
+  invariant of a lowered `PlanProgram` against its `PhasePlan` and
+  variant rules (`verify_program`);
+
+plus `mutate` (the seeded corruptor that mutation-tests the verifier)
+and `driver` (the exhaustive variant × workload × coldness matrix run
+by ``python -m repro.core.analysis`` / ``scripts/plancheck.py``).
+"""
+from .diag import Diagnostic, PlanCheckError, ProfileContractError
+from .driver import MatrixReport, matrix_workloads, run_matrix
+from .infer import InferenceResult, check_workload, infer_handler
+from .verify import verify_plan, verify_program
+
+__all__ = [
+    "Diagnostic",
+    "PlanCheckError",
+    "ProfileContractError",
+    "InferenceResult",
+    "check_workload",
+    "infer_handler",
+    "verify_plan",
+    "verify_program",
+    "MatrixReport",
+    "matrix_workloads",
+    "run_matrix",
+]

@@ -1,0 +1,6 @@
+"""``python -m repro.core.analysis`` — run the PlanCheck matrix."""
+import sys
+
+from .driver import main
+
+sys.exit(main())

@@ -64,7 +64,7 @@ from repro.core import plan as P
 from repro.core import workloads as W
 from repro.core.plan import (SYSTEMS, PlanProgram, SystemSpec, compile_plan,
                              compile_program)
-from repro.core.trace import (ArrivalSpec, generate_arrivals, merge_streams,
+from repro.core.trace import (generate_arrivals, merge_streams,
                               sample_rates)
 from repro.core.transport import TRANSPORTS
 
@@ -905,7 +905,8 @@ class DensitySimulator:
                  suite: dict[str, W.Workload] | None = None,
                  arrival_pattern: str | W.ArrivalPattern = "azure",
                  engine: str = "hot",
-                 faults: "FA.FaultSchedule | None" = None):
+                 faults: "FA.FaultSchedule | None" = None,
+                 verify_plans: bool = False):
         # "program" is the PR-3 name of the uncompressed PlanProgram
         # engine, kept as an alias so existing callers measure exactly
         # what they always measured.
@@ -957,6 +958,13 @@ class DensitySimulator:
         self._progs: dict[tuple[str, bool], tuple[PlanProgram, tuple]] = {}
         self._walk: dict[tuple[str, bool], tuple] = {}
         self._durs: dict[tuple[str, bool], dict[str, float]] = {}
+        #: verify-on-compile (PlanCheck): run the full `analysis.verify`
+        #: invariant pass over each (workload, coldness) bundle the
+        #: first time this sim resolves it — including bundles served
+        #: from the process-wide cache, so a corrupted cached template
+        #: cannot slip into a run that asked for verification.
+        self._verify_plans = bool(verify_plans)
+        self._verified: set[tuple[str, bool]] = set()
 
         # one deployed function = (name, workload); suite cycles round-robin
         names = list(self._suite)
@@ -1033,6 +1041,14 @@ class DensitySimulator:
                 _BUNDLES[gkey] = bundle
             else:
                 _BUNDLE_STATS["hits"] += 1
+            if self._verify_plans and key not in self._verified:
+                from repro.core.analysis.verify import verify_program
+                verify_program(
+                    bundle[0],
+                    durations=P.duration_vector(self.spec, w, cold),
+                    subject=f"{self.spec.name}/{base_name}/"
+                            f"{'cold' if cold else 'warm'}")
+                self._verified.add(key)
             self._progs[key] = bundle
         return bundle
 

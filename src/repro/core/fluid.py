@@ -22,7 +22,6 @@ lazily to avoid a cycle.
 """
 from __future__ import annotations
 
-import math
 
 from repro.core import fabric as F
 from repro.core import plan as P

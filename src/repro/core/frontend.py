@@ -29,7 +29,7 @@ from repro.core import fabric as F
 from repro.core import metrics as M
 from repro.core.backend import (BackendCrashed, LostWriteError, NexusBackend,
                                 PrefetchHandle, PutTicket)
-from repro.core.hints import InputHint, OutputHint
+from repro.core.hints import OutputHint
 from repro.core.storage import RemoteStorage
 from repro.core.streaming import CircularBuffer
 
@@ -47,6 +47,26 @@ class S3Api(Protocol):
     def get_object(self, Bucket: str, Key: str) -> dict: ...
 
     def put_object(self, Bucket: str, Key: str, Body) -> dict: ...
+
+
+@runtime_checkable
+class PlatformS3Api(S3Api, Protocol):
+    """The platform-internal storage surface: `S3Api` plus the
+    opaque-payload streaming fallback the runtime's interception layer
+    routes size-unhinted GETs through. `NexusClient` satisfies it;
+    `BaselineClient` deliberately does not — the coupled path never
+    streams through the backend ring."""
+
+    def get_object_streaming(self, Bucket: str, Key: str,
+                             chunk: int = 256 * 1024): ...
+
+
+#: The complete storage-call surface, as *data*: `analysis.infer`
+#: recognizes exactly these method names on any alias of
+#: ``ctx.storage``, so the declared surface and the static analyzer
+#: cannot drift apart.
+S3_METHODS = frozenset(
+    {"get_object", "get_object_streaming", "put_object"})
 
 
 @dataclass

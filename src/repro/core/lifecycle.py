@@ -16,7 +16,7 @@ from __future__ import annotations
 import itertools
 import threading
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 from repro.core import fabric as F
 from repro.core import metrics as M

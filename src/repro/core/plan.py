@@ -53,6 +53,7 @@ Structural rules (each a paper mechanism, applied as data):
 """
 from __future__ import annotations
 
+import os
 from dataclasses import dataclass, field
 from functools import lru_cache
 
@@ -580,10 +581,45 @@ def compile_program(spec: SystemSpec, profile: IOProfile | None = None,
     return _compile_program(spec, shape, bool(cold), bool(kernel_bypass))
 
 
+#: Debug-mode hook: when enabled, every *newly* lowered program runs
+#: the full `analysis.verify` invariant pass before it enters the
+#: compile cache. Off by default — the matrix in `scripts/plancheck.py`
+#: covers every reachable shape, so per-process re-verification is a
+#: debugging aid, not a correctness dependency. Seeded from the
+#: NEXUS_VERIFY_PLANS environment variable so CI and repro runs can
+#: flip it without touching code.
+_verify_on_compile = os.environ.get("NEXUS_VERIFY_PLANS", "") not in ("", "0")
+
+
+def set_verify_on_compile(enabled: bool) -> bool:
+    """Toggle verify-on-compile; returns the previous setting.
+
+    Enabling also clears the program compile cache: cached programs
+    were admitted under the old policy, and the lru key can't see the
+    flag — without the clear, a warm process would silently skip
+    verification for every shape it already compiled.
+    """
+    global _verify_on_compile
+    prev = _verify_on_compile
+    _verify_on_compile = bool(enabled)
+    if enabled and not prev:
+        _compile_program.cache_clear()
+    return prev
+
+
+def verify_on_compile() -> bool:
+    return _verify_on_compile
+
+
 @lru_cache(maxsize=None)
 def _compile_program(spec: SystemSpec, shape: tuple, cold: bool,
                      kernel_bypass: bool) -> PlanProgram:
-    return lower_program(_compile_plan(spec, shape, cold), kernel_bypass)
+    prog = lower_program(_compile_plan(spec, shape, cold), kernel_bypass)
+    if _verify_on_compile:
+        # late import: analysis sits above plan in the layering
+        from repro.core.analysis.verify import verify_program
+        verify_program(prog)
+    return prog
 
 
 # -------------------------------------------------------------- cost model

@@ -15,7 +15,6 @@ O(1) instead of O(payload) under virtio-net.
 from __future__ import annotations
 
 import queue
-import threading
 from dataclasses import dataclass, field
 from typing import Any
 

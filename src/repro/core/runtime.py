@@ -25,6 +25,7 @@ release/response barriers all come from
 from __future__ import annotations
 
 import itertools
+import sys
 import threading
 import time
 import uuid
@@ -34,6 +35,8 @@ from typing import Any
 
 from repro.core import fabric as F
 from repro.core import metrics as M
+from repro.core.analysis.diag import (PC_CONTRACT, PC_DUP_KEY,
+                                      ProfileContractError)
 from repro.core.backend import NexusBackend
 from repro.core.faults import FaultHooks
 from repro.core.frontend import (BaselineClient, GuestContext,
@@ -177,10 +180,14 @@ class _GuestRun:
             self.handler_result = inv.w.handler(inv.event, hctx)
             self._close_segments()
             if self._oi != len(self._ops):
-                raise RuntimeError(
-                    f"{inv.w.name}: handler returned with declared I/O "
-                    f"unperformed (op {self._oi} of {len(self._ops)} "
-                    f"in its IOProfile)")
+                remaining = [type(op).__name__
+                             for op in self._ops[self._oi:]]
+                raise ProfileContractError(
+                    PC_CONTRACT,
+                    f"handler returned with declared I/O unperformed "
+                    f"(op {self._oi} of {len(self._ops)} in its "
+                    f"IOProfile; still due: {remaining})",
+                    subject=inv.w.name, op_index=self._oi)
         except BaseException as e:           # noqa: BLE001 — propagated
             self.error = e
         finally:
@@ -231,10 +238,12 @@ class _GuestRun:
         # the backend's per-logical-write retry dedup would silently
         # drop the second. Reject, variant-independently.
         if (Bucket, Key) in self._written:
-            raise RuntimeError(
-                f"{inv.w.name}: handler wrote {Bucket}/{Key} twice in "
-                f"one invocation — duplicate durable PUTs are unordered "
-                f"under async writeback")
+            raise ProfileContractError(
+                PC_DUP_KEY,
+                f"handler wrote {Bucket}/{Key} twice in one invocation "
+                f"({self._handler_site()}) — duplicate durable PUTs are "
+                f"unordered under async writeback",
+                subject=inv.w.name, op_index=self._oi)
         self._written.add((Bucket, Key))
         # handlers emit nominal-size outputs; the platform stores the
         # byte-scaled prefix while every cost model charges full size
@@ -273,14 +282,33 @@ class _GuestRun:
             self._ci += 1
             self._oi += 1
 
+    def _handler_site(self) -> str:
+        """The handler source line the current storage call was issued
+        from: walk the live stack down to the frame executing the
+        handler's own code object (the call may arrive through helper
+        functions)."""
+        code = getattr(self._ctx.w.handler, "__code__", None)
+        frame = sys._getframe(1)
+        while frame is not None and code is not None \
+                and frame.f_code is not code:
+            frame = frame.f_back
+        if frame is None or code is None:
+            return "handler line unknown"
+        return f"{code.co_filename}:{frame.f_lineno}"
+
     def _expect(self, kind) -> int:
         if (self._oi >= len(self._ops)
                 or not isinstance(self._ops[self._oi], kind)):
             declared = (type(self._ops[self._oi]).__name__
                         if self._oi < len(self._ops) else "end-of-profile")
-            raise RuntimeError(
-                f"{self._ctx.w.name}: handler issued {kind.__name__} at "
-                f"op {self._oi} but its IOProfile declares {declared}")
+            io_i = sum(1 for op in self._ops[:self._oi]
+                       if not isinstance(op, ComputeSegment))
+            raise ProfileContractError(
+                PC_CONTRACT,
+                f"handler issued {kind.__name__} at op {self._oi} "
+                f"(I/O call #{io_i}, {self._handler_site()}) but its "
+                f"IOProfile declares {declared}",
+                subject=self._ctx.w.name, op_index=self._oi)
         self._oi += 1
         if kind is Get:
             self._gi += 1
@@ -393,8 +421,15 @@ class WorkerNode:
                  hedge_after_s: float | None = None,
                  max_instances_per_fn: int = 64,
                  writeback_ack_timeout_s: float = 30.0,
-                 plan_stall_timeout_s: float = 120.0):
+                 plan_stall_timeout_s: float = 120.0,
+                 static_check: bool = True):
         self.spec = SYSTEMS[system]
+        #: registration-time ProfileInfer gate: `deploy` statically
+        #: verifies each handler against its declared IOProfile and
+        #: rejects mismatches before any invocation runs. Disable to
+        #: exercise the runtime contract path (or to deploy handlers
+        #: the analyzer cannot see, e.g. generated code).
+        self.static_check = static_check
         self.acct = M.CycleAccount()
         self.latency = M.LatencyTrace()
         self.byte_scale = byte_scale
@@ -447,8 +482,17 @@ class WorkerNode:
 
     def deploy(self, fn: str | Workload) -> None:
         """Deploy a workload by registry name or as a `Workload` value
-        (a custom handler + IOProfile — the programming-model surface)."""
+        (a custom handler + IOProfile — the programming-model surface).
+
+        With ``static_check`` (the default), ProfileInfer statically
+        recovers the handler's storage-call sequence and rejects the
+        deployment with a `PlanCheckError` when it cannot match the
+        declared IOProfile — the same divergence the runtime contract
+        would hit mid-invocation, caught before any instance exists."""
         w = fn if isinstance(fn, Workload) else REGISTRY[fn]
+        if self.static_check:
+            from repro.core.analysis.infer import check_workload
+            check_workload(w)
         self._workloads[w.name] = w
         self._pools[w.name] = InstancePool(
             w, self.spec, self.acct, max_instances=self._max_instances,

@@ -103,6 +103,15 @@ class IOProfile:
                 out.append(("compute",))
         return tuple(out)
 
+    @property
+    def io_kinds(self) -> tuple[str, ...]:
+        """The declared storage-call sequence, compute elided — what
+        the runtime's contract cursor steps through and what
+        `analysis.infer` matches a handler's recovered calls against."""
+        return tuple("get" if isinstance(op, Get) else "put"
+                     for op in self.ops
+                     if not isinstance(op, ComputeSegment))
+
     def effective(self, input_hints) -> "IOProfile":
         """The profile this *invocation* actually runs: a declared-
         prefetchable GET whose event hint is missing or size-opaque

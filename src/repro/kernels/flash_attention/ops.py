@@ -7,7 +7,6 @@ interpret=True to validate the kernel body on CPU.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels.flash_attention.kernel import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref

@@ -31,7 +31,6 @@ import sys
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import SHAPES, all_cells, cell_is_runnable
 from repro.configs import registry

@@ -7,7 +7,6 @@ meshes in reasonable time. Remat policy wraps the scan body.
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -14,7 +14,6 @@ over steps.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
 from typing import Any
 
 import jax

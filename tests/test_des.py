@@ -30,7 +30,6 @@ import os
 
 import pytest
 
-from repro.core import plan as P
 from repro.core import workloads as W
 from repro.core.des import DensitySimulator, find_density
 from repro.core.faults import FaultSchedule, FaultSpec

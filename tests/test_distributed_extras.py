@@ -6,8 +6,7 @@ import numpy as np
 import pytest
 
 from repro.optim.adamw import (adamw_init, adamw_update, compress_grads,
-                               cosine_schedule, decompress_grads,
-                               global_norm)
+                               cosine_schedule, decompress_grads)
 
 
 class TestGradientCompression:

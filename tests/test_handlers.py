@@ -109,65 +109,104 @@ class TestMultiIOScenarios:
             assert all(len(o) > 0 for o in outs), wname
 
 
-class TestProfileContract:
-    def test_handler_exceeding_profile_fails(self):
-        """A handler that issues I/O its IOProfile does not declare is
-        rejected — the profile is a contract, not a hint."""
-        def greedy(event, ctx):
-            src, dst = event["inputs"][0], event["outputs"][0]
-            obj = ctx.storage.get_object(Bucket=src["bucket"],
-                                         Key=src["key"])
-            ctx.storage.put_object(Bucket=dst["bucket"], Key=dst["key"],
-                                   Body=bytes(obj["Body"]))
-            ctx.storage.put_object(Bucket=dst["bucket"],
-                                   Key=dst["key"] + "-x",
-                                   Body=b"undeclared")
+def _greedy(event, ctx):
+    src, dst = event["inputs"][0], event["outputs"][0]
+    obj = ctx.storage.get_object(Bucket=src["bucket"], Key=src["key"])
+    ctx.storage.put_object(Bucket=dst["bucket"], Key=dst["key"],
+                           Body=bytes(obj["Body"]))
+    ctx.storage.put_object(Bucket=dst["bucket"], Key=dst["key"] + "-x",
+                           Body=b"undeclared")
 
-        w = Workload("GREEDY", IOProfile.single(0.1, 0.1, 5.0), 30.0,
-                     greedy)
+
+def _lazy(event, ctx):
+    return {"statusCode": 204}              # never touches storage
+
+
+def _clobber(event, ctx):
+    dst = event["outputs"][0]
+    ctx.storage.put_object(Bucket=dst["bucket"], Key=dst["key"],
+                           Body=b"A" * 1024)
+    ctx.storage.put_object(Bucket=dst["bucket"], Key=dst["key"],
+                           Body=b"B" * 1024)
+
+
+class TestProfileContract:
+    """The IOProfile is a contract, enforced twice: statically at
+    `deploy` (PlanCheck's ProfileInfer, the default) and dynamically at
+    invoke through the `_GuestRun` shim — the backstop for handlers
+    whose source the analyzer cannot see. Both layers are exercised;
+    the runtime path is reached with ``static_check=False``."""
+
+    GREEDY = Workload("GREEDY", IOProfile.single(0.1, 0.1, 5.0), 30.0,
+                      _greedy)
+    LAZY = Workload("LAZY", IOProfile((Get(64 * 1024),
+                                       ComputeSegment(2.0),
+                                       Put(64 * 1024))), 30.0, _lazy,
+                    deterministic_input=False)
+    CLOBBER = Workload("CLOBBER", IOProfile((Put(1024), Put(1024))),
+                       30.0, _clobber, deterministic_input=False)
+
+    def test_exceeding_profile_rejected_at_deploy(self):
+        """A handler that issues I/O its IOProfile does not declare is
+        rejected before it ever runs — ProfileInfer sees the third
+        storage call against the two-op profile."""
         node = WorkerNode("nexus")
         try:
-            node.deploy(w)
+            with pytest.raises(RuntimeError, match="IOProfile"):
+                node.deploy(self.GREEDY)
+        finally:
+            node.shutdown()
+
+    def test_exceeding_profile_fails_at_invoke(self):
+        """Same violation with the static gate off: the runtime shim
+        rejects the undeclared PUT mid-invocation."""
+        node = WorkerNode("nexus", static_check=False)
+        try:
+            node.deploy(self.GREEDY)
             node.seed_input("GREEDY")
             with pytest.raises(RuntimeError, match="IOProfile"):
                 node.invoke("GREEDY").result(timeout=60)
         finally:
             node.shutdown()
 
-    def test_handler_underperforming_profile_fails(self):
-        def lazy(event, ctx):
-            return {"statusCode": 204}          # never touches storage
-
-        w = Workload("LAZY", IOProfile((Get(64 * 1024),
-                                        ComputeSegment(2.0),
-                                        Put(64 * 1024))), 30.0, lazy,
-                     deterministic_input=False)
+    def test_underperforming_profile_rejected_at_deploy(self):
         node = WorkerNode("baseline")
         try:
-            node.deploy(w)
+            with pytest.raises(RuntimeError, match="IOProfile"):
+                node.deploy(self.LAZY)
+        finally:
+            node.shutdown()
+
+    def test_underperforming_profile_fails_at_invoke(self):
+        node = WorkerNode("baseline", static_check=False)
+        try:
+            node.deploy(self.LAZY)
             node.seed_input("LAZY")
             with pytest.raises(RuntimeError, match="unperformed"):
                 node.invoke("LAZY").result(timeout=60)
         finally:
             node.shutdown()
 
-    def test_duplicate_output_key_rejected(self):
+    def test_duplicate_output_key_rejected_at_deploy(self):
         """Two durable PUTs to one key in a single invocation have no
-        defined order once write chains float — rejected under every
-        variant so handlers can't depend on either outcome."""
-        def clobber(event, ctx):
-            dst = event["outputs"][0]
-            ctx.storage.put_object(Bucket=dst["bucket"], Key=dst["key"],
-                                   Body=b"A" * 1024)
-            ctx.storage.put_object(Bucket=dst["bucket"], Key=dst["key"],
-                                   Body=b"B" * 1024)
-
-        w = Workload("CLOBBER", IOProfile((Put(1024), Put(1024))), 30.0,
-                     clobber, deterministic_input=False)
+        defined order once write chains float — ProfileInfer resolves
+        both keys to the same event expression and rejects the handler
+        at deploy, under every variant."""
         for system in ("baseline", "nexus"):
             node = WorkerNode(system)
             try:
-                node.deploy(w)
+                with pytest.raises(RuntimeError, match="same"):
+                    node.deploy(self.CLOBBER)
+            finally:
+                node.shutdown()
+
+    def test_duplicate_output_key_rejected_at_invoke(self):
+        """The runtime ledger catches the same clobber when the static
+        gate is off (e.g. source-less handlers)."""
+        for system in ("baseline", "nexus"):
+            node = WorkerNode(system, static_check=False)
+            try:
+                node.deploy(self.CLOBBER)
                 with pytest.raises(RuntimeError, match="twice"):
                     node.invoke("CLOBBER").result(timeout=60)
             finally:

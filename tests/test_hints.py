@@ -1,0 +1,110 @@
+"""Ingress routing hints (paper §4.2.2) — ISSUE 7 satellite coverage:
+`extract_hints` across every supported event shape (and the malformed
+ones), `make_event` round-trips, and `IOProfile.effective` hint-fallback
+edge cases."""
+from repro.core.hints import (InputHint, OutputHint, extract_hints,
+                              make_event)
+from repro.core.workloads import ComputeSegment, Get, IOProfile, Put
+
+KB = 1024
+
+
+class TestExtractHints:
+    def test_s3_notification_records(self):
+        ins, outs = extract_hints({"Records": [
+            {"s3": {"bucket": {"name": "b"},
+                    "object": {"key": "k", "size": 4096}}},
+            {"s3": {"bucket": {"name": "b2"},
+                    "object": {"key": "k2"}}},       # size opaque
+        ]})
+        assert ins == (InputHint("b", "k", 4096),
+                       InputHint("b2", "k2", None))
+        assert outs == ()
+        assert ins[0].prefetchable and not ins[1].prefetchable
+
+    def test_workflow_lists_preserve_declaration_order(self):
+        ins, outs = extract_hints({
+            "inputs": [{"bucket": "b", "key": "k0", "size": 1},
+                       {"bucket": "b", "key": "k1", "size": 2}],
+            "outputs": [{"bucket": "o", "key": "r0"},
+                        {"bucket": "o", "key": "r1"}],
+        })
+        assert [h.key for h in ins] == ["k0", "k1"]
+        assert [h.key for h in outs] == ["r0", "r1"]
+
+    def test_singular_input_output_forms(self):
+        ins, outs = extract_hints({
+            "input": {"bucket": "b", "key": "k", "size": 7},
+            "output": {"bucket": "o", "key": "r"},
+        })
+        assert ins == (InputHint("b", "k", 7),)
+        assert outs == (OutputHint("o", "r"),)
+
+    def test_json_string_events_are_parsed(self):
+        ins, _ = extract_hints(
+            '{"inputs": [{"bucket": "b", "key": "k", "size": 3}]}')
+        assert ins == (InputHint("b", "k", 3),)
+
+    def test_opaque_events_yield_streaming_fallback(self):
+        assert extract_hints("not json{") == ((), ())
+        assert extract_hints('["a", "list"]') == ((), ())
+        assert extract_hints({}) == ((), ())
+        assert extract_hints({"inputs": None, "outputs": None}) == ((), ())
+
+    def test_malformed_entries_are_skipped_not_fatal(self):
+        ins, outs = extract_hints({
+            "inputs": ["junk", {"bucket": "b"},          # no key
+                       {"bucket": "b", "key": "good"}],
+            "outputs": [42, {"key": "orphan"},
+                        {"bucket": "o", "key": "r"}],
+            "Records": [{"notS3": True}, "junk"],
+        })
+        assert ins == (InputHint("b", "good", None),)
+        assert outs == (OutputHint("o", "r"),)
+
+    def test_make_event_round_trips(self):
+        ev = make_event([("b", "k0", 5), ("b", "k1")], [("o", "r")])
+        ins, outs = extract_hints(ev)
+        assert ins == (InputHint("b", "k0", 5), InputHint("b", "k1", None))
+        assert outs == (OutputHint("o", "r"),)
+
+
+class TestEffectiveProfile:
+    PROFILE = IOProfile((Get(4 * KB), ComputeSegment(1.0),
+                         Get(8 * KB), Put(KB)))
+
+    def test_full_hints_keep_declared_prefetchability(self):
+        hints = (InputHint("b", "k0", 4 * KB), InputHint("b", "k1", 8 * KB))
+        eff = self.PROFILE.effective(hints)
+        assert [g.prefetchable for g in eff.gets] == [True, True]
+        assert eff.shape == self.PROFILE.shape      # first GET still hinted
+
+    def test_size_opaque_hint_falls_back_to_guest_issued(self):
+        hints = (InputHint("b", "k0", None), InputHint("b", "k1", 8 * KB))
+        eff = self.PROFILE.effective(hints)
+        assert [g.prefetchable for g in eff.gets] == [False, True]
+
+    def test_missing_hints_disable_remaining_gets(self):
+        eff = self.PROFILE.effective((InputHint("b", "k0", 4 * KB),))
+        assert [g.prefetchable for g in eff.gets] == [True, False]
+        eff = self.PROFILE.effective(())
+        assert [g.prefetchable for g in eff.gets] == [False, False]
+
+    def test_declared_unprefetchable_stays_off_even_with_hint(self):
+        prof = IOProfile((Get(KB, prefetchable=False), Put(KB)))
+        eff = prof.effective((InputHint("b", "k", KB),))
+        assert eff.gets[0].prefetchable is False
+
+    def test_non_get_ops_pass_through_unchanged(self):
+        eff = self.PROFILE.effective(())
+        assert eff.segments == self.PROFILE.segments
+        assert eff.puts == self.PROFILE.puts
+        assert eff.io_kinds == self.PROFILE.io_kinds
+
+    def test_shape_normalizes_later_get_flags(self):
+        """Only the first GET's prefetchability is structural: the
+        compile cache must not split on later flags."""
+        a = IOProfile((Get(KB), Get(KB, prefetchable=True), Put(KB)))
+        b = IOProfile((Get(KB), Get(KB, prefetchable=False), Put(KB)))
+        assert a.shape == b.shape
+        assert a.shape[0] == ("get", True)

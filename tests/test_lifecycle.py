@@ -10,7 +10,7 @@ import pytest
 from repro.core import fabric as F
 from repro.core import metrics as M
 from repro.core.arena import ArenaError, ArenaRegistry, TenantArena
-from repro.core.lifecycle import FunctionInstance, InstancePool
+from repro.core.lifecycle import InstancePool
 from repro.core.plan import SYSTEMS
 from repro.core.runtime import WorkerNode
 from repro.core.workloads import chaos_suite, SUITE

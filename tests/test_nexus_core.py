@@ -7,7 +7,7 @@ import pytest
 from repro.core import fabric as F
 from repro.core import metrics as M
 from repro.core.arena import ArenaError, ArenaRegistry, IsolationError, TenantArena
-from repro.core.backend import BackendCrashed, NexusBackend
+from repro.core.backend import NexusBackend
 from repro.core.credentials import CredentialError, TokenManager
 from repro.core.frontend import GuestContext, NexusClient
 from repro.core.hints import (InputHint, OutputHint, extract_hints,

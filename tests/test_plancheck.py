@@ -1,0 +1,388 @@
+"""PlanCheck (ISSUE 7): static handler I/O inference + plan/program
+invariant verification.
+
+Three layers under test:
+
+* `analysis.infer` — the AST walker recovers ordered storage-call
+  sequences through aliases, unrolled loops, and comprehensions, and
+  diagnoses the patterns that break transparent offloading
+  (conditional I/O, recovery-path I/O, unknown trip counts, escaped
+  ``ctx``, duplicate keys);
+* `analysis.verify` — every structural invariant of the lowering,
+  mutation-tested: each of the ~20 seeded corruption classes must be
+  caught with exactly its *own* diagnostic code (no silent passes, no
+  masking by an earlier check);
+* the wiring — deploy-time gating in `runtime.WorkerNode`, the
+  env-gated verify-on-compile hook in `plan`, and
+  `DensitySimulator(verify_plans=True)`.
+"""
+import pytest
+
+from repro.core.analysis import diag
+from repro.core.analysis.diag import PlanCheckError, ProfileContractError
+from repro.core.analysis.infer import check_workload, infer_handler
+from repro.core.analysis.mutate import CORRUPTIONS, Ineligible, corrupt
+from repro.core.analysis.verify import verify_plan, verify_program
+from repro.core.analysis.driver import matrix_workloads, run_matrix
+from repro.core.des import DensitySimulator
+from repro.core.plan import (SYSTEMS, compile_program, duration_vector,
+                             set_verify_on_compile, verify_on_compile)
+from repro.core.transport import TRANSPORTS
+from repro.core.workloads import (ComputeSegment, Get, IOProfile,
+                                  REGISTRY, Workload)
+
+KB = 1024
+
+
+# ----------------------------------------------------------- inference
+
+
+def _kinds(handler, n_in=1, n_out=1):
+    return infer_handler(handler, n_in, n_out).kinds
+
+
+def _codes(handler, n_in=1, n_out=1):
+    return {d.code for d in infer_handler(handler, n_in, n_out).diagnostics}
+
+
+class TestProfileInfer:
+    def test_storage_alias_is_followed(self):
+        """Calls through any local alias of ctx.storage are the same
+        calls — the walker tracks the value, not the name."""
+        def h(event, ctx):
+            s = ctx.storage
+            client = s
+            src, dst = event["inputs"][0], event["outputs"][0]
+            obj = client.get_object(Bucket=src["bucket"], Key=src["key"])
+            s.put_object(Bucket=dst["bucket"], Key=dst["key"],
+                         Body=bytes(obj["Body"]))
+
+        assert _kinds(h) == ("get", "put")
+        assert _codes(h) == set()
+
+    def test_bound_method_alias(self):
+        def h(event, ctx):
+            fetch = ctx.storage.get_object
+            src = event["inputs"][0]
+            obj = fetch(Bucket=src["bucket"], Key=src["key"])
+            dst = event["outputs"][0]
+            ctx.storage.put_object(Bucket=dst["bucket"], Key=dst["key"],
+                                   Body=bytes(obj["Body"]))
+
+        assert _kinds(h) == ("get", "put")
+
+    def test_input_loop_unrolls_to_declared_count(self):
+        """`for src in event["inputs"]` has a statically-known trip
+        count — the declared GET arity."""
+        def h(event, ctx):
+            acc = []
+            for src in event["inputs"]:
+                obj = ctx.storage.get_object(Bucket=src["bucket"],
+                                             Key=src["key"])
+                acc.append(bytes(obj["Body"]))
+            dst = event["outputs"][0]
+            ctx.storage.put_object(Bucket=dst["bucket"], Key=dst["key"],
+                                   Body=b"".join(acc))
+
+        assert _kinds(h, n_in=3) == ("get", "get", "get", "put")
+        assert _codes(h, n_in=3) == set()
+
+    def test_enumerate_and_reversed_wrappers(self):
+        def h(event, ctx):
+            for i, dst in enumerate(reversed(event["outputs"])):
+                ctx.storage.put_object(Bucket=dst["bucket"],
+                                       Key=dst["key"],
+                                       Body=bytes([i]))
+
+        assert _kinds(h, n_in=0, n_out=2) == ("put", "put")
+
+    def test_comprehension_unrolls(self):
+        def h(event, ctx):
+            blobs = [ctx.storage.get_object(Bucket=s["bucket"],
+                                            Key=s["key"])
+                     for s in event["inputs"]]
+            dst = event["outputs"][0]
+            ctx.storage.put_object(Bucket=dst["bucket"], Key=dst["key"],
+                                   Body=bytes(len(blobs)))
+
+        assert _kinds(h, n_in=2) == ("get", "get", "put")
+
+    def test_conditional_put_is_an_error(self):
+        def h(event, ctx):
+            dst = event["outputs"][0]
+            if event.get("flag"):
+                ctx.storage.put_object(Bucket=dst["bucket"],
+                                       Key=dst["key"], Body=b"x")
+
+        res = infer_handler(h, 0, 1)
+        assert diag.PC_COND_PUT in {d.code for d in res.errors}
+
+    def test_unknown_trip_count_is_an_error(self):
+        def h(event, ctx):
+            while event.get("more"):
+                src = event["inputs"][0]
+                ctx.storage.get_object(Bucket=src["bucket"],
+                                       Key=src["key"])
+
+        res = infer_handler(h, 1, 0)
+        assert diag.PC_LOOP in {d.code for d in res.errors}
+
+    def test_io_in_except_is_an_error_in_try_a_warning(self):
+        def h(event, ctx):
+            src, dst = event["inputs"][0], event["outputs"][0]
+            try:
+                obj = ctx.storage.get_object(Bucket=src["bucket"],
+                                             Key=src["key"])
+            except Exception:
+                obj = ctx.storage.get_object(Bucket=src["bucket"],
+                                             Key=src["key"] + "-alt")
+            ctx.storage.put_object(Bucket=dst["bucket"], Key=dst["key"],
+                                   Body=bytes(obj["Body"]))
+
+        res = infer_handler(h, 1, 1)
+        assert diag.PC_EXCEPT_IO in {d.code for d in res.errors}
+        assert diag.PC_TRY_IO in {d.code for d in res.warnings}
+
+    def test_escaped_ctx_is_an_error(self):
+        def h(event, ctx):
+            return {"client": ctx}       # interception can't follow it
+
+        res = infer_handler(h, 0, 0)
+        assert diag.PC_ESCAPE in {d.code for d in res.errors}
+
+    def test_storage_passed_to_helper_is_an_error(self):
+        def h(event, ctx):
+            helper = event["helper"]
+            helper(ctx.storage)
+
+        res = infer_handler(h, 0, 0)
+        assert diag.PC_ESCAPE in {d.code for d in res.errors}
+
+    def test_unknown_surface_method_is_an_error(self):
+        def h(event, ctx):
+            ctx.storage.list_objects(Bucket="b")
+
+        res = infer_handler(h, 0, 0)
+        assert diag.PC_METHOD in {d.code for d in res.errors}
+
+    def test_duplicate_resolved_keys_are_an_error(self):
+        def h(event, ctx):
+            dst = event["outputs"][0]
+            ctx.storage.put_object(Bucket=dst["bucket"], Key=dst["key"],
+                                   Body=b"A")
+            ctx.storage.put_object(Bucket=dst["bucket"], Key=dst["key"],
+                                   Body=b"B")
+
+        res = infer_handler(h, 0, 2)
+        dups = [d for d in res.errors if d.code == diag.PC_DUP_KEY]
+        assert dups and dups[0].op_index == 1
+
+    def test_distinct_derived_keys_are_not_duplicates(self):
+        def h(event, ctx):
+            dst = event["outputs"][0]
+            ctx.storage.put_object(Bucket=dst["bucket"], Key=dst["key"],
+                                   Body=b"A")
+            ctx.storage.put_object(Bucket=dst["bucket"],
+                                   Key=dst["key"] + "-x", Body=b"B")
+
+        res = infer_handler(h, 0, 2)
+        assert diag.PC_DUP_KEY not in {d.code for d in res.diagnostics}
+
+    def test_sourceless_handler_degrades_to_warning(self):
+        ns = {}
+        exec("def h(event, ctx):\n    return None\n", ns)
+        res = infer_handler(ns["h"], 1, 1)
+        assert [d.code for d in res.warnings] == [diag.PC_NO_SOURCE]
+        assert not res.errors
+        # ...and check_workload stays lenient: no shape claim possible
+        w = Workload("NOSRC", IOProfile.single(0.1, 0.1, 1.0), 30.0,
+                     ns["h"], deterministic_input=False)
+        assert check_workload(w).kinds == ()
+
+
+def _extra_put(event, ctx):
+    src, dst = event["inputs"][0], event["outputs"][0]
+    obj = ctx.storage.get_object(Bucket=src["bucket"], Key=src["key"])
+    ctx.storage.put_object(Bucket=dst["bucket"], Key=dst["key"],
+                           Body=bytes(obj["Body"]))
+    ctx.storage.put_object(Bucket=dst["bucket"], Key=dst["key"] + "-x",
+                           Body=b"extra")
+
+
+def _reordered(event, ctx):
+    src, dst = event["inputs"][0], event["outputs"][0]
+    ctx.storage.put_object(Bucket=dst["bucket"], Key=dst["key"],
+                           Body=b"early")
+    ctx.storage.get_object(Bucket=src["bucket"], Key=src["key"])
+
+
+class TestCheckWorkload:
+    def test_every_registered_handler_matches_its_profile(self):
+        for _, w in matrix_workloads():
+            res = check_workload(w)
+            assert res.kinds == w.profile.io_kinds
+
+    def test_extra_call_raises_shape_with_op_index(self):
+        w = Workload("EXTRA", IOProfile.single(0.1, 0.1, 1.0), 30.0,
+                     _extra_put)
+        with pytest.raises(PlanCheckError) as ei:
+            check_workload(w)
+        assert ei.value.code == diag.PC_SHAPE
+        assert ei.value.op_index == 2
+        assert ei.value.line is not None
+        assert "IOProfile" in str(ei.value)
+
+    def test_reordered_ops_raise_shape_at_first_divergence(self):
+        w = Workload("REORD", IOProfile.single(0.1, 0.1, 1.0), 30.0,
+                     _reordered)
+        with pytest.raises(PlanCheckError) as ei:
+            check_workload(w)
+        assert ei.value.code == diag.PC_SHAPE
+        assert ei.value.op_index == 0
+
+    def test_trailing_get_is_linted(self):
+        def h(event, ctx):
+            for src in event["inputs"]:
+                ctx.storage.get_object(Bucket=src["bucket"],
+                                       Key=src["key"])
+
+        w = Workload("TRAIL", IOProfile((Get(KB), ComputeSegment(1.0),
+                                         Get(KB))), 30.0, h,
+                     deterministic_input=False)
+        res = check_workload(w)
+        assert diag.PC_TRAILING_GET in {d.code for d in res.warnings}
+
+    def test_result_is_cached_per_handler_profile(self):
+        w = REGISTRY["AES"]
+        assert check_workload(w) is check_workload(w)
+
+
+# ---------------------------------------------------------- verification
+
+
+def _native_cell(system: str, wname: str, cold: bool):
+    spec = SYSTEMS[system]
+    w = REGISTRY[wname]
+    kb = TRANSPORTS[spec.transport].kernel_bypass
+    prog = compile_program(spec, w.profile, cold, kernel_bypass=kb)
+    return prog, duration_vector(spec, w, cold)
+
+
+# configs spanning the features the damage classes need: multi-PUT
+# profiles (PIPE/FAN), multi-GET (SG), async + sync variants, coupled
+# (baseline: no backend groups) and offloaded lowerings
+_MUTATION_CELLS = [
+    ("nexus", "PIPE", True), ("nexus", "PIPE", False),
+    ("nexus", "SG", True), ("nexus", "FAN", True),
+    ("nexus-tcp", "PIPE", True), ("nexus-async", "PIPE", True),
+    ("baseline", "PIPE", True), ("baseline", "AES", False),
+]
+
+
+class TestPlanVerify:
+    @pytest.mark.parametrize("system", sorted(SYSTEMS))
+    def test_clean_programs_verify(self, system):
+        for wname in ("AES", "SG", "PIPE", "FAN"):
+            for cold in (False, True):
+                prog, durs = _native_cell(system, wname, cold)
+                verify_program(prog, durations=durs)
+                verify_plan(prog.plan)
+
+    @pytest.mark.parametrize("c", CORRUPTIONS, ids=lambda c: c.name)
+    def test_corruption_caught_with_its_own_code(self, c):
+        """Mutation testing: each damage class must trip exactly its
+        documented diagnostic on at least one eligible config — and on
+        *every* config where it applies."""
+        caught = 0
+        for system, wname, cold in _MUTATION_CELLS:
+            prog, durs = _native_cell(system, wname, cold)
+            try:
+                bad_prog, bad_durs = corrupt(prog, durs, c.name, seed=7)
+            except Ineligible:
+                continue
+            with pytest.raises(PlanCheckError) as ei:
+                verify_program(bad_prog, durations=bad_durs,
+                               subject=f"{system}/{wname}")
+            assert ei.value.code == c.code, (
+                f"{c.name} on {system}/{wname}/cold={cold}: expected "
+                f"{c.code}, got {ei.value.code}: {ei.value}")
+            caught += 1
+        assert caught, f"no eligible config for corruption {c.name}"
+
+    def test_corruption_codes_are_distinct(self):
+        """Every damage class maps to its own diagnostic — a corruption
+        masked by an unrelated check would collapse two codes."""
+        codes = [c.code for c in CORRUPTIONS]
+        assert len(set(codes)) == len(codes)
+
+
+class TestMatrix:
+    def test_full_matrix_is_clean(self):
+        report = run_matrix()
+        assert report.ok
+        assert report.handlers_checked >= len(REGISTRY)
+        # 7 variants x pairs x 2 coldness x 2 lowerings
+        assert report.cells_verified == (len(SYSTEMS)
+                                         * len(matrix_workloads()) * 4)
+        assert report.warnings == []
+
+
+# --------------------------------------------------------------- wiring
+
+
+class TestWiring:
+    def test_verify_on_compile_toggle(self):
+        prev = set_verify_on_compile(True)
+        try:
+            assert verify_on_compile()
+            prog, durs = _native_cell("nexus", "PIPE", True)
+            assert prog.names[-1] == "reply"
+        finally:
+            set_verify_on_compile(prev)
+        assert verify_on_compile() == prev
+
+    def test_density_simulator_verifies_each_bundle_once(self):
+        sim = DensitySimulator("nexus", 8, seed=3, duration_s=2.0,
+                               warmup_s=0.5, verify_plans=True)
+        sim.run()
+        assert sim._verified        # at least one (workload, cold) cell
+
+    def test_runtime_contract_error_is_plancheck_typed(self):
+        """The runtime shim's divergence errors carry the same typed
+        diagnostics as the static analyzer."""
+        from repro.core.runtime import WorkerNode
+
+        def greedy(event, ctx):
+            src, dst = event["inputs"][0], event["outputs"][0]
+            obj = ctx.storage.get_object(Bucket=src["bucket"],
+                                         Key=src["key"])
+            ctx.storage.put_object(Bucket=dst["bucket"],
+                                   Key=dst["key"],
+                                   Body=bytes(obj["Body"]))
+            ctx.storage.put_object(Bucket=dst["bucket"],
+                                   Key=dst["key"] + "-x", Body=b"x")
+
+        w = Workload("GREEDY2", IOProfile.single(0.1, 0.1, 1.0), 30.0,
+                     greedy)
+        node = WorkerNode("nexus", static_check=False)
+        try:
+            node.deploy(w)
+            node.seed_input("GREEDY2")
+            with pytest.raises(ProfileContractError) as ei:
+                node.invoke("GREEDY2").result(timeout=60)
+            assert ei.value.code == diag.PC_CONTRACT
+            assert ei.value.op_index is not None
+        finally:
+            node.shutdown()
+
+    def test_deploy_rejects_mismatch_by_default(self):
+        from repro.core.runtime import WorkerNode
+
+        w = Workload("REORD2", IOProfile.single(0.1, 0.1, 1.0), 30.0,
+                     _reordered)
+        node = WorkerNode("nexus")
+        try:
+            with pytest.raises(PlanCheckError):
+                node.deploy(w)
+        finally:
+            node.shutdown()

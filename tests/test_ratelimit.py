@@ -1,0 +1,90 @@
+"""Per-SDK-client token-bucket rate limiting (paper §4.4) — ISSUE 7
+satellite coverage. All timing goes through an injectable clock; no
+test here sleeps."""
+import pytest
+
+from repro.core.ratelimit import (DEFAULT_RATE_MBPS, MBPS, ClientLimiter,
+                                  TokenBucket)
+
+
+class FakeClock:
+    def __init__(self, t=0.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+
+class TestTokenBucket:
+    def test_burst_passes_without_delay(self):
+        clk = FakeClock()
+        b = TokenBucket(1000.0, burst_bytes=500.0, clock=clk)
+        assert b.reserve(500) == 0.0
+
+    def test_default_burst_is_quarter_second(self):
+        b = TokenBucket(8000.0, clock=FakeClock())
+        assert b.burst == pytest.approx(2000.0)
+
+    def test_overdraft_delay_is_deficit_over_rate(self):
+        clk = FakeClock()
+        b = TokenBucket(1000.0, burst_bytes=500.0, clock=clk)
+        # 1500 bytes against a 500-byte burst: 1000 owed at 1000 B/s
+        assert b.reserve(1500) == pytest.approx(1.0)
+
+    def test_refill_at_rate_and_capped_at_burst(self):
+        clk = FakeClock()
+        b = TokenBucket(100.0, burst_bytes=200.0, clock=clk)
+        assert b.reserve(200) == 0.0            # bucket drained
+        clk.t = 1.0                             # +100 tokens
+        assert b.reserve(100) == 0.0
+        clk.t = 100.0                           # refill is capped: 200, not 9900
+        assert b.reserve(200) == 0.0
+        assert b.reserve(100) == pytest.approx(1.0)
+
+    def test_debt_accumulates_across_reservations(self):
+        clk = FakeClock()
+        b = TokenBucket(100.0, burst_bytes=100.0, clock=clk)
+        assert b.reserve(100) == 0.0
+        assert b.reserve(100) == pytest.approx(1.0)
+        assert b.reserve(100) == pytest.approx(2.0)
+
+    def test_throttle_sleeps_exactly_the_reserved_delay(self):
+        clk = FakeClock()
+        b = TokenBucket(100.0, burst_bytes=100.0, clock=clk)
+        slept = []
+        assert b.throttle(100, sleep=slept.append) == 0.0
+        assert slept == []                      # burst: no sleep at all
+        d = b.throttle(50, sleep=slept.append)
+        assert d == pytest.approx(0.5)
+        assert slept == [d]
+
+
+class TestClientLimiter:
+    def test_single_client_gets_full_budget(self):
+        lim = ClientLimiter(total_rate_mbps=600.0)
+        b = lim.bucket("c0")
+        assert b.rate == pytest.approx(600.0 * MBPS)
+        assert b.burst == pytest.approx(b.rate * 0.25)
+
+    def test_budget_splits_equally_as_clients_appear(self):
+        """§4.4: a function holding several SDK clients divides its
+        fixed budget equally among them — including buckets handed out
+        before the later clients existed."""
+        lim = ClientLimiter(total_rate_mbps=600.0)
+        b0 = lim.bucket("c0")
+        b1 = lim.bucket("c1")
+        b2 = lim.bucket("c2")
+        per = 600.0 * MBPS / 3
+        for b in (b0, b1, b2):
+            assert b.rate == pytest.approx(per)
+            assert b.burst == pytest.approx(per * 0.25)
+
+    def test_bucket_is_stable_per_client(self):
+        lim = ClientLimiter()
+        assert lim.bucket("c0") is lim.bucket("c0")
+        assert lim.bucket("c0") is not lim.bucket("c1")
+
+    def test_default_budget_matches_paper_baseline(self):
+        lim = ClientLimiter()
+        assert lim.bucket("c0").rate == pytest.approx(
+            DEFAULT_RATE_MBPS * MBPS)
