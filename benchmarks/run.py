@@ -25,7 +25,7 @@ def main() -> None:
     from benchmarks import (cold_start, cpu_cycles, density, faasm_gap,
                             fault_tolerance, hlo_analysis,
                             memory_footprint, ml_serving, model_flops,
-                            sim_throughput, warm_path)
+                            overload, sim_throughput, warm_path)
 
     benches = [
         ("cpu_cycles (Fig 2)", cpu_cycles.run, {}),
@@ -41,6 +41,8 @@ def main() -> None:
         ("ml_serving (MLServe: calibrated ML suite)", ml_serving.run,
          {"quick": args.quick}),
         ("fault_tolerance (§5, FaultPlane)", fault_tolerance.run,
+         {"quick": args.quick}),
+        ("overload (GuardRails degradation curves)", overload.run,
          {"quick": args.quick}),
         ("faasm_gap (Fig 14)", faasm_gap.run, {}),
     ]

@@ -59,6 +59,7 @@ from time import perf_counter as _perf_counter
 
 from repro.core import fabric as F
 from repro.core import faults as FA
+from repro.core import guardrails as GR
 from repro.core import metrics as M
 from repro.core import plan as P
 from repro.core import workloads as W
@@ -702,6 +703,16 @@ class SimResult:
     retry_cycles: dict | None = None
     put_ledger: dict | None = None
     responses: dict | None = None
+    # GuardRails outputs (None/0 unless the run had a GuardrailPolicy):
+    # completions inside their deadline, completions past it, arrivals
+    # paced through the admission queue, per-reason shed counts, and
+    # the typed-rejection ledger (fn, t_arr) -> reason — the overload
+    # chaos harness asserts outcome coverage against `responses`.
+    goodput: int = 0
+    slo_violations: int = 0
+    queued: int = 0
+    shed: dict | None = None
+    rejections: dict | None = None
 
     def slowdowns(self) -> dict[str, float]:
         out = {}
@@ -906,6 +917,7 @@ class DensitySimulator:
                  arrival_pattern: str | W.ArrivalPattern = "azure",
                  engine: str = "hot",
                  faults: "FA.FaultSchedule | None" = None,
+                 guardrails: "GR.GuardrailPolicy | None" = None,
                  verify_plans: bool = False):
         # "program" is the PR-3 name of the uncompressed PlanProgram
         # engine, kept as an alias so existing callers measure exactly
@@ -927,6 +939,23 @@ class DensitySimulator:
         self._faults = faults
         self._outage_until = 0.0
         self._live: list = []
+        #: GuardRails: a policy routes every run through the
+        #: event-driven method path (like faults do) and puts one
+        #: admission decision in front of `_arrive` — an *empty*
+        #: policy decides "admit" for everything, consumes no event
+        #: seq, and reproduces all four engines bit-for-bit (pinned
+        #: by the des_parity golden gate).
+        self._guardrails = guardrails
+        self._guard = (None if guardrails is None
+                       else GR.GuardState(guardrails,
+                                          clock=lambda: self.loop.now))
+        if (self._guard is not None and self._guard.breaker is not None
+                and guardrails.breaker.open_on_slow and faults is not None):
+            self._guard.breaker.set_slow_windows(
+                faults.windows(FA.STORAGE_SLOW))
+        self.shed = {r: 0 for r in GR.SHED_REASONS}
+        self.rejections: dict = {}
+        self._unloaded_cache: dict[str, float] = {}
         self.acct = M.CycleAccount()
         self.fault_stats = {"crashes": 0, "aborted_groups": 0,
                             "killed_invocations": 0, "storage_retries": 0,
@@ -1134,20 +1163,64 @@ class DensitySimulator:
     # ------------------------------------------------------------ invocation
 
     def _arrive(self, fn: str, _=None) -> None:
+        if self._guard is not None and not self._admit(fn):
+            return
+        self._dispatch(fn, self.loop.now)
+
+    def _dispatch(self, fn: str, t_arr: float) -> None:
         idle = self.idle[fn]
         if idle:
             inst = idle.pop()
             inst.state = "busy"
             inst.expire_seq += 1
-            self._execute(inst, self.loop.now, cold=False)
+            self._execute(inst, t_arr, cold=False)
             return
         inst = self._spawn(fn)
         if inst is None:
             # cluster memory-full: queue for a warm instance
-            self.backlog[fn].append(self.loop.now)
+            self.backlog[fn].append(t_arr)
             return
         inst.state = "busy"
-        self._execute(inst, self.loop.now, cold=True)
+        self._execute(inst, t_arr, cold=True)
+
+    # ------------------------------------------------------------ guardrails
+    #
+    # One admission decision in front of every arrival (guarded runs
+    # only — `_run_hot`'s fused loop is never taken with a policy, so
+    # the inline arrival block stays untouched). The decision machine
+    # is `guardrails.GuardState` over the loop's virtual clock — the
+    # SAME state machine the threaded node drives with a real clock,
+    # which is what makes DES shed counts a *prediction* of the
+    # threaded node's. Backlog service (`_release`) and fault redrives
+    # (`_f_rearrive`) bypass admission: those requests were already
+    # admitted once.
+
+    def _admit(self, fn: str) -> bool:
+        """True to dispatch now. Queued arrivals re-enter through a
+        timed event at their paced admission instant (latency accrues
+        from the ORIGINAL arrival — the caller waited in the queue);
+        sheds record a typed rejection in the `rejections` ledger,
+        atomically — no instance, no events, no partial work."""
+        g = self._guard
+        now = self.loop.now
+        u = self._unloaded_cache.get(fn)
+        if u is None:
+            u = self._unloaded_cache[fn] = self.unloaded_latency(fn)
+        d = g.decide(fn, self._base[fn], u)
+        if d.action == "admit":
+            return True
+        if d.action == "queue":
+            t = now + d.delay_s
+            if t <= self._horizon:
+                self.loop.at(t, self._dispatch, fn, now)
+            # past the horizon the loop drains first: the outcome is
+            # unobservable either way (same rule as keep-alive timers)
+            return False
+        self.shed[d.reason] += 1
+        self.rejected += 1
+        self.rejections[(fn, now)] = d.reason
+        self.acct.cross(M.SHED)
+        return False
 
     def _execute(self, inst: SimInstance, t_arr: float, cold: bool) -> None:
         if self._faults is not None:
@@ -2190,6 +2263,11 @@ class DensitySimulator:
         loop = self.loop
         now = loop.now
         self.fault_stats["crashes"] += 1
+        if self._guard is not None and self._guard.breaker is not None:
+            # GuardRails: the crash signal opens the circuit breaker —
+            # arrivals during the open window shed instead of piling
+            # onto the restarting daemon
+            self._guard.breaker.on_crash()
         if self.spec.offload_sdk:
             # crash-only shared daemon: abort every in-flight backend
             # group; re-drive each from its head behind the restart
@@ -2301,11 +2379,13 @@ class DensitySimulator:
             if self.loop.now < self.duration_s - 1.0:
                 self.loop.after(1.0, sample)
         self.loop.after(self.warmup_s, sample)
-        if faulted or self.engine in ("legacy", "calendar"):
+        if faulted or self._guard is not None \
+                or self.engine in ("legacy", "calendar"):
             # the faulted interpreter is event-driven on every engine,
-            # and the calendar engine exercises the method-dispatch
-            # loop (`EventLoop._run_cal`); only fault-free classic/hot
-            # runs take the fused loop
+            # guarded runs need the `_arrive` admission seam (the fused
+            # loop inlines arrivals), and the calendar engine exercises
+            # the method-dispatch loop (`EventLoop._run_cal`); only
+            # fault-free unguarded classic/hot runs take the fused loop
             self.loop.run(until)
         else:
             self._run_hot(until)
@@ -2320,6 +2400,23 @@ class DensitySimulator:
         mem_util = (sum(self.mem_samples) / len(self.mem_samples)
                     if self.mem_samples else 0.0)
         unloaded = {f: self.unloaded_latency(f) for f in self.functions}
+        # GuardRails accounting: goodput = measured-window completions
+        # (arrivals past warmup, same population as the latency
+        # streams) inside their class deadline — all of them when no
+        # deadline is set. Derived post-hoc from the latency streams,
+        # so the hot-path completion sites stay untouched.
+        guarded = self._guard is not None
+        goodput = slo_bad = 0
+        if guarded:
+            for f, xs in self.latencies.items():
+                dl = self._guard.deadline_for(self._base[f], unloaded[f])
+                if dl is None:
+                    goodput += len(xs)
+                    continue
+                bad = sum(1 for x in xs if x > dl)
+                slo_bad += bad
+                goodput += len(xs) - bad
+            self._guard.slo_violations = slo_bad
         return SimResult(
             system=self.spec.name, n_functions=self.n_functions,
             latencies={f: v for f, v in self.latencies.items() if v},
@@ -2330,7 +2427,11 @@ class DensitySimulator:
             fault_stats=dict(self.fault_stats) if faulted else None,
             retry_cycles=self.acct.snapshot() if faulted else None,
             put_ledger=dict(self.put_ledger) if faulted else None,
-            responses=dict(self.responses) if faulted else None)
+            responses=dict(self.responses) if faulted else None,
+            goodput=goodput, slo_violations=slo_bad,
+            queued=self._guard.queued if guarded else 0,
+            shed=dict(self.shed) if guarded else None,
+            rejections=dict(self.rejections) if guarded else None)
 
 
 def find_density(system: str, *, lo: int = 20, hi: int = 800,

@@ -301,6 +301,9 @@ class FaultInjector:
         # count the kills THIS injector drove (the supervisor's restart
         # counter is lifetime-per-node and lags the swap)
         self.stats["crashes"] += 1
+        guard = getattr(self.node, "guard", None)
+        if guard is not None and guard.breaker is not None:
+            guard.breaker.on_crash()    # GuardRails: open on crash signal
         self.node.supervisor.kill_backend()
 
     # ------------------------------------------------------------ arming
@@ -323,6 +326,14 @@ class FaultInjector:
         if node.supervisor is not None:
             self._saved_restart = node.supervisor.restart_delay_s
             node.supervisor.restart_delay_s = sched.restart_delay_s
+        guard = getattr(node, "guard", None)
+        if (guard is not None and guard.breaker is not None
+                and guard.policy.breaker.open_on_slow):
+            # brown-out shedding: the breaker reads the schedule's slow
+            # windows on the injector's fault clock (t=0 at start()),
+            # NOT the node's uptime clock
+            guard.breaker.set_slow_windows(sched.windows(STORAGE_SLOW),
+                                           clock=self.now)
 
         events: list[tuple[float, Callable[[], None]]] = []
         if node.supervisor is not None:
@@ -382,6 +393,9 @@ class FaultInjector:
             node.supervisor.restart_delay_s = self._saved_restart
         hooks: FaultHooks = node.fault_hooks
         hooks.ack_drop = hooks.restore_fail = hooks.guest_crash = None
+        guard = getattr(node, "guard", None)
+        if guard is not None and guard.breaker is not None:
+            guard.breaker.set_slow_windows(())   # disarm brown-out windows
 
     def __enter__(self) -> "FaultInjector":
         return self.start()

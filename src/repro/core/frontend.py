@@ -29,6 +29,7 @@ from repro.core import fabric as F
 from repro.core import metrics as M
 from repro.core.backend import (BackendCrashed, LostWriteError, NexusBackend,
                                 PrefetchHandle, PutTicket)
+from repro.core.guardrails import RetrySpec, backoff_delays
 from repro.core.hints import OutputHint
 from repro.core.storage import RemoteStorage
 from repro.core.streaming import CircularBuffer
@@ -99,14 +100,23 @@ class NexusClient:
     """boto3-compatible frontend stub (paper: 645 LoC Python)."""
 
     def __init__(self, ctx: GuestContext, backend_ref, acct: M.CycleAccount,
-                 *, max_retries: int = 3, ack_timeout_s: float = 30.0):
+                 *, max_retries: int = 3, ack_timeout_s: float = 30.0,
+                 retry: RetrySpec | None = None, breaker=None):
         self._ctx = ctx
         # `backend_ref` is a callable returning the *current* backend —
         # after a crash the supervisor swaps in a fresh one and the stub
         # transparently retries (§5).
         self._backend_ref = backend_ref
         self._acct = acct
-        self._max_retries = max_retries
+        #: the bounded retry budget every loop below draws from
+        #: (GuardRails plane); `max_retries` alone keeps the legacy
+        #: fixed-attempt shape with exponential backoff defaults.
+        self._retry_spec = (retry if retry is not None
+                            else RetrySpec(max_attempts=max_retries))
+        #: optional `guardrails.CircuitBreaker` over the shared backend:
+        #: every retried RPC reports failure/success so a failure burst
+        #: opens admission upstream.
+        self._breaker = breaker
         #: how long a blocking PUT waits for the durable ack before the
         #: invocation is failed (overridable per WorkerNode).
         self.ack_timeout_s = ack_timeout_s
@@ -120,21 +130,32 @@ class NexusClient:
         nominal = int(nbytes * self._backend.remote.cost_scale)
         F.remoted_op_cost(sdk, nominal).charge(self._acct)
 
-    def _retry(self, fn):
+    def _retry(self, fn, key: str = ""):
         """Transparent retry across backend crashes AND transient
         storage errors (§5): both surface as `ConnectionError`s, both
         are converted into latency by re-driving the request against
-        the (possibly restarted) current backend."""
+        the (possibly restarted) current backend. Attempts and sleeps
+        draw from the bounded `RetrySpec` budget — exponential backoff
+        with deterministic per-key jitter, never an unbounded loop."""
+        delays = backoff_delays(self._retry_spec,
+                                key or self._ctx.invocation_id)
         last: BaseException | None = None
-        for _ in range(self._max_retries):
+        for i, d in enumerate(delays):
             try:
-                return fn()
+                out = fn()
             except LostWriteError:
                 raise                           # needs the payload again
             except ConnectionError as e:        # crash or transient
+                if self._breaker is not None:
+                    self._breaker.record_failure()
                 last = e
-                threading.Event().wait(0.002)   # supervisor restart window
-        raise last if last else RuntimeError("retry exhausted")
+                if i + 1 < len(delays):
+                    threading.Event().wait(d)   # backoff before redrive
+                continue
+            if self._breaker is not None:
+                self._breaker.record_success()
+            return out
+        raise last if last else RuntimeError("retry budget exhausted")
 
     def wait_ack(self, ticket: PutTicket, timeout_s: float | None = None):
         """Block until a durable write's ack arrives. A lost ack (the
@@ -145,20 +166,28 @@ class NexusClient:
         has no dedup record — the redrive then raises `LostWriteError`
         and the caller must re-submit the payload."""
         timeout = self.ack_timeout_s if timeout_s is None else timeout_s
+        key = f"{ticket.invocation_id}:ack"
+        delays = backoff_delays(self._retry_spec, key)
         last: BaseException | None = None
-        for _ in range(self._max_retries):
+        for d in delays:
             try:
-                return ticket.future.result(timeout=timeout)
+                out = ticket.future.result(timeout=timeout)
             except LostWriteError:
                 raise                        # needs the payload again
             except (_FutureTimeout, TimeoutError, ConnectionError) as e:
+                if self._breaker is not None:
+                    self._breaker.record_failure()
                 last = e
                 if isinstance(e, BackendCrashed):
-                    threading.Event().wait(0.002)  # restart window
+                    threading.Event().wait(d)    # restart window
                 t = ticket
                 ticket = self._retry(lambda: self._backend.redrive_put(
-                    t.tenant, t.cred, t.out, t.invocation_id))
-        raise last if last else RuntimeError("ack retry exhausted")
+                    t.tenant, t.cred, t.out, t.invocation_id), key)
+                continue
+            if self._breaker is not None:
+                self._breaker.record_success()
+            return out
+        raise last if last else RuntimeError("ack retry budget exhausted")
 
     # ------------------------------------------------------------- boto3 API
 

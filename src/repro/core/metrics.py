@@ -28,6 +28,7 @@ VM_EXIT = "vm_exit"            # guest->host trap (virtio kick, MMIO, ...)
 VCPU_WAKEUP = "vcpu_wakeup"    # host wakes a blocked vCPU
 CTRL_MSG = "ctrl_msg"          # vsock control-plane message (Nexus path)
 RETRY = "retry"                # FaultPlane recovery redrive (§5)
+SHED = "shed"                  # GuardRails typed rejection (overload plane)
 
 
 class CycleAccount:

@@ -34,6 +34,7 @@ from dataclasses import dataclass, field
 from typing import Any
 
 from repro.core import fabric as F
+from repro.core import guardrails as GR
 from repro.core import metrics as M
 from repro.core.analysis.diag import (PC_CONTRACT, PC_DUP_KEY,
                                       ProfileContractError)
@@ -44,7 +45,7 @@ from repro.core.frontend import (BaselineClient, GuestContext,
 from repro.core.hints import extract_hints, make_event
 from repro.core.lifecycle import InstancePool
 from repro.core.plan import (SYSTEMS, PhasePlan, PlanProgram, SystemSpec,
-                             compile_program)
+                             compile_program, unloaded_latency)
 from repro.core.transport import TRANSPORTS
 from repro.core.storage import FaultPlan, ObjectStore, RemoteStorage
 from repro.core.supervisor import Supervisor
@@ -422,7 +423,11 @@ class WorkerNode:
                  max_instances_per_fn: int = 64,
                  writeback_ack_timeout_s: float = 30.0,
                  plan_stall_timeout_s: float = 120.0,
-                 static_check: bool = True):
+                 static_check: bool = True,
+                 guardrails: "GR.GuardrailPolicy | None" = None,
+                 client_max_retries: int = 3,
+                 retry_backoff_base_s: float = 0.002,
+                 connect_timeout_s: float = 30.0):
         self.spec = SYSTEMS[system]
         #: registration-time ProfileInfer gate: `deploy` statically
         #: verifies each handler against its declared IOProfile and
@@ -438,6 +443,37 @@ class WorkerNode:
         self.writeback_ack_timeout_s = writeback_ack_timeout_s
         #: upper bound on any one plan walk / guest observation wait
         self.plan_stall_timeout_s = plan_stall_timeout_s
+        #: client retry budget per storage RPC — the bounded attempt
+        #: count the `NexusClient` loops draw from (was a hardcoded
+        #: ``max_retries=3`` inside the stub). A `guardrails.RetrySpec`
+        #: on the policy overrides both retry knobs wholesale.
+        self.client_max_retries = client_max_retries
+        #: first backoff sleep after a failed RPC attempt; doubles per
+        #: retry with deterministic jitter (was a fixed 2 ms
+        #: ``Event().wait`` in the stub's retry loop).
+        self.retry_backoff_base_s = retry_backoff_base_s
+        #: deadline for the ingress prefetch — per-VM storage connect +
+        #: first hinted GET — to land (was pinned to
+        #: ``plan_stall_timeout_s``).
+        self.connect_timeout_s = connect_timeout_s
+        #: GuardRails policy plane (overload control, §GuardRails):
+        #: admission, deadlines, retry budgets, breaker, drain — one
+        #: `GuardrailPolicy` value, interpreted here over the node's
+        #: uptime clock and by `des.DensitySimulator` in virtual time.
+        #: The `GuardState` always exists (empty policy => admit all)
+        #: so `drain()`/`resume()` work on any node.
+        self.guardrails = (guardrails if guardrails is not None
+                           else GR.GuardrailPolicy())
+        self._t0 = time.monotonic()
+        self.guard = GR.GuardState(
+            self.guardrails, clock=lambda: time.monotonic() - self._t0)
+        self._retry_spec = (
+            self.guardrails.retry if self.guardrails.retry is not None
+            else GR.RetrySpec(max_attempts=client_max_retries,
+                              backoff_base_s=retry_backoff_base_s))
+        self._unloaded: dict[str, float] = {}
+        self._inflight = 0
+        self._quiesce = threading.Condition()
         #: FaultPlane taps — `faults.FaultInjector` arms these from a
         #: `FaultSchedule`; every component reads them at call time, so
         #: the injection survives supervisor backend restarts.
@@ -569,11 +605,29 @@ class WorkerNode:
         and PUT idempotency key): a caller re-driving a failed
         invocation under the same id gets at-least-once semantics with
         byte-identical durable state — the chaos harness's contract.
+
+        GuardRails admission runs here, before any work: a shed
+        arrival raises a typed `guardrails.Rejected` (or
+        `DeadlineExceeded` under deadline propagation) atomically —
+        no instance acquired, no bytes moved, zero partial PUTs. A
+        "queue" verdict paces the invocation by the bucket delay; the
+        recorded latency includes the wait, exactly as in the DES.
         """
         if inv_id is None:
             inv_id = (f"{fn_name}-{next(self._inv_counter)}"
                       f"-{uuid.uuid4().hex[:6]}")
         w = self._workloads[fn_name]
+        u = None
+        if not self.guard.policy.is_empty:
+            u = self._unloaded.get(fn_name)
+            if u is None:
+                u = self._unloaded[fn_name] = unloaded_latency(self.spec, w)
+        verdict = self.guard.decide(fn_name, fn_name, u)
+        if verdict.action == "shed":
+            self.acct.cross(M.SHED)
+            exc = (GR.DeadlineExceeded if verdict.reason == "deadline"
+                   else GR.Rejected)
+            raise exc(verdict.reason, retry_after_s=verdict.delay_s)
         inputs = []
         for i in range(len(w.profile.gets)):
             k = input_key if (input_key is not None and i == 0) \
@@ -584,10 +638,34 @@ class WorkerNode:
         outputs = [("out", f"{inv_id}-out" + ("" if k == 0 else f"-{k}"))
                    for k in range(len(w.profile.puts))]
         event = make_event(inputs, outputs)
-        return self._ingress.submit(self._run, w, inv_id, event)
+        with self._quiesce:
+            self._inflight += 1
+        try:
+            return self._ingress.submit(self._run, w, inv_id, event,
+                                        verdict.delay_s)
+        except BaseException:
+            with self._quiesce:
+                self._inflight -= 1
+                self._quiesce.notify_all()
+            raise
 
-    def _run(self, w: Workload, inv_id: str, event: dict) -> InvocationResult:
+    def _run(self, w: Workload, inv_id: str, event: dict,
+             pace_s: float = 0.0) -> InvocationResult:
         t0 = time.monotonic()
+        if pace_s > 0.0:
+            # admission pacing: the bucket said "queue" — latency is
+            # measured from submission, so the wait shows up in it
+            time.sleep(pace_s)
+        try:
+            return self._run_inner(w, inv_id, event, t0)
+        finally:
+            with self._quiesce:
+                self._inflight -= 1
+                if self._inflight == 0:
+                    self._quiesce.notify_all()
+
+    def _run_inner(self, w: Workload, inv_id: str, event: dict,
+                   t0: float) -> InvocationResult:
         pool = self._pools[w.name]
         cold_expected = not pool.has_warm()
         ctx = _Invocation(w, inv_id, event, cold_expected, t0)
@@ -642,9 +720,16 @@ class WorkerNode:
                             lat)
         etags = tuple(guest.etags.get(k)
                       for k in range(len(profile.puts)))
-        return InvocationResult(inv_id, w.name, ctx.cold, lat, bd,
-                                etags[0] if etags else None, etags,
-                                guest.handler_result)
+        res = InvocationResult(inv_id, w.name, ctx.cold, lat, bd,
+                               etags[0] if etags else None, etags,
+                               guest.handler_result)
+        dl = self.guard.deadline_for(w.name, self._unloaded.get(w.name))
+        if dl is not None and lat > dl:
+            # the work IS durably done (at-least-once holds) — only the
+            # response is typed as late; the full result rides along.
+            self.guard.note_violation()
+            raise GR.DeadlineExceeded("deadline", result=res)
+        return res
 
     def _make_client(self, ctx: _Invocation) -> None:
         spec = self.spec
@@ -661,7 +746,9 @@ class WorkerNode:
                                     invocation_id=ctx.inv_id)
             ctx.client = NexusClient(
                 ctx.gctx, lambda: self.supervisor.backend, self.acct,
-                ack_timeout_s=self.writeback_ack_timeout_s)
+                max_retries=self.client_max_retries,
+                ack_timeout_s=self.writeback_ack_timeout_s,
+                retry=self._retry_spec, breaker=self.guard.breaker)
 
     # --------------------------------------------------------- group actions
     #
@@ -696,7 +783,7 @@ class WorkerNode:
             handle = self.backend.prefetch(
                 inv.w.name, self._creds[inv.w.name], inv.inputs[i])
             inv.guest.set_prefetch(handle)
-            handle.wait(timeout=self.plan_stall_timeout_s)
+            handle.wait(timeout=self.connect_timeout_s)
         return act
 
     def _make_write_action(self, k: int, group: str):
@@ -745,7 +832,33 @@ class WorkerNode:
         F.rpc_ingress_cost(in_guest=not self.spec.offload_rpc,
                            nbytes=1024).charge(self.acct)
 
-    # ------------------------------------------------------------ teardown
+    # ------------------------------------------------------- drain / teardown
+
+    def drain(self, timeout_s: float | None = None) -> None:
+        """Graceful quiesce: stop admitting (new `invoke`s raise typed
+        `Rejected("drain")`), then wait for every in-flight invocation
+        to finish. Async write chains are covered — each invocation's
+        write groups gate its response on the durable ack, so
+        ``inflight == 0`` implies every chain is flushed. The node can
+        then be handed off / restarted; `resume()` reopens admission.
+        Raises `TimeoutError` if in-flight work outlives `timeout_s`.
+        """
+        self.guard.begin_drain()
+        deadline = (None if timeout_s is None
+                    else time.monotonic() + timeout_s)
+        with self._quiesce:
+            while self._inflight > 0:
+                left = (None if deadline is None
+                        else deadline - time.monotonic())
+                if left is not None and left <= 0.0:
+                    raise TimeoutError(
+                        f"drain: {self._inflight} invocations still "
+                        f"in flight after {timeout_s}s")
+                self._quiesce.wait(left)
+
+    def resume(self) -> None:
+        """Reopen admission after a `drain()`."""
+        self.guard.end_drain()
 
     def shutdown(self) -> None:
         self._ingress.shutdown(wait=True)

@@ -158,6 +158,15 @@ def merge_streams(arrivals: dict[str, list[float]]
     return [(t, names[i]) for t, i in zip(ts, fns)]
 
 
+def offered_load(arrivals: dict[str, list[float]],
+                 duration_s: float) -> float:
+    """Total offered load (invocations/s) of a per-function arrival map
+    over ``[0, duration_s)`` — the x-axis of the overload sweeps."""
+    if duration_s <= 0.0:
+        return 0.0
+    return sum(len(v) for v in arrivals.values()) / duration_s
+
+
 def interarrival_cv(arrivals: list[float]) -> float:
     """Coefficient of variation of inter-arrivals (burstiness check)."""
     if len(arrivals) < 3:

@@ -25,8 +25,9 @@ Invariants asserted (the crash-only contract):
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
+from repro.core import guardrails as GR
 from repro.core.des import DensitySimulator, SimResult
 from repro.core.faults import FaultInjector, FaultSchedule
 from repro.core.runtime import WorkerNode
@@ -166,6 +167,89 @@ def run_threaded(system: str, schedule: FaultSchedule | None, *,
         node.shutdown()
 
 
+def run_threaded_guarded(system: str, schedule: FaultSchedule | None,
+                         policy: GR.GuardrailPolicy, *,
+                         n_invocations: int = 6, spacing_s: float = 0.0,
+                         max_attempts: int = 40,
+                         ack_timeout_s: float = 0.5) -> GuardedOutcome:
+    """The guarded twin of `run_threaded`: same functions, same
+    invocation ids, but the node enforces `policy` and the caller is a
+    well-behaved client — a typed rejection is honored (sleep out
+    ``retry_after_s``) and the SAME invocation id is re-driven until it
+    succeeds. Shed atomicity is asserted inline: an invocation whose
+    FIRST contact with the node is a rejection must have zero partial
+    PUTs in the out bucket (nothing ran, so nothing can have leaked)."""
+    node = WorkerNode(system, writeback_ack_timeout_s=ack_timeout_s,
+                      plan_stall_timeout_s=30.0, guardrails=policy)
+    suite = chaos_suite()
+    rejections: dict[str, int] = {}
+    late = 0
+    try:
+        for w in suite.values():
+            node.deploy(w)
+            node.seed_input(w.name)
+        names = list(suite)
+        injector = None
+        if schedule is not None and not schedule.is_empty:
+            injector = FaultInjector(node, schedule).start()
+        try:
+            responses: dict[str, int] = {}
+            attempts: dict[str, int] = {}
+            t0 = time.monotonic()
+            for i in range(n_invocations):
+                fn = names[i % len(names)]
+                inv_id = f"chaos-{i}"
+                attempts[inv_id] = 0
+                first_contact = True
+                while True:
+                    attempts[inv_id] += 1
+                    assert attempts[inv_id] <= max_attempts, \
+                        f"{inv_id}: retry budget exhausted under policy"
+                    try:
+                        fut = node.invoke(fn, inv_id=inv_id)
+                    except GR.GuardrailRejection as rej:
+                        # shed BEFORE any work: typed, atomic
+                        assert rej.reason in GR.SHED_REASONS
+                        rejections[inv_id] = rejections.get(inv_id, 0) + 1
+                        if first_contact:
+                            partial = [k for k in node.store.
+                                       list_bucket("out")
+                                       if k.startswith(inv_id)]
+                            assert not partial, \
+                                f"{inv_id}: shed left partial PUTs " \
+                                f"{partial}"
+                        time.sleep(max(rej.retry_after_s, 0.02))
+                        continue
+                    first_contact = False
+                    try:
+                        res = fut.result(timeout=60)
+                    except GR.DeadlineExceeded as dx:
+                        # completed past deadline: the work IS durably
+                        # done (at-least-once holds); only the response
+                        # is typed as late
+                        assert dx.result is not None
+                        late += 1
+                        res = dx.result
+                    except Exception:
+                        continue          # fault-induced: re-drive
+                    assert all(e is not None for e in res.output_etags)
+                    responses[inv_id] = responses.get(inv_id, 0) + 1
+                    break
+                if spacing_s:
+                    time.sleep(spacing_s)
+            latency_total = time.monotonic() - t0
+        finally:
+            if injector is not None:
+                injector.stop()
+        stats = dict(injector.stats) if injector is not None else {}
+        return GuardedOutcome(
+            ThreadedOutcome(node.store.list_bucket("out"), responses,
+                            attempts, stats, latency_total),
+            rejections, late, node.guard.snapshot())
+    finally:
+        node.shutdown()
+
+
 def check_threaded_invariants(oracle: ThreadedOutcome,
                               faulted: ThreadedOutcome,
                               label: str = "") -> None:
@@ -179,3 +263,83 @@ def check_threaded_invariants(oracle: ThreadedOutcome,
     assert all(v == 1 for v in faulted.responses.values()), (
         f"{label}: responses delivered != once: {faulted.responses}")
     assert faulted.responses.keys() == oracle.responses.keys()
+
+
+# ----------------------------------------- guarded (GuardRails, ISSUE 8)
+
+#: the chaos policy plane: admission past-the-knee (per-tenant bucket
+#: well under the overloaded arrival rate), bounded pacing queue, a
+#: deadline, and a breaker that opens on the schedule's crash signals.
+#: ``max_queue_s`` stays far below the DES's 30 s drain tail so every
+#: arrival resolves to exactly one outcome inside the run.
+OVERLOAD_POLICY = GR.GuardrailPolicy(
+    admission=GR.AdmissionSpec(rate_per_s=2.0, burst=3.0, max_queue_s=1.0),
+    deadline_factor=12.0,
+    breaker=GR.BreakerSpec(failure_threshold=4, window_s=1.0, open_s=0.4),
+)
+
+
+@dataclass
+class GuardedOutcome:
+    """`run_threaded_guarded`'s result: the plain outcome plus the
+    typed-rejection ledger and the guard's own counters."""
+
+    outcome: ThreadedOutcome
+    rejections: dict[str, int]           # inv_id -> typed rejections seen
+    late: int                            # DeadlineExceeded-with-result
+    guard: dict = field(default_factory=dict)
+
+    @property
+    def total_rejections(self) -> int:
+        return sum(self.rejections.values())
+
+
+def run_des_guarded(system: str, schedule: FaultSchedule | None,
+                    policy: GR.GuardrailPolicy = OVERLOAD_POLICY, *,
+                    engine: str = "program", n: int = 30, seed: int = 2,
+                    duration_s: float = 10.0,
+                    mean_rate: float = 4.0) -> SimResult:
+    """`run_des` with the offered load pushed past the admission knee
+    (``mean_rate`` ~2.5x the plain harness) and `policy` enforced."""
+    sched = schedule if schedule is not None else FaultSchedule.empty()
+    return DensitySimulator(system, n, seed=seed, duration_s=duration_s,
+                            warmup_s=0.0, engine=engine, faults=sched,
+                            mean_rate=mean_rate, guardrails=policy).run()
+
+
+def check_guarded_invariants(oracle: SimResult, faulted: SimResult,
+                             label: str = "") -> None:
+    """The overload chaos contract: under combined shedding + faults,
+    every arrival resolves to EXACTLY ONE outcome — a response
+    delivered once, or a typed rejection with zero partial PUTs — and
+    the two runs cover the same arrival population. Per-key rejection
+    *reasons* may differ (a breaker shed does not debit the bucket, so
+    bucket trajectories legitimately diverge after the first
+    fault-induced shed); the outcome partition itself may shift between
+    shed and served, but nothing is lost and nothing runs twice."""
+    for name, r in (("oracle", oracle), ("faulted", faulted)):
+        assert r.responses is not None and r.rejections is not None, \
+            f"{label}/{name}: guarded run missing ledgers"
+        dup = {k: v for k, v in r.responses.items() if v != 1}
+        assert not dup, f"{label}/{name}: responses != once: {dup}"
+        both = r.responses.keys() & r.rejections.keys()
+        assert not both, (f"{label}/{name}: keys with two outcomes "
+                          f"(served AND shed): {both}")
+        assert all(v in GR.SHED_REASONS for v in r.rejections.values())
+        assert r.rejected == sum(r.shed.values()) == len(r.rejections), \
+            f"{label}/{name}: shed ledgers disagree"
+    o_keys = oracle.responses.keys() | oracle.rejections.keys()
+    f_keys = faulted.responses.keys() | faulted.rejections.keys()
+    assert o_keys == f_keys, (
+        f"{label}: outcome coverage diverged "
+        f"(lost: {o_keys - f_keys}, phantom: {f_keys - o_keys})")
+    # served in both worlds -> identical logical PUT sets (byte-level
+    # equality is the threaded harness's half of the contract)
+    for key in oracle.responses.keys() & faulted.responses.keys():
+        assert faulted.put_ledger.get(key) == oracle.put_ledger.get(key), \
+            f"{label}: logical PUTs of {key} diverged"
+    # shed -> atomic: the key never reached execution, so it cannot
+    # have opened a PUT ledger entry (no partial writes to clean up)
+    for key in faulted.rejections:
+        assert not faulted.put_ledger.get(key), \
+            f"{label}: shed {key} left partial PUTs"

@@ -39,9 +39,12 @@ from repro.core.storage import ObjectStore, RemoteStorage
 from repro.core.supervisor import Supervisor
 from repro.core.workloads import chaos_suite
 from tests._hypothesis_compat import HealthCheck, given, settings, st
+from repro.core import guardrails as GR
 from tests.chaos import (ALL_SYSTEMS, check_des_invariants,
-                         check_threaded_invariants, run_des, run_threaded,
-                         schedule_from_seed)
+                         check_guarded_invariants,
+                         check_threaded_invariants, run_des,
+                         run_des_guarded, run_threaded,
+                         run_threaded_guarded, schedule_from_seed)
 
 COMMON = dict(deadline=None,
               suppress_health_check=[HealthCheck.too_slow])
@@ -311,6 +314,96 @@ class TestThreadedChaosDifferential:
         tf = run_threaded("nexus", thr_sched)
         assert tf.responses.keys() == to.responses.keys()
         assert tf.stats.get("crashes", 0) >= 1
+
+
+# ------------------------------------- combined overload + faults (ISSUE 8)
+
+class TestGuardedChaosDifferential:
+    """The GuardRails extension of the chaos contract: offered load is
+    pushed PAST the admission knee (so the policy genuinely sheds)
+    while hypothesis-generated fault schedules play. The invariant
+    weakens exactly where it must — a fault may flip an arrival between
+    served and shed — but never further: every arrival resolves to one
+    outcome, served keys stay ledger-identical, shed keys leave zero
+    partial PUTs."""
+
+    _oracles: dict = {}
+
+    @classmethod
+    def oracle(cls, system):
+        # same policy, same overloaded arrivals, empty schedule
+        if system not in cls._oracles:
+            cls._oracles[system] = run_des_guarded(system, None)
+        return cls._oracles[system]
+
+    @settings(max_examples=CHAOS_EXAMPLES, **COMMON)
+    @given(st.integers(min_value=0, max_value=10_000),
+           st.floats(min_value=0.5, max_value=2.0))
+    def test_overload_plus_faults_all_variants(self, seed, intensity):
+        schedule = schedule_from_seed(seed, 10.0, intensity=intensity,
+                                      restart_delay_s=0.3)
+        for system in ALL_SYSTEMS:
+            faulted = run_des_guarded(system, schedule)
+            check_guarded_invariants(self.oracle(system), faulted,
+                                     f"{system}/{seed}")
+
+    def test_slow_window_past_the_knee(self):
+        """The named scenario: a storage_slow brown-out plus a crash
+        while arrivals run past the admission knee. Shedding must be
+        real (the knee was crossed), the outcome partition exact, and
+        both DES engines must agree on it bit for bit."""
+        sched = FaultSchedule(
+            (FaultSpec(STORAGE_SLOW, 3.0, 3.0, factor=8.0),
+             FaultSpec(BACKEND_CRASH, 6.5)),
+            restart_delay_s=0.3)
+        for system in ("nexus", "baseline"):
+            faulted = run_des_guarded(system, sched)
+            assert sum(faulted.shed.values()) > 0, \
+                f"{system}: the overload never crossed the knee"
+            check_guarded_invariants(self.oracle(system), faulted,
+                                     f"{system}/slow+knee")
+        a = run_des_guarded("nexus", sched, engine="program")
+        b = run_des_guarded("nexus", sched, engine="legacy")
+        assert a.latencies == b.latencies
+        assert a.shed == b.shed
+        assert a.rejections == b.rejections
+
+    def test_breaker_sheds_ride_the_crash_window(self):
+        """With the breaker armed, arrivals during the post-crash open
+        window shed as "breaker" instead of piling onto the restarting
+        daemon — and the rest of the run still meets the contract."""
+        sched = FaultSchedule((FaultSpec(BACKEND_CRASH, 4.0),),
+                              restart_delay_s=0.3)
+        faulted = run_des_guarded("nexus", sched)
+        assert faulted.shed["breaker"] > 0
+        check_guarded_invariants(self.oracle("nexus"), faulted,
+                                 "nexus/breaker")
+
+
+class TestThreadedGuardedOverload:
+    """The threaded half of the combined contract: a back-to-back burst
+    past a tight admission bucket, with a storage_slow window live. A
+    well-behaved caller honoring the typed retry-after recovers every
+    invocation — so the final durable state is byte-identical to the
+    unguarded fault-free oracle even though real shedding happened in
+    between."""
+
+    def test_sheds_typed_then_recovers_byte_identical(self):
+        # the harness drives invocations sequentially, so the knee must
+        # sit below the sequential pace: 1 token/s with a single-token
+        # burst sheds every back-to-back arrival until its refill lands
+        policy = GR.GuardrailPolicy(admission=GR.AdmissionSpec(
+            rate_per_s=1.0, burst=1.0, max_queue_s=0.1))
+        schedule = FaultSchedule(
+            (FaultSpec(STORAGE_SLOW, 0.0, 0.6, factor=4.0),))
+        oracle = run_threaded("nexus", None)
+        guarded = run_threaded_guarded("nexus", schedule, policy)
+        assert guarded.total_rejections > 0, "the burst never shed"
+        assert guarded.guard["shed"]["queue_full"] > 0
+        check_threaded_invariants(oracle, guarded.outcome,
+                                  "nexus/guarded")
+        # every caller ended with exactly one success despite the sheds
+        assert all(v == 1 for v in guarded.outcome.responses.values())
 
 
 # ------------------------------------------------- targeted seam tests

@@ -3,8 +3,8 @@ satellite coverage. All timing goes through an injectable clock; no
 test here sleeps."""
 import pytest
 
-from repro.core.ratelimit import (DEFAULT_RATE_MBPS, MBPS, ClientLimiter,
-                                  TokenBucket)
+from repro.core.ratelimit import (DEFAULT_MAX_DEBT_S, DEFAULT_RATE_MBPS,
+                                  MBPS, ClientLimiter, TokenBucket)
 
 
 class FakeClock:
@@ -57,6 +57,70 @@ class TestTokenBucket:
         d = b.throttle(50, sleep=slept.append)
         assert d == pytest.approx(0.5)
         assert slept == [d]
+
+
+class TestReservation:
+    """GuardRails hardening (ISSUE 8 satellite): cancellable
+    reservations and the debt clamp — the admission plane sheds *after*
+    reserving, so an aborted debit must refund exactly once, and no
+    burst may push the bucket into unbounded starvation debt."""
+
+    def test_cancel_refunds_the_debit(self):
+        clk = FakeClock()
+        b = TokenBucket(100.0, burst_bytes=100.0, clock=clk)
+        res = b.reserve_tx(100)
+        assert res.delay == 0.0
+        assert not res.cancelled
+        res.cancel()
+        assert res.cancelled
+        # the full burst is back: a same-instant reserve pays no delay
+        assert b.reserve(100) == 0.0
+
+    def test_cancel_is_idempotent(self):
+        clk = FakeClock()
+        b = TokenBucket(100.0, burst_bytes=100.0, clock=clk)
+        res = b.reserve_tx(60)
+        res.cancel()
+        res.cancel()                      # double-cancel: no over-credit
+        assert b.reserve(100) == 0.0      # exactly the burst, not 160
+        assert b.reserve(60) == pytest.approx(0.6)
+
+    def test_stale_cancel_refund_is_capped_at_burst(self):
+        """A cancel landing after refill already restored the bucket
+        must not push tokens past the burst capacity."""
+        clk = FakeClock()
+        b = TokenBucket(100.0, burst_bytes=100.0, clock=clk)
+        res = b.reserve_tx(50)
+        clk.t = 10.0
+        assert b.reserve(0) == 0.0        # refill alone restores the burst
+        res.cancel()                      # stale refund: capped
+        assert b.reserve(100) == 0.0
+        assert b.reserve(1) == pytest.approx(0.01)   # 100, not 150, granted
+
+    def test_debt_is_clamped_at_max_debt_seconds(self):
+        clk = FakeClock()
+        b = TokenBucket(100.0, burst_bytes=100.0, clock=clk, max_debt_s=2.0)
+        # a grossly oversized reservation observes at most the clamp...
+        assert b.reserve(100_000) == pytest.approx(2.0)
+        # ...and so does everyone piling on behind it
+        assert b.reserve(100) == pytest.approx(2.0)
+
+    def test_clamped_debt_drains_within_the_window(self):
+        clk = FakeClock()
+        b = TokenBucket(100.0, burst_bytes=100.0, clock=clk, max_debt_s=2.0)
+        b.reserve(100_000)
+        clk.t = 2.0                       # one max_debt_s later: debt gone
+        assert b.reserve(100) == pytest.approx(1.0)
+
+    def test_default_clamp_is_sixty_seconds(self):
+        b = TokenBucket(100.0, clock=FakeClock())
+        assert b.max_debt_s == DEFAULT_MAX_DEBT_S == 60.0
+
+    def test_reserve_delegates_to_reserve_tx(self):
+        clk = FakeClock()
+        b1 = TokenBucket(100.0, burst_bytes=100.0, clock=clk)
+        b2 = TokenBucket(100.0, burst_bytes=100.0, clock=clk)
+        assert b1.reserve(150) == b2.reserve_tx(150).delay
 
 
 class TestClientLimiter:
