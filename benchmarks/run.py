@@ -22,8 +22,8 @@ def main() -> None:
                     help="comma-separated subset of benchmark names")
     args = ap.parse_args()
 
-    from benchmarks import (cold_start, cpu_cycles, density, faasm_gap,
-                            fault_tolerance, hlo_analysis,
+    from benchmarks import (cluster, cold_start, cpu_cycles, density,
+                            faasm_gap, fault_tolerance, hlo_analysis,
                             memory_footprint, ml_serving, model_flops,
                             overload, sim_throughput, warm_path)
 
@@ -43,6 +43,8 @@ def main() -> None:
         ("fault_tolerance (§5, FaultPlane)", fault_tolerance.run,
          {"quick": args.quick}),
         ("overload (GuardRails degradation curves)", overload.run,
+         {"quick": args.quick}),
+        ("cluster (ClusterSim fleet dispatch sweep)", cluster.run,
          {"quick": args.quick}),
         ("faasm_gap (Fig 14)", faasm_gap.run, {}),
     ]

@@ -569,6 +569,7 @@ _R_BEW = 8         # node backend waiter FIFO
 _R_LATS = 9        # the function's latency list (appended at respond)
 _R_INST = 10       # SimInstance
 _R_T = 11          # arrival time
+_R_OWN = 12        # owning DensitySimulator (shared-loop hot routing)
 
 # Event codes: phase index | static flags. The per-phase *code* is
 # precomputed in the template (`base_code`), so barrier and slot-drop
@@ -608,6 +609,7 @@ _C_ENDS = 7        # per-phase completion times (solo replay)
 _C_READY = 8       # per-phase ready times (= max parent end, or t_arr)
 _C_BND = 9         # (prog, tmpl) bundle
 _C_RELDONE = 10    # release barrier already fired
+_C_OWN = 11        # owning DensitySimulator (shared-loop hot routing)
 
 # phase opcodes: what starting a ready phase does. Folded statically
 # per (program, duration vector) — the zero-duration test, the resource
@@ -918,7 +920,9 @@ class DensitySimulator:
                  engine: str = "hot",
                  faults: "FA.FaultSchedule | None" = None,
                  guardrails: "GR.GuardrailPolicy | None" = None,
-                 verify_plans: bool = False):
+                 verify_plans: bool = False,
+                 loop: "EventLoop | None" = None,
+                 gen_arrivals: bool = True):
         # "program" is the PR-3 name of the uncompressed PlanProgram
         # engine, kept as an alias so existing callers measure exactly
         # what they always measured.
@@ -966,9 +970,21 @@ class DensitySimulator:
         self.n_functions = n_functions
         self.duration_s = duration_s
         self.warmup_s = warmup_s
-        self.loop = EventLoop(classic=(engine == "legacy"))
-        if engine == "calendar":
-            self.loop.cal = CalendarQueue()
+        #: shared-loop mode (ClusterSimulator): several sims multiplex
+        #: one EventLoop/virtual clock. The owner routes hot records to
+        #: each sim via the _R_OWN/_C_OWN slot; keep-alive retirements
+        #: go through the heap (identical (t, seq) order — the timer
+        #: deque is a single-sim perf shortcut, not a semantic).
+        self._ext_loop = loop is not None
+        if self._ext_loop:
+            if engine == "legacy":
+                raise ValueError(
+                    "legacy engine cannot share an external loop")
+            self.loop = loop
+        else:
+            self.loop = EventLoop(classic=(engine == "legacy"))
+            if engine == "calendar":
+                self.loop.cal = CalendarQueue()
         #: events after this instant can never run (`run` drains up to
         #: it); the program engine skips scheduling beyond it
         self._horizon = _INF
@@ -1004,11 +1020,14 @@ class DensitySimulator:
                          for f in self.functions}
 
         self.pattern = W.resolve_pattern(arrival_pattern)
-        specs = sample_rates(self.functions, seed, mean_rate=mean_rate,
-                             sigma=rate_sigma)
-        self.arrivals = {s.function: generate_arrivals(
-                             s, duration_s, seed, pattern=self.pattern)
-                         for s in specs}
+        if gen_arrivals:
+            specs = sample_rates(self.functions, seed, mean_rate=mean_rate,
+                                 sigma=rate_sigma)
+            self.arrivals = {s.function: generate_arrivals(
+                                 s, duration_s, seed, pattern=self.pattern)
+                             for s in specs}
+        else:   # externally driven (cluster member): no local stream
+            self.arrivals = {}
 
         self.idle: dict[str, list[SimInstance]] = {f: []
                                                    for f in self.functions}
@@ -1040,9 +1059,11 @@ class DensitySimulator:
 
         # sentinel-record handler + keep-alive timer source: the loop
         # dispatches hot events and retirements identically to _run_hot
-        self.loop.hot = self._hot
-        self.loop.timerq = self._retq
-        self.loop.timer_cb = self._retire
+        # (a shared loop keeps the owner's router instead)
+        if not self._ext_loop:
+            self.loop.hot = self._hot
+            self.loop.timerq = self._retq
+            self.loop.timer_cb = self._retire
 
     # ----------------------------------------------------------- cost model
 
@@ -1155,7 +1176,13 @@ class DensitySimulator:
             t = loop.now + self.KEEPALIVE_S
             if t > self._horizon:
                 return  # unobservable: the loop drains before it fires
-            loop.sched_timer(t, inst, inst.expire_seq)
+            if self._ext_loop:
+                # shared loop: the timer deque belongs to no single sim,
+                # so retirements ride the heap — one seq either way, so
+                # the global (t, seq) event order is unchanged
+                loop.at(t, self._retire, inst, inst.expire_seq)
+            else:
+                loop.sched_timer(t, inst, inst.expire_seq)
         else:           # pre-refactor: keep-alive timers in the heap
             loop.after(self.KEEPALIVE_S, self._retire, inst,
                        inst.expire_seq)
@@ -1247,7 +1274,7 @@ class DensitySimulator:
                     return
             run = [list(tmpl[0]), tmpl[2], tmpl[3], tmpl[4], tmpl[5],
                    node.cpu_hot, node.cpu_wait, node.be_hot, node.be_wait,
-                   rec[_F_LATS], inst, t_arr]
+                   rec[_F_LATS], inst, t_arr, self]
             for c in tmpl[6]:              # root codes: zero-indegree
                 self._start(run, c)
         else:
@@ -1304,7 +1331,7 @@ class DensitySimulator:
         cpu[0] += ct[3]
         node.be_hot[0] += ct[4]
         crun = [inst, t_arr, lats, node, ct[3], ct[4], False,
-                ends, ready, bundle, False]
+                ends, ready, bundle, False, self]
         node.cruns.append(crun)
         self.compressed_invocations += 1
         loop = self.loop
@@ -1362,7 +1389,7 @@ class DensitySimulator:
             need = [0] * n
             run = [need, tmpl[2], tmpl[3], tmpl[4], tmpl[5],
                    cpu, node.cpu_wait, be, node.be_wait,
-                   crun[_C_LATS], crun[_C_INST], crun[_C_T]]
+                   crun[_C_LATS], crun[_C_INST], crun[_C_T], self]
             cores_held = 0
             for i in range(n):
                 e = ends[i]
@@ -1693,7 +1720,7 @@ class DensitySimulator:
                             bstate[0] += ct[4]
                             crun = [inst, now, rec[4], node, ct[3],
                                     ct[4], False, ends, ready, bundle,
-                                    False]
+                                    False, self]
                             node.cruns.append(crun)
                             ncomp += 1
                             rel, resp = ct[5], ct[6]
@@ -1713,7 +1740,8 @@ class DensitySimulator:
                             continue
                     run = [list(tmpl[0]), tmpl[2], tmpl[3], tmpl[4],
                            tmpl[5], node.cpu_hot, node.cpu_wait,
-                           node.be_hot, node.be_wait, rec[4], inst, now]
+                           node.be_hot, node.be_wait, rec[4], inst, now,
+                           self]
                     code = tmpl[1]         # "complete" the virtual root
                     # falls through to the hot block: the virtual
                     # phase's successors are the roots
@@ -2349,15 +2377,20 @@ class DensitySimulator:
 
     # ---------------------------------------------------------------- run
 
-    def run(self) -> SimResult:
-        until = self.duration_s + 30.0          # drain tail
+    def _arm(self, until: float, feed: bool = True) -> None:
+        """Schedule everything a run needs before the loop is driven:
+        the arrival stream (unless `feed=False` — an external frontend
+        owns it), fault crash events, and the memory sampler. Split out
+        of `run()` so a ClusterSimulator can arm each member on one
+        shared loop and drive them together."""
         faulted = self._faults is not None
         if self.engine != "legacy":
             # batched arrivals: one time-sorted stream, fed to the loop
             # outside the heap (stable merge keeps the per-function
             # scheduling order on exact time ties, like the heap did)
             self._horizon = until
-            self.loop.feed(merge_streams(self.arrivals), self._arrive)
+            if feed:
+                self.loop.feed(merge_streams(self.arrivals), self._arrive)
         else:                              # pre-refactor path: heap-load
             if faulted:
                 self._horizon = until
@@ -2379,6 +2412,11 @@ class DensitySimulator:
             if self.loop.now < self.duration_s - 1.0:
                 self.loop.after(1.0, sample)
         self.loop.after(self.warmup_s, sample)
+
+    def run(self) -> SimResult:
+        until = self.duration_s + 30.0          # drain tail
+        faulted = self._faults is not None
+        self._arm(until)
         if faulted or self._guard is not None \
                 or self.engine in ("legacy", "calendar"):
             # the faulted interpreter is event-driven on every engine,
@@ -2389,7 +2427,12 @@ class DensitySimulator:
             self.loop.run(until)
         else:
             self._run_hot(until)
+        return self.collect()
 
+    def collect(self) -> SimResult:
+        """Assemble the SimResult from post-run state (the tail of
+        `run()`, callable on its own by an external driver)."""
+        faulted = self._faults is not None
         horizon = self.duration_s + 30.0
         if self.engine != "legacy" or faulted:
             # granted core-time clipped at the horizon (see `_start`)

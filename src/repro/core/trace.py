@@ -130,10 +130,12 @@ def merge_streams(arrivals: dict[str, list[float]]
     feed depends on.  The sort runs as a numpy stable argsort over one
     flat float64 vector; ``.tolist()`` converts back at the boundary so
     callers keep pure Python floats (np.float64 scalars would poison
-    downstream arithmetic performance).
+    downstream arithmetic performance).  The degenerate shapes — no
+    streams, all-empty streams, exactly one non-empty stream — never
+    reach numpy: a single list is already time-sorted and maps straight
+    through, keeping the caller's float objects untouched instead of
+    round-tripping them through a float64 array.
     """
-    import numpy as np
-
     names: list[str] = []
     lists: list[list[float]] = []
     total = 0
@@ -144,6 +146,10 @@ def merge_streams(arrivals: dict[str, list[float]]
             total += len(times)
     if not total:
         return []
+    if len(lists) == 1:                   # single stream: already sorted
+        fn = names[0]
+        return [(t, fn) for t in lists[0]]
+    import numpy as np
     flat = np.empty(total, dtype=np.float64)
     owner = np.empty(total, dtype=np.intp)
     off = 0

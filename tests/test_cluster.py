@@ -1,0 +1,344 @@
+"""ClusterSim (ISSUE 9): fleet dispatch with policies as data, pinned
+by differential single-node parity against the DensitySimulator.
+
+Three layers:
+
+* differential parity — a 1-node ClusterSpec under the trivial
+  (`single`) policy reproduces the standalone `DensitySimulator`
+  bit-for-bit: identical latency streams (sha256 over float hex)
+  against the `cluster1/...` golden AND against fresh standalone runs
+  at off-golden configs (guarded members included);
+* hypothesis properties over random (ClusterSpec, seed) — every
+  dispatch policy conserves arrivals (dispatched + shed == offered),
+  is deterministic per seed, and least-loaded/JBSQ never leave a node
+  idle while another queues beyond the JBSQ bound;
+* policy/lifecycle units — node add (`up_at_s`) and drain
+  (`DrainWindow`, derived from a planned-restart FaultSchedule via
+  `GuardrailPolicy.drains_for`) steer the frontend, affinity keeps
+  functions warm, and the fleet aggregate's identities hold.
+"""
+import pytest
+
+from repro.core import guardrails as GR
+from repro.core import workloads as W
+from repro.core.cluster import (DISPATCH_POLICIES, ClusterSimulator,
+                                ClusterSpec, DispatchPolicy, NodeSpec,
+                                resolve_policy)
+from repro.core.des import DensitySimulator, EventLoop
+from repro.core.faults import FaultSchedule, FaultSpec
+from tests._hypothesis_compat import HealthCheck, given, settings, st
+from tests.test_des import GOLDEN, _digest
+
+ALL_POLICIES = sorted(DISPATCH_POLICIES)
+
+
+def _tiny_fleet(**overrides):
+    """A small heterogeneous 4-node fleet cheap enough for unit tests."""
+    kw = dict(n_functions=24, duration_s=6.0, warmup_s=1.0,
+              mean_rate=1.2)
+    kw.update(overrides)
+    nodes = kw.pop("nodes", (
+        NodeSpec("nexus", count=2, cores=4, mem_gb=6.0,
+                 backend_workers=8, max_vms_per_node=48),
+        NodeSpec("baseline", count=1, cores=8, mem_gb=8.0,
+                 backend_workers=8, max_vms_per_node=64),
+        NodeSpec("nexus-async", count=1, cores=4, mem_gb=6.0,
+                 backend_workers=8, max_vms_per_node=48),
+    ))
+    return ClusterSpec(nodes=nodes, **kw)
+
+
+# ------------------------------------------------------ policies as data
+
+class TestPolicyData:
+    def test_registry_covers_the_required_policies(self):
+        assert {"single", "random", "round_robin", "least_loaded",
+                "jbsq", "affinity"} <= set(DISPATCH_POLICIES)
+        for p in DISPATCH_POLICIES.values():
+            assert resolve_policy(p.name) is p
+
+    def test_resolve_passthrough_and_unknown(self):
+        p = DispatchPolicy("jbsq8", kind="jbsq", bound=8)
+        assert resolve_policy(p) is p
+        with pytest.raises(ValueError, match="unknown dispatch policy"):
+            resolve_policy("power-of-two")
+
+    def test_policy_validation(self):
+        with pytest.raises(ValueError, match="kind"):
+            DispatchPolicy("x", kind="fifo")
+        with pytest.raises(ValueError, match="bound"):
+            DispatchPolicy("x", kind="jbsq", bound=0)
+
+    def test_cluster_spec_validation(self):
+        ns = NodeSpec("nexus")
+        with pytest.raises(ValueError, match="at least one"):
+            ClusterSpec(nodes=(), n_functions=4)
+        with pytest.raises(ValueError, match="n_functions"):
+            ClusterSpec(nodes=(ns,), n_functions=0)
+        with pytest.raises(ValueError, match="warmup_s"):
+            ClusterSpec(nodes=(ns,), n_functions=4, duration_s=5.0,
+                        warmup_s=5.0)
+        with pytest.raises(ValueError, match="unknown dispatch policy"):
+            ClusterSpec(nodes=(ns,), n_functions=4, policy="best")
+        with pytest.raises(ValueError, match="unknown system"):
+            NodeSpec("nexus-quantum")
+        with pytest.raises(ValueError, match="count"):
+            NodeSpec("nexus", count=0)
+        with pytest.raises(ValueError, match="up_at_s"):
+            NodeSpec("nexus", up_at_s=-1.0)
+
+    def test_expand_flattens_groups_in_order(self):
+        spec = _tiny_fleet()
+        members = spec.expand()
+        assert len(members) == spec.n_members == 4
+        assert [m.system for m in members] == \
+            ["nexus", "nexus", "baseline", "nexus-async"]
+
+    def test_cluster_engine_surface(self):
+        spec = _tiny_fleet()
+        with pytest.raises(ValueError, match="hot/classic/calendar"):
+            ClusterSimulator(spec, engine="legacy")
+        # the PR-3 alias resolves, like DensitySimulator's
+        assert ClusterSimulator(spec, engine="program").engine == "classic"
+        with pytest.raises(ValueError, match="external loop"):
+            DensitySimulator("nexus", 4, engine="legacy", loop=EventLoop())
+
+
+# -------------------------------------------------- differential parity
+
+class TestSingleNodeParity:
+    def test_golden_digest_through_cluster_frontend(self):
+        """The pinned differential anchor: the `cluster1/...` golden was
+        captured from the standalone legacy walker; the cluster frontend
+        (1 node, trivial policy, shared-loop hot engine) reproduces it
+        bit-for-bit. (tests/test_des.py additionally pins the classic
+        and calendar engines against the same key.)"""
+        spec = ClusterSpec(nodes=(NodeSpec("nexus", nodes=4),),
+                           n_functions=160, policy="single",
+                           duration_s=20.0, warmup_s=4.0)
+        sim = ClusterSimulator(spec, seed=7)
+        assert _digest(sim.run(), sim) == GOLDEN["cluster1/nexus/n160/seed7"]
+
+    def test_off_golden_config_matches_standalone_exactly(self):
+        """Fresh differential run on a config the goldens do not pin
+        (registry suite, different variant/seed): every latency stream,
+        cold-start and completion count identical."""
+        kw = dict(seed=11, duration_s=10.0, warmup_s=2.0)
+        ref = DensitySimulator("nexus-tcp", 90, suite=W.REGISTRY, **kw)
+        r = ref.run()
+        spec = ClusterSpec(nodes=(NodeSpec("nexus-tcp", nodes=4),),
+                           n_functions=90, policy="single",
+                           duration_s=10.0, warmup_s=2.0)
+        sim = ClusterSimulator(spec, seed=11, suite=W.REGISTRY)
+        c = sim.run()
+        assert c.latencies == r.latencies
+        assert c.completed == r.completed
+        assert c.cold_starts == r.cold_starts
+        assert c.dispatched == (c.offered,)
+
+    def test_guarded_member_matches_standalone_guarded_sim(self):
+        """Per-node GuardrailPolicy rides the member unchanged: a 1-node
+        guarded cluster sheds and completes exactly like the standalone
+        guarded DensitySimulator."""
+        pol = GR.GuardrailPolicy(
+            admission=GR.AdmissionSpec(rate_per_s=40.0, burst=20,
+                                       max_queue_s=0.05))
+        kw = dict(seed=5, duration_s=8.0, warmup_s=2.0)
+        ref = DensitySimulator("nexus", 60, guardrails=pol, **kw)
+        r = ref.run()
+        spec = ClusterSpec(nodes=(NodeSpec("nexus", nodes=4,
+                                           guardrails=pol),),
+                           n_functions=60, policy="single",
+                           duration_s=8.0, warmup_s=2.0)
+        c = ClusterSimulator(spec, seed=5).run()
+        assert c.latencies == r.latencies
+        assert c.completed == r.completed
+        assert sum(c.shed.values()) - c.shed["frontend"] == r.rejected
+
+
+# ------------------------------------------------- hypothesis properties
+
+#: the random-fleet atoms the property suite assembles ClusterSpecs
+#: from — a positional-primitive strategy shape so the suite runs
+#: identically under real hypothesis and the seeded fallback engine
+_NODE_ATOMS = tuple(
+    NodeSpec(system, count=count, cores=cores, mem_gb=6.0,
+             backend_workers=8, max_vms_per_node=40)
+    for system in ("nexus", "baseline", "nexus-async")
+    for count in (1, 2)
+    for cores in (2, 5))
+
+
+def _random_spec(atoms, n_functions, mean_rate, pattern, policy):
+    return ClusterSpec(nodes=tuple(atoms), n_functions=n_functions,
+                       policy=policy, mean_rate=mean_rate,
+                       duration_s=5.0, warmup_s=1.0,
+                       arrival_pattern=pattern)
+
+
+class TestPolicyProperties:
+    @settings(max_examples=6, deadline=None, derandomize=True,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(st.lists(st.sampled_from(_NODE_ATOMS), min_size=1, max_size=3),
+           st.integers(8, 20), st.sampled_from([0.8, 1.5]),
+           st.sampled_from(sorted(W.ARRIVAL_PATTERNS)),
+           st.sampled_from(ALL_POLICIES), st.integers(0, 1000))
+    def test_conservation_and_determinism(self, atoms, n_functions,
+                                          mean_rate, pattern, policy,
+                                          seed):
+        """Every dispatch policy conserves arrivals — offered ==
+        dispatched + shed, with offered the full frontend stream — and
+        two same-seed runs are identical event-for-event."""
+        spec = _random_spec(atoms, n_functions, mean_rate, pattern,
+                            policy)
+        sim = ClusterSimulator(spec, seed=seed)
+        offered_stream = sum(len(v) for v in sim.arrivals.values())
+        r = sim.run()
+        assert r.offered == offered_stream
+        assert r.offered == sum(r.dispatched) + r.shed["frontend"]
+        r2 = ClusterSimulator(spec, seed=seed).run()
+        assert r2.dispatched == r.dispatched
+        assert r2.latencies == r.latencies
+        assert r2.shed == r.shed
+
+    @settings(max_examples=6, deadline=None, derandomize=True,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(st.lists(st.sampled_from(_NODE_ATOMS), min_size=1, max_size=3),
+           st.integers(8, 20), st.sampled_from([0.8, 1.5]),
+           st.sampled_from(sorted(W.ARRIVAL_PATTERNS)),
+           st.sampled_from(["least_loaded", "jbsq"]),
+           st.integers(0, 1000))
+    def test_queue_aware_policies_never_bypass_an_idle_node(
+            self, atoms, n_functions, mean_rate, pattern, policy, seed):
+        """Replaying every recorded dispatch decision: least-loaded and
+        JBSQ never place on a node queued beyond the JBSQ bound while
+        some eligible node sits idle — and JBSQ always joins a shortest
+        queue outright."""
+        bound = DISPATCH_POLICIES["jbsq"].bound
+        spec = _random_spec(atoms, n_functions, mean_rate, pattern,
+                            policy)
+        sim = ClusterSimulator(spec, seed=seed, record_decisions=True)
+        sim.run()
+        assert sim.decisions, "stream must dispatch something"
+        for now, fn, elig, loads, choice in sim.decisions:
+            chosen = loads[elig.index(choice)]
+            if min(loads) == 0:             # someone idle: never pick a
+                assert chosen <= bound      # beyond-bound queue
+            if policy == "jbsq":
+                assert chosen == min(loads)
+
+
+# -------------------------------------------------- node add / drain
+
+class TestNodeLifecycle:
+    def test_drained_node_receives_nothing(self):
+        whole_run = (GR.DrainWindow(0.0, 60.0),)
+        spec = _tiny_fleet(nodes=(
+            NodeSpec("nexus", cores=4, mem_gb=6.0, backend_workers=8,
+                     max_vms_per_node=48),
+            NodeSpec("nexus", cores=4, mem_gb=6.0, backend_workers=8,
+                     max_vms_per_node=48, drains=whole_run)),
+            policy="round_robin")
+        r = ClusterSimulator(spec, seed=3).run()
+        assert r.dispatched[1] == 0
+        assert r.dispatched[0] == r.offered
+
+    def test_whole_fleet_drained_sheds_at_frontend(self):
+        whole_run = (GR.DrainWindow(0.0, 60.0),)
+        spec = _tiny_fleet(nodes=(
+            NodeSpec("nexus", cores=4, mem_gb=6.0, backend_workers=8,
+                     max_vms_per_node=48, drains=whole_run),))
+        r = ClusterSimulator(spec, seed=3).run()
+        assert r.offered > 0
+        assert r.shed["frontend"] == r.offered
+        assert r.completed == 0
+
+    def test_node_add_joins_mid_run(self):
+        """`up_at_s` is node add: nothing lands before the instant,
+        traffic lands after (round-robin would use it immediately)."""
+        spec = _tiny_fleet(nodes=(
+            NodeSpec("nexus", cores=4, mem_gb=6.0, backend_workers=8,
+                     max_vms_per_node=48),
+            NodeSpec("nexus", cores=4, mem_gb=6.0, backend_workers=8,
+                     max_vms_per_node=48, up_at_s=3.0)),
+            policy="round_robin", duration_s=6.0)
+        sim = ClusterSimulator(spec, seed=3, record_decisions=True)
+        r = sim.run()
+        before = [d for d in sim.decisions if d[0] < 3.0]
+        after = [d for d in sim.decisions if d[0] >= 3.0]
+        assert before and after
+        assert all(d[4] == 0 for d in before)
+        assert any(d[4] == 1 for d in after)
+        assert r.dispatched[1] > 0
+
+    def test_drains_derive_from_planned_restart_schedule(self):
+        """The documented derivation: GuardrailPolicy.drains_for over a
+        planned-restart FaultSchedule yields the frontend windows —
+        no dispatch decision lands on the node inside any window."""
+        sched = FaultSchedule((FaultSpec("backend_crash", 2.5),),
+                              restart_delay_s=0.5)
+        drains = GR.GuardrailPolicy.drains_for(sched)
+        assert drains and all(isinstance(d, GR.DrainWindow)
+                              for d in drains)
+        spec = _tiny_fleet(nodes=(
+            NodeSpec("nexus", cores=4, mem_gb=6.0, backend_workers=8,
+                     max_vms_per_node=48),
+            NodeSpec("nexus", cores=4, mem_gb=6.0, backend_workers=8,
+                     max_vms_per_node=48, drains=drains)),
+            policy="round_robin")
+        sim = ClusterSimulator(spec, seed=3, record_decisions=True)
+        sim.run()
+        for now, fn, elig, loads, choice in sim.decisions:
+            if any(d.at_s <= now < d.end_s for d in drains):
+                assert choice == 0, now
+
+
+# ------------------------------------------------------------ behavior
+
+class TestFleetBehavior:
+    def test_affinity_reuses_warm_instances(self):
+        """Keep-alive awareness: on an otherwise identical fleet the
+        affinity policy cold-starts far less than round-robin (which
+        sprays each function over every node)."""
+        base = dict(n_functions=32, duration_s=8.0, warmup_s=1.0,
+                    mean_rate=1.2)
+        rr = ClusterSimulator(_tiny_fleet(policy="round_robin", **base),
+                              seed=9).run()
+        aff = ClusterSimulator(_tiny_fleet(policy="affinity", **base),
+                               seed=9).run()
+        assert aff.cold_starts < 0.6 * rr.cold_starts
+        assert aff.offered == rr.offered
+
+    def test_aggregate_identities(self):
+        spec = _tiny_fleet(policy="least_loaded")
+        r = ClusterSimulator(spec, seed=4).run()
+        assert r.n_nodes == 4
+        assert r.completed == sum(nr.completed for nr in r.node_results)
+        assert r.cold_starts == sum(nr.cold_starts
+                                    for nr in r.node_results)
+        n_lat = sum(len(v) for v in r.latencies.values())
+        assert r.goodput + r.slo_violations == n_lat
+        assert len(r.node_utilization()) == 4
+        assert all(0.0 <= u <= 1.0 for u in r.node_utilization())
+        assert r.p50 <= r.p99 <= max(x for v in r.latencies.values()
+                                     for x in v)
+        assert r.fleet_p(0.0) == min(x for v in r.latencies.values()
+                                     for x in v)
+        assert r.shed_total == sum(r.shed.values())
+
+    def test_empty_result_percentiles(self):
+        whole_run = (GR.DrainWindow(0.0, 60.0),)
+        spec = _tiny_fleet(nodes=(
+            NodeSpec("nexus", drains=whole_run),))
+        r = ClusterSimulator(spec, seed=3).run()
+        assert r.p50 == r.p99 == 0.0
+
+    def test_calendar_engine_matches_hot_fleet_wide(self):
+        """Engine parity holds through the shared-loop frontend on a
+        real multi-node fleet, not just the 1-node anchor."""
+        spec = _tiny_fleet(policy="jbsq")
+        hot = ClusterSimulator(spec, seed=6).run()
+        cal = ClusterSimulator(spec, seed=6, engine="calendar").run()
+        assert cal.latencies == hot.latencies
+        assert cal.dispatched == hot.dispatched
+        assert cal.cold_starts == hot.cold_starts

@@ -1,0 +1,108 @@
+"""Direct unit coverage for `repro.core.credentials` (ISSUE 9 satellite).
+
+Least-privilege scoped tokens (paper §4.3.3): the orchestrator's
+signing key lives only in the backend-side `TokenManager`; guests hold
+opaque handles. These tests pin the scope checks (bucket prefix,
+action, expiry), MAC forgery detection, revocation, and the
+guest-state hygiene assertion the frontend tests lean on.
+"""
+import pytest
+
+from repro.core.credentials import (CredentialError, ScopedToken,
+                                    TokenManager)
+
+
+class TestScopedToken:
+    TOK = ScopedToken("fn#1", frozenset({"warm-", "results-"}),
+                      frozenset({"get"}), expires_at=100.0, mac="x")
+
+    def test_allows_matching_prefix_action_and_time(self):
+        assert self.TOK.allows("warm-tier", "get", now=50.0)
+        assert self.TOK.allows("results-2026", "get", now=99.9)
+
+    def test_denies_wrong_bucket_action_or_expiry(self):
+        assert not self.TOK.allows("cold-tier", "get", now=50.0)
+        assert not self.TOK.allows("warm-tier", "put", now=50.0)
+        assert not self.TOK.allows("warm-tier", "get", now=100.0)
+
+
+class TestTokenManager:
+    def test_provision_returns_opaque_handle_not_token(self):
+        mgr = TokenManager()
+        handle = mgr.provision("fn#1", {"warm-"})
+        assert isinstance(handle, str)
+        assert len(handle) == 16            # token_hex(8): no scope inside
+        tok = mgr.authorize(handle, "warm-tier", "get")
+        assert tok.function == "fn#1"
+        assert handle != tok.mac
+
+    def test_authorize_enforces_scope(self):
+        mgr = TokenManager()
+        handle = mgr.provision("fn#1", {"warm-"}, actions={"get"})
+        assert mgr.authorize(handle, "warm-a", "get").buckets == \
+            frozenset({"warm-"})
+        with pytest.raises(CredentialError, match="denied by scope"):
+            mgr.authorize(handle, "cold-a", "get")
+        with pytest.raises(CredentialError, match="denied by scope"):
+            mgr.authorize(handle, "warm-a", "put")
+
+    def test_unknown_handle_rejected(self):
+        mgr = TokenManager()
+        with pytest.raises(CredentialError, match="unknown credential"):
+            mgr.authorize("deadbeefdeadbeef", "warm-a", "get")
+
+    def test_expired_token_rejected(self):
+        mgr = TokenManager(ttl_s=-1.0)      # born expired
+        handle = mgr.provision("fn#1", {"warm-"})
+        with pytest.raises(CredentialError, match="denied by scope"):
+            mgr.authorize(handle, "warm-a", "get")
+
+    def test_forged_scope_fails_mac_check(self):
+        """Widening a stored token's scope without the root key trips
+        the HMAC check — the scope is provider-signed, not advisory."""
+        mgr = TokenManager()
+        handle = mgr.provision("fn#1", {"warm-"}, actions={"get"})
+        tok = mgr._tokens[handle]
+        forged = ScopedToken(tok.function, frozenset({"warm-", "admin-"}),
+                             tok.actions, tok.expires_at, tok.mac)
+        mgr._tokens[handle] = forged
+        with pytest.raises(CredentialError, match="MAC invalid"):
+            mgr.authorize(handle, "warm-a", "get")
+
+    def test_two_managers_do_not_share_root_keys(self):
+        """A token minted by one vault is garbage to another — each
+        manager draws its own root key."""
+        a, b = TokenManager(), TokenManager()
+        handle = a.provision("fn#1", {"warm-"})
+        b._tokens[handle] = a._tokens[handle]
+        with pytest.raises(CredentialError, match="MAC invalid"):
+            b.authorize(handle, "warm-a", "get")
+
+    def test_revoke_is_immediate_and_idempotent(self):
+        mgr = TokenManager()
+        handle = mgr.provision("fn#1", {"warm-"})
+        mgr.authorize(handle, "warm-a", "get")
+        mgr.revoke(handle)
+        with pytest.raises(CredentialError, match="unknown credential"):
+            mgr.authorize(handle, "warm-a", "get")
+        mgr.revoke(handle)                  # second revoke: no-op
+
+
+class TestGuestHygiene:
+    def test_clean_guest_state_passes(self):
+        TokenManager.assert_guest_clean(
+            {"handle": "a1b2c3d4e5f60718", "tenant": "t-9",
+             "invocation_id": "x" * 64, "n_puts": 3})
+
+    def test_raw_key_material_detected(self):
+        with pytest.raises(AssertionError, match="raw key material"):
+            TokenManager.assert_guest_clean({"key": b"\x00" * 32})
+        with pytest.raises(AssertionError, match="raw key material"):
+            TokenManager.assert_guest_clean({"key": bytearray(8)})
+
+    def test_long_secret_shaped_string_detected(self):
+        with pytest.raises(AssertionError, match="suspicious long secret"):
+            TokenManager.assert_guest_clean({"token": "s" * 40})
+        # 39 chars is under the tripwire; invocation_id is exempt
+        TokenManager.assert_guest_clean({"token": "s" * 39})
+        TokenManager.assert_guest_clean({"Invocation_ID": "s" * 80})

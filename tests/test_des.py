@@ -34,7 +34,8 @@ from repro.core import workloads as W
 from repro.core.des import DensitySimulator, find_density
 from repro.core.faults import FaultSchedule, FaultSpec
 from repro.core.plan import SYSTEMS, compile_plan, phase_durations
-from repro.core.trace import ArrivalSpec, generate_arrivals, interarrival_cv
+from repro.core.trace import (ArrivalSpec, generate_arrivals,
+                              interarrival_cv, merge_streams)
 from tests._hypothesis_compat import HealthCheck, given, settings, st
 
 GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "goldens",
@@ -69,6 +70,14 @@ GOLDEN_CONFIGS = {
                                        duration_s=20.0, warmup_s=4.0,
                                        faults=GOLDEN_FAULTS)
        for s in ("nexus", "baseline")},
+    # ISSUE 9 differential anchor: a 1-node ClusterSpec under the
+    # trivial ("single") dispatch policy IS the standalone sim — the
+    # digest is captured from the legacy walker (like every key) and
+    # the optimized engines reproduce it through ClusterSimulator's
+    # shared-loop frontend path
+    "cluster1/nexus/n160/seed7": dict(system="nexus", n=160, seed=7,
+                                      duration_s=20.0, warmup_s=4.0,
+                                      cluster=True),
 }
 
 #: keys every engine mode must reproduce bit-for-bit under faults
@@ -92,9 +101,23 @@ def _digest(result, sim):
 
 def _build(key, engine):
     cfg = dict(GOLDEN_CONFIGS[key])
+    cluster = cfg.pop("cluster", False)
     system, n = cfg.pop("system"), cfg.pop("n")
     if cfg.get("suite") == "REGISTRY":
         cfg["suite"] = W.REGISTRY
+    if cluster and engine != "legacy":
+        # the optimized engines run the config THROUGH the cluster
+        # frontend (1 node, trivial policy); the legacy reference the
+        # golden is captured from stays the standalone walker — that
+        # asymmetry is the whole differential parity test
+        from repro.core.cluster import (ClusterSimulator, ClusterSpec,
+                                        NodeSpec)
+        spec = ClusterSpec(nodes=(NodeSpec(system, nodes=4),),
+                           n_functions=n, policy="single",
+                           duration_s=cfg["duration_s"],
+                           warmup_s=cfg["warmup_s"])
+        return ClusterSimulator(spec, seed=cfg["seed"], engine=engine,
+                                suite=cfg.get("suite"))
     return DensitySimulator(system, n, engine=engine, **cfg)
 
 
@@ -317,6 +340,37 @@ class TestArrivalPatterns:
             DensitySimulator("nexus", 10, arrival_pattern="weekly")
         with pytest.raises(ValueError, match="kind"):
             W.ArrivalPattern("x", kind="fractal")
+
+    def test_merge_streams_empty_and_all_empty(self):
+        """No streams / only empty streams: an empty merged feed, not
+        an empty-array trip through numpy (ISSUE 9 satellite)."""
+        assert merge_streams({}) == []
+        assert merge_streams({"a#0": [], "b#1": []}) == []
+
+    def test_merge_streams_single_stream_identity(self):
+        """Exactly one non-empty stream maps through verbatim — same
+        order, same float objects, empty siblings ignored."""
+        times = [0.5, 0.5, 1.25, 3.0]
+        out = merge_streams({"empty#0": [], "only#1": times})
+        assert out == [(t, "only#1") for t in times]
+        assert all(a is b for (a, _), b in zip(out, times))
+
+    def test_merge_streams_duplicate_heavy_keeps_dict_order(self):
+        """Exact-time ties across many functions keep dict-insertion
+        order — the arrival-feed tie rule the engines' (t, seq) total
+        order rests on. Heavy duplication: every stream shares every
+        timestamp, plus per-stream repeats."""
+        fns = [f"f#{i}" for i in range(7)]
+        base = [0.0, 1.0, 1.0, 2.5, 2.5, 2.5, 7.0]
+        arrivals = {fn: list(base) for fn in fns}
+        out = merge_streams(arrivals)
+        ref = sorted(((t, fn) for fn in fns for t in base),
+                     key=lambda e: e[0])   # python stable sort reference
+        assert out == ref
+        for t in set(base):
+            k = base.count(t)
+            assert [fn for x, fn in out if x == t] == \
+                [fn for fn in fns for _ in range(k)]
 
     def test_degenerate_pattern_params_rejected_at_construction(self):
         with pytest.raises(ValueError, match="burst_factor"):

@@ -1,0 +1,125 @@
+"""Direct unit coverage for `repro.core.planes` (ISSUE 9 satellite).
+
+The control-plane/data-plane split (paper §4.3.1) was previously
+exercised only through the full runtime; these tests pin its contract
+in isolation: the 4 KB descriptor bound, the per-message cycle/crossing
+charges (what makes Nexus crossings O(1) per op, not O(payload)), and
+the synchronous `call`/`reply` RPC discipline.
+"""
+import queue
+import threading
+
+import pytest
+
+from repro.core import fabric as F
+from repro.core import metrics as M
+from repro.core.planes import (CTRL_MSG_MAX_BYTES, ControlMessage,
+                               ControlPlane, call, reply)
+
+
+def _plane(depth: int = 256):
+    acct = M.CycleAccount()
+    return ControlPlane(acct, depth=depth), acct
+
+
+class TestControlMessage:
+    def test_approx_size_counts_header_and_body(self):
+        empty = ControlMessage("invoke", "tenant-a")
+        assert empty.approx_size() == 64
+        msg = ControlMessage("get", "tenant-a",
+                             body={"bucket": "warm", "key": "object-1"})
+        assert msg.approx_size() == 64 + len("bucket") + len("warm") \
+            + len("key") + len("object-1")
+
+
+class TestControlPlane:
+    def test_send_recv_roundtrip_in_order(self):
+        plane, _ = _plane()
+        sent = [ControlMessage("invoke", "t", body={"i": i})
+                for i in range(5)]
+        for m in sent:
+            plane.send(m)
+        assert plane.sent == 5
+        assert [plane.recv(timeout=1.0) for _ in range(5)] == sent
+
+    def test_send_charges_vsock_costs_per_message(self):
+        """Every descriptor charges the fabric's vsock cycle model to
+        the two kernel domains and counts kick+completion exits plus
+        one control-plane crossing — per MESSAGE, not per byte."""
+        plane, acct = _plane()
+        n = 7
+        for i in range(n):
+            plane.send(ControlMessage("complete", "t", body={"i": i}))
+        snap = acct.snapshot()
+        assert snap["cycles"][M.GUEST_KERNEL] == pytest.approx(
+            n * F.VSOCK_GUEST_KERNEL_MCYC)
+        assert snap["cycles"][M.HOST_KERNEL] == pytest.approx(
+            n * F.VSOCK_HOST_KERNEL_MCYC)
+        assert snap["crossings"][M.VM_EXIT] == n * F.VSOCK_EXITS_PER_MSG
+        assert snap["crossings"][M.CTRL_MSG] == n
+
+    def test_oversize_message_rejected_without_side_effects(self):
+        """Bulk payloads must ride the data plane: an oversized
+        descriptor raises, charges nothing, enqueues nothing."""
+        plane, acct = _plane()
+        big = ControlMessage("put", "t",
+                             body={"blob": "x" * (CTRL_MSG_MAX_BYTES + 1)})
+        with pytest.raises(ValueError, match="data plane"):
+            plane.send(big)
+        assert plane.sent == 0
+        assert acct.total() == 0.0
+        assert plane.try_recv() is None
+
+    def test_boundary_size_is_accepted(self):
+        plane, _ = _plane()
+        pad = CTRL_MSG_MAX_BYTES - 64 - len("k")
+        msg = ControlMessage("put", "t", body={"k": "y" * pad})
+        assert msg.approx_size() == CTRL_MSG_MAX_BYTES
+        plane.send(msg)
+        assert plane.recv(timeout=1.0) is msg
+
+    def test_try_recv_empty_returns_none(self):
+        plane, _ = _plane()
+        assert plane.try_recv() is None
+        msg = ControlMessage("invoke", "t")
+        plane.send(msg)
+        assert plane.try_recv() is msg
+        assert plane.try_recv() is None
+
+    def test_bounded_depth_backpressure(self):
+        """The channel is a BOUNDED queue — the host can push back on a
+        flooding guest instead of buffering unboundedly."""
+        plane, _ = _plane(depth=2)
+        plane.send(ControlMessage("invoke", "t"))
+        plane.send(ControlMessage("invoke", "t"))
+        with pytest.raises(queue.Full):
+            plane._q.put_nowait(ControlMessage("invoke", "t"))
+
+
+class TestCallReply:
+    def test_call_blocks_until_host_replies(self):
+        plane, _ = _plane()
+        served = []
+
+        def host():
+            msg = plane.recv(timeout=5.0)
+            served.append(msg)
+            reply(msg, {"status": "ok", "echo": msg.body["x"]})
+
+        t = threading.Thread(target=host)
+        t.start()
+        out = call(plane, ControlMessage("get", "t", body={"x": 42}),
+                   timeout=5.0)
+        t.join(timeout=5.0)
+        assert out == {"status": "ok", "echo": 42}
+        assert served[0].body == {"x": 42}
+
+    def test_reply_to_non_call_asserts(self):
+        msg = ControlMessage("invoke", "t")
+        with pytest.raises(AssertionError, match="not a call"):
+            reply(msg, "value")
+
+    def test_call_timeout_when_host_silent(self):
+        plane, _ = _plane()
+        with pytest.raises(queue.Empty):
+            call(plane, ControlMessage("get", "t"), timeout=0.05)
