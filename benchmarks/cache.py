@@ -1,0 +1,114 @@
+"""SharedCache benchmark (ISSUE 10): cross-invocation payload reuse.
+
+Prices the host-side tiered cache over the calibrated ML suite in the
+DES, where every number is a pure function of (seed, config):
+
+* per-policy reuse counters at a capacity that holds the working set —
+  lookups/hits/misses/admitted/writes, hit-rate, and the
+  content-addressable dedup volume;
+* eviction behavior under pressure (capacity below the working set),
+  per policy — the seeded eviction order makes even the ``random``
+  policy reproducible;
+* fixed-n density delta: the same DES trace with the cache off vs on
+  (completed invocations, cold starts, geomean slowdown) — the
+  "density/latency delta" acceptance row for LLM-DECODE / LLM-COLD
+  style traffic.
+
+``--quick`` is the CI-gated mode: deterministic counts only, committed
+to ``benchmarks/baselines/cache.json`` with ``rel_tol 0.0``. The full
+mode adds the capacity x policy matrix (nightly).
+"""
+from __future__ import annotations
+
+from repro.core.cache import CacheSpec
+from repro.core.des import DensitySimulator
+from repro.core.workloads import ml_suite
+
+from benchmarks.common import save_json, table
+
+POLICIES = ("lru", "clock", "random")
+
+#: ML invocations are heavyweight — same arrival rate as ml_serving
+MEAN_RATE = 0.25
+
+#: holds the full-scale ML working set (~15 GB nominal) with headroom:
+#: isolates pure reuse from eviction
+CAP_AMPLE_MB = 65536.0
+#: below the working set: forces the eviction path
+CAP_TIGHT_MB = 8192.0
+
+
+def _run(cache: CacheSpec | None, *, system: str = "nexus",
+         n: int = 40, duration_s: float = 20.0):
+    return DensitySimulator(system, n, seed=1, duration_s=duration_s,
+                            warmup_s=5.0, mean_rate=MEAN_RATE,
+                            suite=ml_suite("full"), cache=cache).run()
+
+
+def _reuse_row(policy: str, capacity_mb: float) -> dict:
+    r = _run(CacheSpec(capacity_mb=capacity_mb, policy=policy,
+                       admit="all", seed=11))
+    cs = r.cache_stats
+    return {"policy": policy, "capacity_mb": int(capacity_mb),
+            "lookups": cs["lookups"], "hits": cs["hits"],
+            "misses": cs["misses"], "evictions": cs["evictions"],
+            "admitted": cs["admitted"], "writes": cs["writes"],
+            "hit_rate": round(cs["hits"] / max(cs["lookups"], 1), 4),
+            "dedup_mb": round(cs["dedup_bytes"] / 2**20, 1)}
+
+
+def _density_row(system: str) -> dict:
+    off = _run(None, system=system)
+    on = _run(CacheSpec(capacity_mb=CAP_AMPLE_MB, admit="all", seed=11),
+              system=system)
+    return {"system": system,
+            "completed_off": off.completed, "completed_on": on.completed,
+            "cold_off": off.cold_starts, "cold_on": on.cold_starts,
+            "slowdown_off": round(off.geomean_slowdown(), 3),
+            "slowdown_on": round(on.geomean_slowdown(), 3),
+            "hit_rate": round(on.cache_stats["hits"]
+                              / max(on.cache_stats["lookups"], 1), 4)}
+
+
+def run(quick: bool = False) -> dict:
+    reuse_rows = [_reuse_row(p, CAP_AMPLE_MB) for p in POLICIES]
+    pressure_rows = [_reuse_row(p, CAP_TIGHT_MB) for p in POLICIES]
+    density_rows = [_density_row(s) for s in ("baseline", "nexus")]
+
+    cols = ["policy", "capacity_mb", "lookups", "hits", "misses",
+            "evictions", "admitted", "writes", "hit_rate", "dedup_mb"]
+    print(table(reuse_rows, cols,
+                title="reuse at ample capacity (DES, ML suite, n=40)"))
+    print()
+    print(table(pressure_rows, cols,
+                title="eviction pressure (capacity below working set)"))
+    print()
+    print(table(density_rows,
+                ["system", "completed_off", "completed_on", "cold_off",
+                 "cold_on", "slowdown_off", "slowdown_on", "hit_rate"],
+                title="fixed-n density delta: cache off vs on"))
+
+    payload = {"reuse": reuse_rows, "pressure": pressure_rows,
+               "density_delta": density_rows,
+               "config": {"quick": quick, "n": 40,
+                          "mean_rate": MEAN_RATE,
+                          "capacity_ample_mb": int(CAP_AMPLE_MB),
+                          "capacity_tight_mb": int(CAP_TIGHT_MB)}}
+
+    if not quick:
+        matrix = [_reuse_row(p, cap)
+                  for cap in (4096.0, CAP_TIGHT_MB, 16384.0, CAP_AMPLE_MB)
+                  for p in POLICIES]
+        print()
+        print(table(matrix, cols, title="capacity x policy matrix"))
+        payload["matrix"] = matrix
+
+    save_json("cache", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    run(quick=ap.parse_args().quick)

@@ -84,6 +84,39 @@ def llm_cold_breakdown(suite) -> list[dict]:
     return rows
 
 
+def cache_reuse_rows() -> list[dict]:
+    """SharedCache acceptance rows (ISSUE 10): LLM-DECODE's per-step
+    KV GET/PUT chain and LLM-COLD's weight shards become hits on the
+    SECOND invocation on a node. Tiny scale (real tensors), serial
+    invokes — every count is deterministic."""
+    from repro.core.cache import CacheSpec
+    from repro.core.runtime import WorkerNode
+    from repro.models import serving
+
+    suite = ml_suite("tiny")
+    rows = []
+    for name in ("LLM-DECODE", "LLM-COLD"):
+        node = WorkerNode("nexus", byte_scale=1.0, cache=CacheSpec())
+        try:
+            node.deploy(suite[name])
+            node.seed_input(name, payloads=serving.seed_payloads(name))
+            node.invoke(name).result(timeout=120)
+            first = dict(node.cache_stats())
+            node.invoke(name).result(timeout=120)
+            second = node.cache_stats()
+            rows.append({
+                "scenario": name,
+                "gets": len(suite[name].profile.gets),
+                "first_inv_hits": first["hits"],
+                "second_inv_hits": second["hits"] - first["hits"],
+                "lookups": second["lookups"],
+                "misses": second["misses"],
+                "writes": second["writes"]})
+        finally:
+            node.shutdown()
+    return rows
+
+
 def _probe(system: str, n: int, duration: float, suite) -> dict:
     r = DensitySimulator(system, n, seed=1, duration_s=duration,
                          warmup_s=5.0, mean_rate=MEAN_RATE,
@@ -120,6 +153,7 @@ def run(quick: bool = False) -> dict:
 
     warm_rows, cold_rows = latency_tables(suite)
     bd_rows = llm_cold_breakdown(suite)
+    cache_rows = cache_reuse_rows()
 
     print(table(cal_rows, ["role", "arch", "params_MB", "prefill",
                            "decode", "encode"],
@@ -137,6 +171,12 @@ def run(quick: bool = False) -> dict:
                           "shard0_fetch_ms", "prefetched"],
                 title="LLM-COLD breakdown: weights prefetch hidden "
                       "behind the snapshot restore"))
+    print()
+    print(table(cache_rows, ["scenario", "gets", "first_inv_hits",
+                             "second_inv_hits", "lookups", "misses",
+                             "writes"],
+                title="SharedCache: second-invocation reuse "
+                      "(threaded node, tiny scale)"))
 
     if quick:
         duration = 20.0
@@ -162,6 +202,7 @@ def run(quick: bool = False) -> dict:
 
     payload = {"calibration": cal_rows, "warm": warm_rows,
                "cold": cold_rows, "llm_cold_breakdown": bd_rows,
+               "cache_reuse": cache_rows,
                "density": density_rows,
                "config": {"quick": quick, "mean_rate": MEAN_RATE,
                           "systems": list(SYSTEMS_ORDER)}}

@@ -22,10 +22,11 @@ def main() -> None:
                     help="comma-separated subset of benchmark names")
     args = ap.parse_args()
 
-    from benchmarks import (cluster, cold_start, cpu_cycles, density,
-                            faasm_gap, fault_tolerance, hlo_analysis,
-                            memory_footprint, ml_serving, model_flops,
-                            overload, sim_throughput, warm_path)
+    from benchmarks import (cache, cluster, cold_start, cpu_cycles,
+                            density, faasm_gap, fault_tolerance,
+                            hlo_analysis, memory_footprint, ml_serving,
+                            model_flops, overload, sim_throughput,
+                            warm_path)
 
     benches = [
         ("cpu_cycles (Fig 2)", cpu_cycles.run, {}),
@@ -45,6 +46,8 @@ def main() -> None:
         ("overload (GuardRails degradation curves)", overload.run,
          {"quick": args.quick}),
         ("cluster (ClusterSim fleet dispatch sweep)", cluster.run,
+         {"quick": args.quick}),
+        ("cache (SharedCache reuse + density delta)", cache.run,
          {"quick": args.quick}),
         ("faasm_gap (Fig 14)", faasm_gap.run, {}),
     ]

@@ -108,6 +108,46 @@ def _load(path: str) -> dict:
         return json.load(f)
 
 
+def render_summary(rows: list[tuple[str, str, list[str]]],
+                   *, max_details: int = 8) -> str:
+    """Markdown pass/drift table for the GitHub job summary (ISSUE 10
+    satellite). `rows` is ``(name, status, findings)`` per gated
+    benchmark; status is one of OK / DRIFT / MISSING-BASELINE /
+    MISSING-RESULT. Pure — unit-tested directly; `main` appends the
+    result to ``$GITHUB_STEP_SUMMARY`` when the env var is set."""
+    ok = sum(1 for _, s, _ in rows if s == "OK")
+    lines = ["## Benchmark gate",
+             "",
+             f"**{ok}/{len(rows)}** gated benchmark(s) within tolerance.",
+             "",
+             "| benchmark | status | findings |",
+             "|---|---|---:|"]
+    mark = {"OK": "✅"}
+    for name, status, findings in rows:
+        icon = mark.get(status, "❌")
+        n = str(len(findings)) if findings else "—"
+        lines.append(f"| `{name}` | {icon} {status} | {n} |")
+    for name, status, findings in rows:
+        if not findings:
+            continue
+        lines += ["", f"<details><summary><code>{name}</code>: "
+                      f"{len(findings)} finding(s)</summary>", ""]
+        for d in findings[:max_details]:
+            lines.append(f"- `{d}`")
+        if len(findings) > max_details:
+            lines.append(f"- … and {len(findings) - max_details} more")
+        lines += ["", "</details>"]
+    return "\n".join(lines) + "\n"
+
+
+def _emit_summary(rows: list[tuple[str, str, list[str]]]) -> None:
+    path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if not path:
+        return
+    with open(path, "a") as f:              # append: GitHub semantics
+        f.write(render_summary(rows))
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--results", default=RESULTS_DIR)
@@ -156,6 +196,7 @@ def main(argv=None) -> int:
         return 0
 
     failures = 0
+    rows: list[tuple[str, str, list[str]]] = []
     for name in names:
         fresh_path = os.path.join(args.results, f"{name}.json")
         base_path = os.path.join(args.baselines, f"{name}.json")
@@ -163,11 +204,15 @@ def main(argv=None) -> int:
             print(f"[check_bench] FAIL {name}: baseline missing "
                   f"({base_path}) — record with --write")
             failures += 1
+            rows.append((name, "MISSING-BASELINE",
+                         ["record with --write"]))
             continue
         if not os.path.exists(fresh_path):
             print(f"[check_bench] FAIL {name}: fresh result missing "
                   f"({fresh_path}) — did the bench step run?")
             failures += 1
+            rows.append((name, "MISSING-RESULT",
+                         ["did the bench step run?"]))
             continue
         drift = check_payload(_load(base_path), _load(fresh_path),
                               spec[name])
@@ -179,8 +224,11 @@ def main(argv=None) -> int:
                 print(f"    {d}")
             if len(drift) > 40:
                 print(f"    ... and {len(drift) - 40} more")
+            rows.append((name, "DRIFT", drift))
         else:
             print(f"[check_bench] OK   {name}")
+            rows.append((name, "OK", []))
+    _emit_summary(rows)
     if failures:
         print(f"[check_bench] DRIFT in {failures}/{len(names)} gated "
               f"benchmark(s); if intentional, re-record with "

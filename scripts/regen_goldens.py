@@ -51,11 +51,14 @@ def verify_golden_plans() -> int:
     count; raises `PlanCheckError` on the first violation."""
     import test_des as T
     from repro.core import workloads as W
-    from repro.core.analysis.verify import verify_program
+    from repro.core.analysis.verify import (verify_cache_overlay,
+                                            verify_program)
+    from repro.core.des import _build_bundle, cache_overlay
     from repro.core.plan import SYSTEMS, compile_program, duration_vector
     from repro.core.transport import TRANSPORTS
 
     seen = set()
+    cache_cells = set()
     for cfg in T.GOLDEN_CONFIGS.values():
         spec = SYSTEMS[cfg["system"]]
         suite = W.REGISTRY if cfg.get("suite") == "REGISTRY" else W.SUITE
@@ -63,16 +66,29 @@ def verify_golden_plans() -> int:
         for w in suite.values():
             for cold in (False, True):
                 cell = (spec.name, w.name, cold)
-                if cell in seen:
-                    continue
-                seen.add(cell)
-                prog = compile_program(spec, w.profile, cold,
-                                       kernel_bypass=kb)
-                verify_program(
-                    prog, durations=duration_vector(spec, w, cold),
-                    subject=f"golden:{spec.name}/{w.name}/"
-                            f"{'cold' if cold else 'warm'}")
-    return len(seen)
+                who = (f"golden:{spec.name}/{w.name}/"
+                       f"{'cold' if cold else 'warm'}")
+                if cell not in seen:
+                    seen.add(cell)
+                    prog = compile_program(spec, w.profile, cold,
+                                           kernel_bypass=kb)
+                    verify_program(
+                        prog, durations=duration_vector(spec, w, cold),
+                        subject=who)
+                # cache-enabled golden configs (ISSUE 10): re-derive
+                # the SharedCache opcode overlay for every cell the run
+                # can execute and verify it against the base bundle —
+                # overlay drift gates with golden drift
+                if cfg.get("cache") is not None \
+                        and cell not in cache_cells:
+                    cache_cells.add(cell)
+                    prog2, tmpl = _build_bundle(spec, w, cold, kb)
+                    cops, cops2, acc = cache_overlay(
+                        prog2, tmpl[4], tmpl[5], w.profile)
+                    verify_cache_overlay(
+                        prog2, tmpl[4], tmpl[5], cops, cops2, acc,
+                        w.profile, subject=who + "/cached")
+    return len(seen) + len(cache_cells)
 
 
 def main() -> int:

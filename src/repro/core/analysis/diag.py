@@ -60,6 +60,9 @@ V_PUTORD = "V-PUTORD"              # put_ordinal != write_net ordinal
 V_RESTORE = "V-RESTORE"            # restore_idx mislowered
 V_GROUPS = "V-GROUPS"              # breakdown-group arrays inconsistent
 V_DUR = "V-DUR"                    # duration vector misaligned
+V_CACHE_OP = "V-CACHE-OP"          # cache access list != profile
+V_CACHE_WIRE = "V-CACHE-WIRE"      # illegal cache-opcode patch position
+V_CACHE_COVER = "V-CACHE-COVER"    # cacheable GET wire left unpatched
 
 
 class PlanCheckError(RuntimeError):

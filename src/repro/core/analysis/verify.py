@@ -23,7 +23,10 @@ check order so each corruption class maps to a distinct diagnostic
 7.  fault lowering (`V-FABRIC` / `V-BGROUP` / `V-PUTORD` /
     `V-RESTORE`);
 8.  breakdown-group arrays (`V-GROUPS`) and, when a duration vector is
-    supplied, its alignment (`V-DUR`).
+    supplied, its alignment (`V-DUR`);
+9.  SharedCache opcode overlays, when one is supplied to
+    `verify_cache_overlay` (`V-CACHE-OP` / `V-CACHE-WIRE` /
+    `V-CACHE-COVER`).
 """
 from __future__ import annotations
 
@@ -34,8 +37,10 @@ from repro.core.plan import (
     SYSTEMS,
     PhasePlan,
     PlanProgram,
+    cache_vector,
     phase_group,
 )
+from repro.core.workloads import Get, IOProfile, Put
 
 from .diag import (
     V_BARRIER_ASYNC,
@@ -43,6 +48,9 @@ from .diag import (
     V_BARRIER_RELEASE,
     V_BARRIER_RESPOND,
     V_BGROUP,
+    V_CACHE_COVER,
+    V_CACHE_OP,
+    V_CACHE_WIRE,
     V_CSR,
     V_DUR,
     V_EDGE,
@@ -363,3 +371,83 @@ def verify_program(program: PlanProgram,
         if not plan.cold and durations[names.index("restore")] != 0.0:
             _fail(V_DUR, who,
                   "warm plan carries a nonzero restore duration")
+
+
+def verify_cache_overlay(program: PlanProgram,
+                         base_ops: tuple, base_ops2: tuple,
+                         ops: tuple, ops2: tuple,
+                         accesses: tuple, profile: IOProfile, *,
+                         subject: str | None = None) -> None:
+    """Invariants of one SharedCache opcode overlay
+    (`des.cache_overlay` output) against its base bundle + profile.
+
+    Independently re-derives — via `plan.cache_vector` and the phase
+    names, never the overlay code itself — where the cache opcode may
+    legally appear, and checks:
+
+    * `V-CACHE-WIRE`: every patched position is the ``fetch_net`` of a
+      *cacheable* GET and the transition is exactly wire -> cache (a
+      group-head ``fetch_net`` keeps its slot opcode in ``ops`` and
+      patches only the post-grant array);
+    * `V-CACHE-COVER`: no cacheable GET's wire opcode is left
+      unpatched in either array;
+    * `V-CACHE-OP`: the replayed access list matches the profile in
+      order, keys, sizes, hint promotion, and phase indices — the twin
+      `CacheState`'s input, so both executors consult the cache
+      identically.
+    """
+    from repro.core.des import _OP_CACHE, _OP_WIRE
+    who = subject if subject is not None else "<program>"
+    names = program.names
+    n = len(names)
+    for label, arr in (("base ops", base_ops), ("base ops2", base_ops2),
+                       ("ops", ops), ("ops2", ops2)):
+        if len(arr) != n:
+            _fail(V_CACHE_OP, who,
+                  f"{label} has {len(arr)} entries for {n} phases")
+    cvec = cache_vector(names)
+    net_pi = {gi: i for i, gi in enumerate(cvec) if gi >= 0}
+    cpu_pi: dict[int, int] = {}
+    for i, nm in enumerate(names):
+        base, _, idx = nm.partition("[")
+        if base == "fetch_cpu":
+            cpu_pi[int(idx.rstrip("]"))] = i
+    legal: set[int] = set()
+    want: list[tuple] = []
+    gi = pk = 0
+    for op in profile.ops:
+        if isinstance(op, Get):
+            if op.cacheable:
+                pi = net_pi.get(gi)
+                if pi is None:
+                    _fail(V_CACHE_COVER, who,
+                          f"cacheable GET {gi} has no fetch_net phase")
+                legal.add(pi)
+                lks = op.key or f"g{gi}"
+                want.append(("g", lks, lks if op.shared else None,
+                             op.size_bytes, op.prefetchable, pi,
+                             cpu_pi.get(gi, -1)))
+            gi += 1
+        elif isinstance(op, Put):
+            want.append(("p", op.key or f"p{pk}", op.size_bytes))
+            pk += 1
+    for label, base_arr, arr in (("ops", base_ops, ops),
+                                 ("ops2", base_ops2, ops2)):
+        for i in range(n):
+            if arr[i] != base_arr[i]:
+                if i not in legal:
+                    _fail(V_CACHE_WIRE, who,
+                          f"{label}[{i}] ({names[i]!r}) patched outside "
+                          f"a cacheable GET's fetch_net")
+                if base_arr[i] != _OP_WIRE or arr[i] != _OP_CACHE:
+                    _fail(V_CACHE_WIRE, who,
+                          f"{label}[{i}] ({names[i]!r}): illegal patch "
+                          f"{base_arr[i]} -> {arr[i]}")
+            elif i in legal and base_arr[i] == _OP_WIRE:
+                _fail(V_CACHE_COVER, who,
+                      f"{label}[{i}] ({names[i]!r}) holds the wire "
+                      f"opcode but was not patched for the cache")
+    if tuple(accesses) != tuple(want):
+        _fail(V_CACHE_OP, who,
+              f"cache access list disagrees with the profile: "
+              f"{tuple(accesses)} vs expected {tuple(want)}")

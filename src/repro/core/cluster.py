@@ -38,6 +38,7 @@ from dataclasses import dataclass, field
 from repro.core import faults as FA
 from repro.core import guardrails as GR
 from repro.core import workloads as W
+from repro.core.cache import CacheSpec
 from repro.core.des import (_C_OWN, _CRUN, _ENGINE_ALIASES, _R_OWN,
                             CalendarQueue, DensitySimulator, EventLoop,
                             SimResult)
@@ -126,6 +127,10 @@ class NodeSpec:
     max_vms_per_node: int = 280
     guardrails: GR.GuardrailPolicy | None = None
     faults: FA.FaultSchedule | None = None
+    cache: CacheSpec | None = None    # per-node SharedCache (each member
+                                      # host owns its own CacheState, so
+                                      # affinity dispatch compounds with
+                                      # cache warmth)
     drains: tuple[GR.DrainWindow, ...] = ()
     up_at_s: float = 0.0
 
@@ -266,6 +271,7 @@ class ClusterSimulator:
                 max_vms_per_node=ns.max_vms_per_node, suite=suite,
                 arrival_pattern=spec.arrival_pattern, engine=engine,
                 faults=ns.faults, guardrails=ns.guardrails,
+                cache=ns.cache,
                 verify_plans=verify_plans, loop=self.loop,
                 gen_arrivals=False)
             for ns in self._members_spec]

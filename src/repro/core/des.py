@@ -63,6 +63,7 @@ from repro.core import guardrails as GR
 from repro.core import metrics as M
 from repro.core import plan as P
 from repro.core import workloads as W
+from repro.core.cache import CacheSpec, CacheState
 from repro.core.plan import (SYSTEMS, PlanProgram, SystemSpec, compile_plan,
                              compile_program)
 from repro.core.trace import (generate_arrivals, merge_streams,
@@ -618,6 +619,9 @@ _OP_SLOT = 0       # backend-group head: take a slot, then _EXEC
 _OP_ZERO = 1       # zero duration: complete via the zero-delay FIFO
 _OP_CORE = 2       # timed, on a node core
 _OP_WIRE = 3       # timed, pure latency
+_OP_CACHE = 4      # timed, pure latency, SharedCache-eligible GET wire
+                   # phase: a hit shrinks its duration to the arena
+                   # service time (event discipline identical to _WIRE)
 
 # compression template (tmpl[9]): the static inputs of the solo-
 # schedule replay, built once per (variant, workload, coldness):
@@ -715,6 +719,10 @@ class SimResult:
     queued: int = 0
     shed: dict | None = None
     rejections: dict | None = None
+    # SharedCache outputs (None unless the run had a CacheSpec): the
+    # CacheState counter snapshot — hits/misses/evictions are the
+    # cross-executor count-parity contract with the threaded node.
+    cache_stats: dict | None = None
 
     def slowdowns(self) -> dict[str, float]:
         out = {}
@@ -896,6 +904,55 @@ def _build_bundle(spec: SystemSpec, w: "W.Workload", cold: bool,
     return (prog, tmpl)
 
 
+def cache_overlay(prog: PlanProgram, ops: tuple, ops2: tuple,
+                  profile: "W.IOProfile"):
+    """The SharedCache overlay for one compiled bundle: fresh opcode
+    arrays with `_OP_CACHE` patched over `_OP_WIRE` at every
+    cache-consulting GET's ``fetch_net[i]`` position (each array only
+    where it holds the wire opcode — a group-head ``fetch_net`` keeps
+    `_OP_SLOT` at ready time and patches its post-grant opcode), plus
+    the per-invocation access list the twin `CacheState` replays:
+
+    * ``("g", lk_suffix, ck_suffix|None, size, hinted, net_pi, cpu_pi)``
+      per consulted GET — ``lk_suffix`` names the logical object
+      (`Get.key` or positional), ``ck_suffix`` is set when the content
+      is `shared` across deployed copies (weight shards — dedups);
+      ``hinted`` is the GET's prefetch-hint promotion (admission);
+    * ``("p", lk_suffix, size)`` per PUT (write-allocation).
+
+    A `Get` with ``cacheable=False`` is fully transparent: no entry, no
+    opcode patch — both executors bypass the plane for it.
+    `scripts/regen_goldens.py --check` re-verifies every overlay via
+    `analysis.verify.verify_cache_overlay`."""
+    cvec = P.cache_vector(prog.names)
+    net_pi = {gi: i for i, gi in enumerate(cvec) if gi >= 0}
+    cpu_pi: dict[int, int] = {}
+    for i, nm in enumerate(prog.names):
+        base, _, idx = nm.partition("[")
+        if base == "fetch_cpu":
+            cpu_pi[int(idx.rstrip("]"))] = i
+    cops, cops2 = list(ops), list(ops2)
+    accesses: list[tuple] = []
+    gi = pk = 0
+    for op in profile.ops:
+        if isinstance(op, W.Get):
+            if op.cacheable:
+                pi = net_pi[gi]
+                if cops[pi] == _OP_WIRE:
+                    cops[pi] = _OP_CACHE
+                if cops2[pi] == _OP_WIRE:
+                    cops2[pi] = _OP_CACHE
+                lks = op.key or f"g{gi}"
+                accesses.append(("g", lks, lks if op.shared else None,
+                                 op.size_bytes, op.prefetchable, pi,
+                                 cpu_pi.get(gi, -1)))
+            gi += 1
+        elif isinstance(op, W.Put):
+            accesses.append(("p", op.key or f"p{pk}", op.size_bytes))
+            pk += 1
+    return tuple(cops), tuple(cops2), tuple(accesses)
+
+
 #: selectable DES engines (see README "Engines"):
 #: * ``legacy``   — pre-refactor PhasePlan walker (parity reference);
 #: * ``classic``  — PR-3 fused PlanProgram loop, every phase an event;
@@ -920,6 +977,7 @@ class DensitySimulator:
                  engine: str = "hot",
                  faults: "FA.FaultSchedule | None" = None,
                  guardrails: "GR.GuardrailPolicy | None" = None,
+                 cache: "CacheSpec | None" = None,
                  verify_plans: bool = False,
                  loop: "EventLoop | None" = None,
                  gen_arrivals: bool = True):
@@ -936,6 +994,20 @@ class DensitySimulator:
         self._compress = engine in ("hot", "calendar")
         self.compressed_invocations = 0
         self.materializations = 0
+        #: SharedCache: one `CacheState` for this sim's node group (a
+        #: cluster member == one host, so each member owns its own).
+        #: A spec routes every invocation through the faulted
+        #: PlanProgram interpreter — synthesizing an EMPTY FaultSchedule
+        #: when none was given, which is pinned bit-for-bit against the
+        #: fault-free engines — so all four engines drive the one
+        #: CacheState in identical virtual-time order and hit/miss/
+        #: eviction counts cannot depend on the engine. ``None``
+        #: disables everything: the fault-free paths are untouched.
+        self._cache_spec = cache
+        self._cache = CacheState(cache) if cache is not None else None
+        self._cprogs: dict = {}     # (base, cold) -> (tmpl', accesses)
+        if cache is not None and faults is None:
+            faults = FA.FaultSchedule.empty()
         #: FaultPlane: a schedule routes every invocation through the
         #: faulted PlanProgram interpreter (both engines — the event
         #: discipline mirrors `_start`/`_hot` exactly, so an *empty*
@@ -1101,6 +1173,57 @@ class DensitySimulator:
                 self._verified.add(key)
             self._progs[key] = bundle
         return bundle
+
+    def _cache_bundle(self, base_name: str, cold: bool):
+        """Cache-enabled (prog, template, accesses) for one workload:
+        the shared bundle with the `_OP_CACHE` overlay patched into
+        fresh opcode arrays — the per-sim `_cprogs` dict keeps the
+        process-wide `_BUNDLES` templates pristine for cache-disabled
+        runs (bit-for-bit golden safety)."""
+        key = (base_name, cold)
+        rec = self._cprogs.get(key)
+        if rec is None:
+            prog, tmpl = self._program(base_name, cold)
+            w = self._suite[base_name]
+            cops, cops2, accesses = cache_overlay(prog, tmpl[4], tmpl[5],
+                                                  w.profile)
+            tmpl = tmpl[:4] + (cops, cops2) + tmpl[6:]
+            rec = (prog, tmpl, accesses)
+            self._cprogs[key] = rec
+        return rec
+
+    def _cache_access(self, fn: str, base: str, t_arr: float,
+                      accesses: tuple, durs: tuple) -> tuple:
+        """Replay one invocation's declared GET/PUT trace against the
+        sim's `CacheState` at arrival, in virtual-time service order —
+        the same serial order the threaded node's trace drives the twin
+        machine, so the counters are its replay-verified prediction.
+        Returns the run's duration vector with each hit's
+        ``fetch_net[i]`` shrunk to the arena hit service time and its
+        SDK cpu cost zeroed — exactly what the threaded hit path skips.
+        Logical keys are per *deployed function* (a node caches what
+        its tenants re-read); content keys collapse to the workload
+        base for `shared` GETs and per-put output streams (dedup)."""
+        st = self._cache
+        spec = self._cache_spec
+        patched = None
+        for a in accesses:
+            if a[0] == "g":
+                _, lks, cks, size, hinted, net_pi, cpu_pi = a
+                lk = f"{fn}/{lks}"
+                ck = f"{base}/{cks}" if cks is not None else lk
+                if st.lookup(lk) is not None:
+                    if patched is None:
+                        patched = list(durs)
+                    patched[net_pi] = spec.hit_duration_s(size)
+                    if cpu_pi >= 0:
+                        patched[cpu_pi] = 0.0
+                else:
+                    st.fill(lk, ck, size, hinted=hinted)
+            else:
+                _, lks, size = a
+                st.write(f"{fn}/{lks}@{t_arr!r}", f"{base}/{lks}", size)
+        return durs if patched is None else tuple(patched)
 
     def _durations(self, base_name: str, cold: bool) -> dict[str, float]:
         key = (base_name, cold)
@@ -2015,6 +2138,27 @@ class DensitySimulator:
 
     def _execute_faulted(self, inst: SimInstance, t_arr: float,
                          cold: bool) -> None:
+        if self._cache is not None:
+            # SharedCache: resolve the overlay bundle (separate cache —
+            # never the shared unpatched `rec`/_BUNDLES templates),
+            # replay the invocation's GET/PUT trace against the twin
+            # CacheState at arrival, and give the run a per-invocation
+            # duration vector with its hits shrunk. A crash re-drive
+            # (`_f_rearrive`) passes through here again and re-consults
+            # the cache — exactly like the threaded node's retry.
+            prog, tmpl, accesses = self._cache_bundle(
+                self._fnrec[inst.fn][_F_BASE], cold)
+            durs = self._cache_access(inst.fn,
+                                      self._fnrec[inst.fn][_F_BASE],
+                                      t_arr, accesses, tmpl[2])
+            node = self.nodes[inst.node]
+            frun = _FaultedRun(prog, tmpl, node, inst, inst.fn, t_arr)
+            frun.durs = durs
+            self.put_ledger.setdefault(frun.key, set())
+            self._live.append(frun)
+            for c in tmpl[6]:              # root codes: zero-indegree
+                self._f_start(frun, c)
+            return
         rec = self._fnrec[inst.fn]
         bundle = rec[_F_COLD] if cold else rec[_F_WARM]
         if bundle is None:
@@ -2087,9 +2231,9 @@ class DensitySimulator:
             else:
                 frun.inflight[pi] = 3          # queued for a core
                 frun.cpu_wait.append((frun, ev))
-        elif op == _OP_WIRE:
-            frun.inflight[pi] = 2              # on the wire
-            loop.at(now + d, self._f_done, frun, ev)
+        elif op == _OP_WIRE or op == _OP_CACHE:
+            frun.inflight[pi] = 2              # on the wire (a cache
+            loop.at(now + d, self._f_done, frun, ev)   # hit: short wire)
         elif op == _OP_SLOT:
             state = frun.be
             if state[0] < state[1]:
@@ -2129,7 +2273,7 @@ class DensitySimulator:
             else:
                 frun.inflight[pi] = 3
                 frun.cpu_wait.append((frun, ev))
-        elif op == _OP_WIRE:
+        elif op == _OP_WIRE or op == _OP_CACHE:
             frun.inflight[pi] = 2
             loop.at(now + d, self._f_done, frun, ev)
         else:
@@ -2474,7 +2618,9 @@ class DensitySimulator:
             goodput=goodput, slo_violations=slo_bad,
             queued=self._guard.queued if guarded else 0,
             shed=dict(self.shed) if guarded else None,
-            rejections=dict(self.rejections) if guarded else None)
+            rejections=dict(self.rejections) if guarded else None,
+            cache_stats=(self._cache.snapshot()
+                         if self._cache is not None else None))
 
 
 def find_density(system: str, *, lo: int = 20, hi: int = 800,

@@ -87,12 +87,18 @@ class HandlerContext:
 
 @dataclass
 class GuestContext:
-    """What the guest is allowed to hold: opaque identifiers only."""
+    """What the guest is allowed to hold: opaque identifiers only.
+
+    `hinted` is the set of (bucket, key) pairs whose GET was promoted
+    into RPC metadata at ingress (SharedCache admission evidence);
+    `nocache` the pairs carrying the per-GET cache opt-out header."""
 
     tenant: str
     cred_handle: str
     invocation_id: str = ""
     prefetch: PrefetchHandle | None = None
+    hinted: frozenset = frozenset()
+    nocache: frozenset = frozenset()
     state: dict = field(default_factory=dict)
 
 
@@ -204,7 +210,9 @@ class NexusClient:
             return {"Body": slot.view(), "ContentLength": slot.used,
                     "_slot": slot}
         slot = self._retry(lambda: self._backend.fetch_sync(
-            self._ctx.tenant, self._ctx.cred_handle, Bucket, Key))
+            self._ctx.tenant, self._ctx.cred_handle, Bucket, Key,
+            hinted=(Bucket, Key) in self._ctx.hinted,
+            cacheable=(Bucket, Key) not in self._ctx.nocache))
         self._charge_stub_call("aws", slot.used)
         return {"Body": slot.view(), "ContentLength": slot.used,
                 "_slot": slot}

@@ -25,6 +25,7 @@ class InputHint:
     bucket: str
     key: str
     size_bytes: int | None       # None -> size opaque (streaming fallback)
+    cacheable: bool = True       # False -> opted out of SharedCache
 
     @property
     def prefetchable(self) -> bool:
@@ -39,7 +40,8 @@ class OutputHint:
 
 def _input_from(d: dict) -> InputHint | None:
     if "bucket" in d and "key" in d:
-        return InputHint(d["bucket"], d["key"], d.get("size"))
+        return InputHint(d["bucket"], d["key"], d.get("size"),
+                         bool(d.get("cache", True)))
     return None
 
 
@@ -97,16 +99,20 @@ def extract_hints(
 def make_event(inputs: Iterable[Sequence], outputs: Iterable[Sequence]) -> dict:
     """Build a trigger event (test/benchmark helper).
 
-    ``inputs`` is an iterable of ``(bucket, key)`` or
-    ``(bucket, key, size)`` tuples (size ``None`` -> opaque);
-    ``outputs`` of ``(bucket, key)`` tuples.
+    ``inputs`` is an iterable of ``(bucket, key)``,
+    ``(bucket, key, size)`` or ``(bucket, key, size, cacheable)``
+    tuples (size ``None`` -> opaque; cacheable ``False`` -> the
+    SharedCache opt-out header); ``outputs`` of ``(bucket, key)``
+    tuples.
     """
     ins = []
     for item in inputs:
         bucket, key, *rest = item
         size = rest[0] if rest else None
+        cacheable = rest[1] if len(rest) > 1 else True
         ins.append({"bucket": bucket, "key": key,
-                    **({"size": size} if size is not None else {})})
+                    **({"size": size} if size is not None else {}),
+                    **({"cache": False} if not cacheable else {})})
     return {
         "inputs": ins,
         "outputs": [{"bucket": b, "key": k} for b, k in outputs],

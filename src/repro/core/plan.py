@@ -689,6 +689,18 @@ def duration_vector(spec: SystemSpec, w: Workload,
     return tuple(d.get(n, 0.0) for n in p.phase_names)
 
 
+def cache_vector(names: tuple[str, ...]) -> tuple[int, ...]:
+    """Per-phase GET ordinal eligible for SharedCache service, aligned
+    with a program's phase index space: ``fetch_net[i]`` maps to ``i``,
+    every other phase to ``-1``. The DES cache overlay and PlanVerify's
+    overlay check both re-derive eligibility from this one mapping."""
+    out = []
+    for n in names:
+        base, _, idx = n.partition("[")
+        out.append(int(idx.rstrip("]")) if base == "fetch_net" else -1)
+    return tuple(out)
+
+
 def unloaded_latency(spec: SystemSpec, w: Workload) -> float:
     """Warm, zero-contention critical path (the paper's SLO denominator)
     — by construction the warm plan's critical path."""

@@ -39,6 +39,7 @@ from repro.core import metrics as M
 from repro.core.analysis.diag import (PC_CONTRACT, PC_DUP_KEY,
                                       ProfileContractError)
 from repro.core.backend import NexusBackend
+from repro.core.cache import CacheSpec, SharedCache
 from repro.core.faults import FaultHooks
 from repro.core.frontend import (BaselineClient, GuestContext,
                                  HandlerContext, NexusClient)
@@ -425,6 +426,7 @@ class WorkerNode:
                  plan_stall_timeout_s: float = 120.0,
                  static_check: bool = True,
                  guardrails: "GR.GuardrailPolicy | None" = None,
+                 cache: CacheSpec | None = None,
                  client_max_retries: int = 3,
                  retry_backoff_base_s: float = 0.002,
                  connect_timeout_s: float = 30.0):
@@ -464,6 +466,18 @@ class WorkerNode:
         #: so `drain()`/`resume()` work on any node.
         self.guardrails = (guardrails if guardrails is not None
                            else GR.GuardrailPolicy())
+        #: SharedCache plane (§SharedCache): node-owned like the arena
+        #: registry and token vault — it survives backend crashes and is
+        #: re-attached by `_make_backend`, so a supervisor restart never
+        #: cold-starts the cache (crash safety is the etag revalidation's
+        #: job, not eviction's).
+        #: the arena tier holds REAL (byte-scaled) payloads while the
+        #: capacity/ counters reason over nominal sizes — size the
+        #: backing region accordingly (TenantArena preallocates it)
+        self.cache_plane = (
+            SharedCache(cache,
+                        arena_mb=max(1.0, cache.capacity_mb * byte_scale))
+            if cache is not None else None)
         self._t0 = time.monotonic()
         self.guard = GR.GuardState(
             self.guardrails, clock=lambda: time.monotonic() - self._t0)
@@ -510,7 +524,8 @@ class WorkerNode:
         return NexusBackend(self.remote, self.acct,
                             transport_name=self.spec.transport,
                             arenas=self._arenas, tokens=self._tokens,
-                            fault_hooks=self.fault_hooks)
+                            fault_hooks=self.fault_hooks,
+                            cache=self.cache_plane)
 
     @property
     def backend(self) -> NexusBackend | None:
@@ -580,6 +595,12 @@ class WorkerNode:
 
     # ------------------------------------------------------------- metrics
 
+    def cache_stats(self) -> dict | None:
+        """SharedCache counter snapshot (None when the node runs
+        cache-less) — the threaded side of the DES parity contract."""
+        return (self.cache_plane.snapshot()
+                if self.cache_plane is not None else None)
+
     def node_memory_mb(self) -> M.MemoryAccount:
         acct = M.MemoryAccount()
         n = 0
@@ -629,12 +650,15 @@ class WorkerNode:
                    else GR.Rejected)
             raise exc(verdict.reason, retry_after_s=verdict.delay_s)
         inputs = []
-        for i in range(len(w.profile.gets)):
+        for i, g in enumerate(w.profile.gets):
             k = input_key if (input_key is not None and i == 0) \
                 else self._input_key(fn_name, i)
             size = (None if opaque or not w.deterministic_input
                     else self.store.head("in", k).size)
-            inputs.append(("in", k, size))
+            # a Get declared cacheable=False rides the event as an
+            # explicit `"cache": false` header — the SharedCache opt-out
+            # travels with the hint, exactly like the size promotion
+            inputs.append(("in", k, size, g.cacheable))
         outputs = [("out", f"{inv_id}-out" + ("" if k == 0 else f"-{k}"))
                    for k in range(len(w.profile.puts))]
         event = make_event(inputs, outputs)
@@ -678,7 +702,7 @@ class WorkerNode:
             self.spec, profile, cold=cold_expected,
             kernel_bypass=TRANSPORTS[self.spec.transport].kernel_bypass)
         plan = program.plan
-        self._make_client(ctx)
+        self._make_client(ctx, profile)
         guest = _GuestRun(self, ctx, profile, self.plan_stall_timeout_s)
         ctx.guest = guest
 
@@ -731,7 +755,8 @@ class WorkerNode:
             raise GR.DeadlineExceeded("deadline", result=res)
         return res
 
-    def _make_client(self, ctx: _Invocation) -> None:
+    def _make_client(self, ctx: _Invocation,
+                     profile: IOProfile | None = None) -> None:
         spec = self.spec
         if spec.coupled:
             hooks = self.fault_hooks
@@ -741,9 +766,24 @@ class WorkerNode:
                 fault=lambda: (hooks.guest_crash is not None
                                and hooks.guest_crash()))
         else:
+            # SharedCache admission metadata, derived once per
+            # invocation from hint × effective-profile agreement:
+            # `hinted` marks GETs promoted at ingress (the DES's
+            # `prefetchable` bit — the two executors must agree on it
+            # for hit/miss parity); `nocache` is the full-bypass set
+            # (declared Get.cacheable=False or the event's
+            # `"cache": false` header).
+            gets = profile.gets if profile is not None else ()
+            hinted = frozenset(
+                (h.bucket, h.key) for h, g in zip(ctx.inputs, gets)
+                if g.prefetchable)
+            nocache = frozenset(
+                (h.bucket, h.key) for h, g in zip(ctx.inputs, gets)
+                if not (g.cacheable and h.cacheable))
             ctx.gctx = GuestContext(tenant=ctx.w.name,
                                     cred_handle=self._creds[ctx.w.name],
-                                    invocation_id=ctx.inv_id)
+                                    invocation_id=ctx.inv_id,
+                                    hinted=hinted, nocache=nocache)
             ctx.client = NexusClient(
                 ctx.gctx, lambda: self.supervisor.backend, self.acct,
                 max_retries=self.client_max_retries,

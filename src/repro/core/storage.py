@@ -82,7 +82,10 @@ class ObjectStore:
         oracle's."""
         prefix = bucket + "/"
         with self._lock:
-            return {k[len(prefix):]: bytes(v)
+            # bytes(v) on a bytes object returns v itself — a live
+            # reference into the store, not a snapshot. Route through
+            # memoryview to force a genuine copy.
+            return {k[len(prefix):]: bytes(memoryview(v))
                     for k, v in self._data.items() if k.startswith(prefix)}
 
 

@@ -33,17 +33,30 @@ MB = 1024 * 1024
 @dataclass(frozen=True)
 class Get:
     """One declared object GET. `prefetchable` marks a deterministic
-    ingress hint (bucket/key/size known before the VM is up, §4.2.2)."""
+    ingress hint (bucket/key/size known before the VM is up, §4.2.2).
+
+    The SharedCache plane (`core/cache.py`) reads three more fields:
+    `key` names the logical object the GET re-reads across invocations
+    (``None`` -> positional, distinct per op); `shared` marks content
+    identical across deployed copies of the workload (weight shards —
+    dedups in the cache); `cacheable` opts a GET out of cache admission
+    entirely (streaming-ish reads not worth caching)."""
 
     size_bytes: int
     prefetchable: bool = True
+    key: str | None = None
+    shared: bool = False
+    cacheable: bool = True
 
 
 @dataclass(frozen=True)
 class Put:
-    """One declared durable object PUT (the response gates on its ack)."""
+    """One declared durable object PUT (the response gates on its ack).
+    `key` names the logical output stream for the cache plane's
+    write-allocation (``None`` -> positional)."""
 
     size_bytes: int
+    key: str | None = None
 
 
 @dataclass(frozen=True)
@@ -532,35 +545,42 @@ def ml_suite(scale: str = "full") -> dict[str, Workload]:
         # at ingress -> overlaps the snapshot restore), prompt, prefill
         # + one decode step, logits out.
         Workload("LLM-COLD", IOProfile((
-            *[Get(s) for s in llm["weights_shard_bytes"]],
-            Get(llm["prompt_bytes"]),
+            *[Get(s, key=f"shard{j}", shared=True)
+              for j, s in enumerate(llm["weights_shard_bytes"])],
+            Get(llm["prompt_bytes"], key="prompt"),
             ComputeSegment(mcyc(llm, "prefill") + mcyc(llm, "decode")),
             Put(llm["cold_out_bytes"]))), libs["llm"],
             _ml_llm_cold_handler),
         # prefill tier: params + prompt in, KV cache out (the durable
         # handoff object a decode tier consumes).
         Workload("LLM-PREFILL", IOProfile((
-            Get(llm["params_bytes"]), Get(llm["prompt_bytes"]),
+            Get(llm["params_bytes"], key="params", shared=True),
+            Get(llm["prompt_bytes"], key="prompt"),
             ComputeSegment(mcyc(llm, "prefill")),
             Put(llm["kv_prefill_bytes"]))), libs["llm"],
             _ml_llm_prefill_handler),
         # decode tier: per-step KV GET + async KV PUT writeback — the
-        # paper's state-heavy-function case.
+        # paper's state-heavy-function case. The params and KV GETs are
+        # stable logical keys: after the first step on a node the whole
+        # chain is served from the SharedCache.
         Workload("LLM-DECODE", IOProfile((
-            Get(llm["params_bytes"]), Get(llm["kv_in_bytes"]),
+            Get(llm["params_bytes"], key="params", shared=True),
+            Get(llm["kv_in_bytes"], key="kv"),
             ComputeSegment(mcyc(llm, "decode")),
-            Put(llm["kv_out_bytes"]))), libs["llm"],
+            Put(llm["kv_out_bytes"], key="kv"))), libs["llm"],
             _ml_llm_decode_handler),
         # batch encoder: params + token batch in, embedding block out.
         Workload("EMB", IOProfile((
-            Get(emb["params_bytes"]), Get(emb["enc_tokens_bytes"]),
+            Get(emb["params_bytes"], key="params", shared=True),
+            Get(emb["enc_tokens_bytes"], key="tokens"),
             ComputeSegment(mcyc(emb, "encode")),
             Put(emb["emb_bytes"]))), libs["emb"],
             _ml_emb_handler),
         # MoE: expert-shard fan-in (backbone + expert shards), one
         # routed batch, logits out.
         Workload("MOE", IOProfile((
-            *[Get(s) for s in moe["weights_shard_bytes"]],
+            *[Get(s, key=f"shard{j}", shared=True)
+              for j, s in enumerate(moe["weights_shard_bytes"])],
             ComputeSegment(mcyc(moe, "prefill")),
             Put(moe["moe_out_bytes"]))), libs["moe"],
             _ml_moe_handler),

@@ -28,6 +28,7 @@ import time
 from dataclasses import dataclass, field
 
 from repro.core import guardrails as GR
+from repro.core.cache import CacheSpec
 from repro.core.des import DensitySimulator, SimResult
 from repro.core.faults import FaultInjector, FaultSchedule
 from repro.core.runtime import WorkerNode
@@ -67,11 +68,12 @@ def schedule_from_seed(seed: int, horizon_s: float, *,
 
 def run_des(system: str, schedule: FaultSchedule | None, *,
             engine: str = "program", n: int = 30, seed: int = 2,
-            duration_s: float = 10.0) -> SimResult:
+            duration_s: float = 10.0,
+            cache: CacheSpec | None = None) -> SimResult:
     sched = schedule if schedule is not None else FaultSchedule.empty()
     return DensitySimulator(system, n, seed=seed, duration_s=duration_s,
                             warmup_s=0.0, engine=engine,
-                            faults=sched).run()
+                            faults=sched, cache=cache).run()
 
 
 def check_des_invariants(oracle: SimResult, faulted: SimResult,
@@ -108,14 +110,15 @@ class ThreadedOutcome:
 
 def run_threaded(system: str, schedule: FaultSchedule | None, *,
                  n_invocations: int = 6, spacing_s: float = 0.12,
-                 max_attempts: int = 8,
-                 ack_timeout_s: float = 0.5) -> ThreadedOutcome:
+                 max_attempts: int = 8, ack_timeout_s: float = 0.5,
+                 cache: CacheSpec | None = None,
+                 redrive_backoff_s: float = 0.0) -> ThreadedOutcome:
     """Drive `n_invocations` of the chaos suite through a WorkerNode
     while the schedule plays, re-driving failures under the SAME
     invocation id (idempotency keys keep at-least-once safe) until each
     caller holds exactly one successful response."""
     node = WorkerNode(system, writeback_ack_timeout_s=ack_timeout_s,
-                      plan_stall_timeout_s=30.0)
+                      plan_stall_timeout_s=30.0, cache=cache)
     suite = chaos_suite()
     try:
         for w in suite.values():
@@ -153,6 +156,11 @@ def run_threaded(system: str, schedule: FaultSchedule | None, *,
                         if attempts[inv_id] >= max_attempts:
                             raise
                         attempts[inv_id] += 1
+                        if redrive_backoff_s:
+                            # cached runs finish so fast that a bare
+                            # re-drive loop can exhaust its budget
+                            # inside one restart window — pace it
+                            time.sleep(redrive_backoff_s)
                         fut = node.invoke(fn, inv_id=inv_id)
             latency_total = time.monotonic() - t0
         finally:

@@ -148,6 +148,52 @@ class TestEndToEnd:
         assert check_bench.main(args) == 0        # now self-consistent
 
 
+# ------------------------------------ markdown job summary (ISSUE 10)
+
+class TestSummaryRenderer:
+    ROWS = [("density", "OK", []),
+            ("cache", "DRIFT", ["$.hits: 5 -> 7", "$.misses: 3 -> 1"]),
+            ("mlserve", "MISSING-RESULT", ["did the bench step run?"])]
+
+    def test_table_covers_every_row(self):
+        md = check_bench.render_summary(self.ROWS)
+        assert "| `density` | ✅ OK | — |" in md
+        assert "| `cache` | ❌ DRIFT | 2 |" in md
+        assert "| `mlserve` | ❌ MISSING-RESULT | 1 |" in md
+        assert "**1/3**" in md
+
+    def test_drift_details_are_collapsible_and_capped(self):
+        rows = [("big", "DRIFT", [f"$.m{i}: 0 -> 1" for i in range(12)])]
+        md = check_bench.render_summary(rows, max_details=8)
+        assert "<details>" in md and "</details>" in md
+        assert "`$.m7: 0 -> 1`" in md
+        assert "$.m8" not in md and "and 4 more" in md
+
+    def test_all_green_has_no_details_section(self):
+        md = check_bench.render_summary([("a", "OK", []), ("b", "OK", [])])
+        assert "**2/2**" in md and "<details>" not in md
+
+    def test_main_appends_to_step_summary_when_set(self, tmp_path,
+                                                   monkeypatch, capsys):
+        summary = tmp_path / "summary.md"
+        summary.write_text("# prior step\n")
+        monkeypatch.setenv("GITHUB_STEP_SUMMARY", str(summary))
+        args = TestEndToEnd()._setup(tmp_path, 110.0)
+        assert check_bench.main(args) == 1
+        text = summary.read_text()
+        assert text.startswith("# prior step\n")       # appended, not clobbered
+        assert "## Benchmark gate" in text
+        assert "| `demo` | ❌ DRIFT | 1 |" in text
+
+    def test_main_stays_plain_stdout_without_env(self, tmp_path,
+                                                 monkeypatch, capsys):
+        monkeypatch.delenv("GITHUB_STEP_SUMMARY", raising=False)
+        args = TestEndToEnd()._setup(tmp_path, 101.0)
+        assert check_bench.main(args) == 0
+        out = capsys.readouterr().out
+        assert "OK   demo" in out and "|" not in out
+
+
 # ------------------------------------------- the committed baselines gate
 
 class TestCommittedBaselines:

@@ -31,6 +31,7 @@ import os
 import pytest
 
 from repro.core import workloads as W
+from repro.core.cache import CacheSpec
 from repro.core.des import DensitySimulator, find_density
 from repro.core.faults import FaultSchedule, FaultSpec
 from repro.core.plan import SYSTEMS, compile_plan, phase_durations
@@ -78,10 +79,23 @@ GOLDEN_CONFIGS = {
     "cluster1/nexus/n160/seed7": dict(system="nexus", n=160, seed=7,
                                       duration_s=20.0, warmup_s=4.0,
                                       cluster=True),
+    # SharedCache goldens (ISSUE 10): cache-enabled runs pin the hit-
+    # shortened latency streams AND the CacheState counters under every
+    # engine — eviction order, admission, and dedup cannot drift
+    # silently. Two policy/admission corners are pinned.
+    "nexus/n120/seed3/cached": dict(
+        system="nexus", n=120, seed=3, duration_s=20.0, warmup_s=4.0,
+        cache=CacheSpec()),
+    "baseline/n120/seed3/cached": dict(
+        system="baseline", n=120, seed=3, duration_s=20.0, warmup_s=4.0,
+        cache=CacheSpec(capacity_mb=16.0, policy="clock", admit="all",
+                        seed=7)),
 }
 
 #: keys every engine mode must reproduce bit-for-bit under faults
 FAULTED_KEYS = [k for k in GOLDEN_CONFIGS if k.endswith("/faulted")]
+#: cache-enabled keys — pinned under every engine, counters included
+CACHED_KEYS = [k for k in GOLDEN_CONFIGS if k.endswith("/cached")]
 
 
 def _digest(result, sim):
@@ -91,12 +105,18 @@ def _digest(result, sim):
         xs = result.latencies.get(fn, [])
         h.update(fn.encode())
         h.update(",".join(x.hex() for x in xs).encode())
-    return {"completed": result.completed,
-            "cold_starts": result.cold_starts,
-            "n_latencies": sum(len(v) for v in result.latencies.values()),
-            "fsum": repr(math.fsum(x for v in result.latencies.values()
-                                   for x in v)),
-            "sha256": h.hexdigest()}
+    d = {"completed": result.completed,
+         "cold_starts": result.cold_starts,
+         "n_latencies": sum(len(v) for v in result.latencies.values()),
+         "fsum": repr(math.fsum(x for v in result.latencies.values()
+                                for x in v)),
+         "sha256": h.hexdigest()}
+    cs = getattr(result, "cache_stats", None)
+    if cs is not None:
+        # cache-enabled runs pin the full counter snapshot too — the
+        # DES side of the cross-executor count-parity contract
+        d["cache"] = dict(cs)
+    return d
 
 
 def _build(key, engine):
@@ -163,6 +183,18 @@ class TestParityGoldens:
         recovery they force (offloaded: group aborts + re-drives;
         baseline: whole-invocation kills) are pinned bit-for-bit under
         EVERY DES engine mode."""
+        sim = _build(key, engine)
+        assert _digest(sim.run(), sim) == GOLDEN[key], (key, engine)
+
+    @pytest.mark.parametrize("engine", ["legacy", "classic", "hot",
+                                        "calendar"])
+    @pytest.mark.parametrize("key", CACHED_KEYS)
+    def test_cached_goldens_pin_every_engine(self, key, engine):
+        """Cache-enabled runs (routed through the faulted interpreter
+        with an empty schedule) are pinned bit-for-bit under EVERY
+        engine, latencies and CacheState counters alike — hit
+        shortening, admission, eviction order, and dedup accounting
+        are all deterministic (ISSUE 10)."""
         sim = _build(key, engine)
         assert _digest(sim.run(), sim) == GOLDEN[key], (key, engine)
 

@@ -30,6 +30,7 @@ import pytest
 
 from repro.core import metrics as M
 from repro.core.backend import NexusBackend
+from repro.core.cache import CacheSpec
 from repro.core.des import DensitySimulator
 from repro.core.faults import (ACK_DROP, BACKEND_CRASH, FaultInjector,
                                FaultSchedule, FaultSpec, STORAGE_ERROR,
@@ -314,6 +315,103 @@ class TestThreadedChaosDifferential:
         tf = run_threaded("nexus", thr_sched)
         assert tf.responses.keys() == to.responses.keys()
         assert tf.stats.get("crashes", 0) >= 1
+
+
+class TestCachedChaosDifferential:
+    """SharedCache under the chaos contract (ISSUE 10): a crash must
+    never serve a stale or torn cached object. Cache-enabled runs are
+    held to the SAME invariants as plain ones — byte-identical durable
+    outputs and exactly-once responses vs a cache-enabled fault-free
+    oracle — across the full generated FaultSchedule matrix. The DES
+    half additionally pins engine agreement bit-for-bit *including*
+    cache counters."""
+
+    CACHE = CacheSpec(capacity_mb=32.0, admit="all", seed=5)
+    _des_oracles: dict = {}
+    _thr_oracles: dict = {}
+
+    @classmethod
+    def des_oracle(cls, system):
+        if system not in cls._des_oracles:
+            cls._des_oracles[system] = run_des(system, None,
+                                               cache=cls.CACHE)
+        return cls._des_oracles[system]
+
+    @classmethod
+    def thr_oracle(cls, system):
+        if system not in cls._thr_oracles:
+            cls._thr_oracles[system] = run_threaded(system, None,
+                                                    cache=cls.CACHE)
+        return cls._thr_oracles[system]
+
+    _THR = dict(cache=CACHE, max_attempts=20, redrive_backoff_s=0.04)
+
+    @settings(max_examples=CHAOS_EXAMPLES, **COMMON)
+    @given(st.integers(min_value=0, max_value=10_000),
+           st.floats(min_value=0.5, max_value=2.0))
+    def test_des_all_variants_cached(self, seed, intensity):
+        schedule = schedule_from_seed(seed, 10.0, intensity=intensity,
+                                      restart_delay_s=0.3)
+        for system in ALL_SYSTEMS:
+            oracle = self.des_oracle(system)
+            runs = {eng: run_des(system, schedule, engine=eng,
+                                 cache=self.CACHE)
+                    for eng in ("program", "legacy")}
+            assert (runs["program"].latencies
+                    == runs["legacy"].latencies), \
+                f"{system}: cached DES engines diverged, seed {seed}"
+            assert runs["program"].cache_stats \
+                == runs["legacy"].cache_stats
+            for eng, r in runs.items():
+                check_des_invariants(oracle, r,
+                                     f"{system}/cached/{eng}/{seed}")
+
+    @settings(max_examples=CHAOS_THREADED_EXAMPLES, **COMMON)
+    @given(st.integers(min_value=0, max_value=10_000))
+    def test_threaded_all_variants_cached(self, seed):
+        schedule = schedule_from_seed(seed, 1.0, intensity=1.5,
+                                      restart_delay_s=0.02)
+        for system in ALL_SYSTEMS:
+            faulted = run_threaded(system, schedule, **self._THR)
+            check_threaded_invariants(self.thr_oracle(system), faulted,
+                                      f"{system}/cached/{seed}")
+
+    def test_crash_cannot_serve_stale_cached_bytes(self):
+        """Directed staleness probe: overwrite a cached input in the
+        remote store *while the cache still holds the old bytes*, then
+        crash the backend. The post-crash invocation must observe the
+        NEW bytes — hits revalidate against the store's etag, so the
+        stale entry is refilled, never served."""
+        node = WorkerNode("nexus", cache=self.CACHE,
+                          plan_stall_timeout_s=30.0)
+        suite = chaos_suite()
+        name = next(iter(suite))
+        try:
+            node.deploy(suite[name])
+            node.seed_input(name)
+            node.invoke(name, inv_id="warm-0").result(timeout=60)
+            before = dict(node.store.list_bucket("out"))
+            # mutate the durable input under the warm cache, then crash
+            # (default filler is low-entropy — flip to 0xff bytes)
+            for key, val in node.store.list_bucket("in").items():
+                if key.startswith(name):
+                    node.store.put("in", key, b"\xff" * len(val))
+            node.supervisor.kill_backend()
+            deadline = time.monotonic() + 10.0
+            while not node.backend._alive:
+                assert time.monotonic() < deadline, "no restart"
+                time.sleep(0.01)
+            node.invoke(name, inv_id="probe-1").result(timeout=60)
+            after = dict(node.store.list_bucket("out"))
+            changed = [k for k in after
+                       if k in before and after[k] != before[k]] + \
+                      [k for k in after if k not in before]
+            assert changed, "post-crash invocation served stale " \
+                            "cached input bytes"
+            stats = node.cache_stats()
+            assert stats is not None and stats["lookups"] > 0
+        finally:
+            node.shutdown()
 
 
 # ------------------------------------- combined overload + faults (ISSUE 8)

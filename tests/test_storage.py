@@ -1,0 +1,184 @@
+"""core.storage unit suite (ISSUE 10 satellites): `FaultPlan` window
+queries, `RemoteStorage` per-op service-time / billing accounting, and
+the `ObjectStore.list_bucket` snapshot-copy regression.
+
+The window predicates (`slow_factor_at` / `failing_at`) implement
+half-open ``s <= t < e`` semantics; the boundary instants are pinned
+here because both the chaos harness and the DES fault lowering rely on
+an op AT a window's end instant being clean.
+"""
+import pytest
+
+from repro.core import metrics as M
+from repro.core.storage import (FaultPlan, ObjectStore, RemoteStorage,
+                                StorageError)
+from repro.core.transport import TRANSPORTS
+
+MB = 1024 * 1024
+
+
+# ----------------------------------------------------------- FaultPlan
+
+class TestFaultPlanWindows:
+    PLAN = FaultPlan(slow_windows=((2.0, 5.0, 8.0), (9.0, 10.0, 3.0)),
+                     fail_windows=((4.0, 6.0, 0.0),))
+
+    @pytest.mark.parametrize("t,factor", [
+        (1.999, 1.0),      # before the window
+        (2.0, 8.0),        # inclusive start instant
+        (3.5, 8.0),        # interior
+        (4.999, 8.0),      # last instant inside
+        (5.0, 1.0),        # exclusive end instant
+        (9.0, 3.0),        # second window start
+        (10.0, 1.0),       # second window end
+        (42.0, 1.0),       # far outside
+    ])
+    def test_slow_factor_boundaries(self, t, factor):
+        assert self.PLAN.slow_factor_at(t) == factor
+
+    @pytest.mark.parametrize("t,failing", [
+        (3.999, False), (4.0, True), (5.999, True), (6.0, False),
+    ])
+    def test_failing_boundaries(self, t, failing):
+        assert self.PLAN.failing_at(t) is failing
+
+    def test_first_matching_window_wins(self):
+        plan = FaultPlan(slow_windows=((0.0, 10.0, 2.0),
+                                       (5.0, 10.0, 9.0)))
+        assert plan.slow_factor_at(7.0) == 2.0
+
+    def test_empty_plan_is_clean(self):
+        plan = FaultPlan()
+        assert plan.slow_factor_at(0.0) == 1.0
+        assert not plan.failing_at(0.0)
+
+
+# ------------------------------------------------------- RemoteStorage
+
+def _remote(**kw):
+    """A RemoteStorage over a recording sleep stub — service times are
+    observed, never actually slept."""
+    sleeps: list[float] = []
+    store = ObjectStore()
+    remote = RemoteStorage(store, "tcp", M.CycleAccount(),
+                           sleep=sleeps.append, **kw)
+    return store, remote, sleeps
+
+
+class TestRemoteStorageAccounting:
+    def test_get_sleeps_the_transfer_latency(self):
+        store, remote, sleeps = _remote()
+        store.put("b", "k", b"z" * MB)
+        remote.get("b", "k")
+        assert sleeps == [TRANSPORTS["tcp"].transfer_latency(MB)]
+
+    def test_cost_scale_restores_nominal_service_time(self):
+        """byte-scaled nodes store 1/32 of the bytes but must sleep and
+        bill the FULL nominal transfer."""
+        store, remote, sleeps = _remote(cost_scale=32.0)
+        store.put("b", "k", b"z" * MB)
+        remote.get("b", "k")
+        assert sleeps == [TRANSPORTS["tcp"].transfer_latency(32 * MB)]
+
+    def test_billing_charges_nominal_bytes(self):
+        store, remote, _ = _remote(cost_scale=32.0)
+        store.put("b", "k", b"z" * MB)
+        base = remote.acct.cycles[M.HOST_KERNEL]
+        remote.get("b", "k")
+        spec = TRANSPORTS["tcp"]
+        want = (spec.host_kernel_mcyc_per_mb * 32.0
+                + spec.host_kernel_mcyc_per_msg)
+        assert remote.acct.cycles[M.HOST_KERNEL] - base \
+            == pytest.approx(want)
+
+    def test_counter_mode_slows_every_nth_op(self):
+        store, remote, sleeps = _remote(
+            faults=FaultPlan(slow_every=2, slow_factor=10.0))
+        store.put("b", "k", b"z" * MB)
+        for _ in range(4):
+            remote.get("b", "k")
+        t = TRANSPORTS["tcp"].transfer_latency(MB)
+        # seeding goes straight to the ObjectStore (no remote op), so
+        # the GETs are remote ops 1..4; every 2nd straggles
+        assert sleeps == pytest.approx([t, 10.0 * t, t, 10.0 * t])
+
+    def test_window_mode_stretches_ops_inside_the_window(self):
+        clock = {"t": 0.0}
+        store, remote, sleeps = _remote(
+            faults=FaultPlan(slow_windows=((1.0, 2.0, 4.0),),
+                             clock=lambda: clock["t"]))
+        store.put("b", "k", b"z" * MB)
+        t = TRANSPORTS["tcp"].transfer_latency(MB)
+        remote.get("b", "k")
+        clock["t"] = 1.5
+        remote.get("b", "k")
+        clock["t"] = 2.0                    # end instant: clean again
+        remote.get("b", "k")
+        assert sleeps == pytest.approx([t, 4.0 * t, t])
+
+    def test_fail_window_raises_transient_error(self):
+        clock = {"t": 5.0}
+        store, remote, _ = _remote(
+            faults=FaultPlan(fail_windows=((4.0, 6.0, 0.0),),
+                             clock=lambda: clock["t"]))
+        store.put("b", "k", b"z")
+        with pytest.raises(ConnectionError):
+            remote.get("b", "k")
+        assert remote.transient_failures == 1
+        clock["t"] = 6.0
+        assert remote.get("b", "k") == b"z"
+
+    def test_hedged_read_caps_a_straggler(self):
+        store, remote, sleeps = _remote(
+            hedge_after_s=1e-4,
+            faults=FaultPlan(slow_every=1, slow_factor=100.0))
+        store.put("b", "k", b"z" * MB)
+        remote.get("b", "k")
+        t = TRANSPORTS["tcp"].transfer_latency(MB)
+        assert remote.hedges_fired == 1
+        assert sleeps[-1] == pytest.approx(1e-4 + t)
+
+    def test_put_bills_and_sleeps_like_get(self):
+        store, remote, sleeps = _remote()
+        meta = remote.put("b", "k", b"z" * MB)
+        assert meta.etag == 1 and meta.size == MB
+        assert sleeps == [TRANSPORTS["tcp"].transfer_latency(MB)]
+
+    def test_head_costs_base_latency_only(self):
+        store, remote, sleeps = _remote()
+        store.put("b", "k", b"z")
+        remote.head("b", "k")
+        assert sleeps == [TRANSPORTS["tcp"].base_latency_s]
+
+
+# --------------------------------------------------------- ObjectStore
+
+class TestObjectStore:
+    def test_list_bucket_returns_copies(self):
+        """Regression (ISSUE 10 satellite): list_bucket used
+        ``bytes(v)``, which on a bytes value returns the SAME object —
+        a live reference into the store. Snapshots must be copies."""
+        store = ObjectStore()
+        store.put("b", "k", b"payload")
+        snap = store.list_bucket("b")
+        assert snap["k"] == b"payload"
+        assert snap["k"] is not store.get("b", "k")
+
+    def test_list_bucket_filters_by_bucket(self):
+        store = ObjectStore()
+        store.put("b", "k1", b"1")
+        store.put("other", "k2", b"2")
+        assert set(store.list_bucket("b")) == {"k1"}
+
+    def test_etag_increments_per_overwrite(self):
+        store = ObjectStore()
+        assert store.put("b", "k", b"1").etag == 1
+        assert store.put("b", "k", b"22").etag == 2
+        assert store.head("b", "k").size == 2
+
+    def test_missing_key_raises(self):
+        store = ObjectStore()
+        with pytest.raises(StorageError):
+            store.get("b", "nope")
+        with pytest.raises(StorageError):
+            store.head("b", "nope")
