@@ -193,12 +193,15 @@ class NexusBackend:
                 time.sleep(cache.spec.hit_duration_s(
                     int(len(data) * self.remote.cost_scale)))
                 return data
-        data = self.remote.get(bucket, key)
+        # bytes and etag come from ONE atomic store snapshot: a PUT
+        # committing during the modeled transfer must never let the
+        # fill bind the old bytes to the new version's etag (that
+        # entry would revalidate forever and serve stale data).
+        data, meta = self.remote.get_with_meta(bucket, key)
         if cache is not None:
             cache.fill(tenant, bucket, key, data,
                        int(len(data) * self.remote.cost_scale),
-                       hinted=hinted,
-                       etag=self.remote.store.head(bucket, key).etag)
+                       hinted=hinted, etag=meta.etag)
         self._run_sdk(len(data))
         self.limiter.bucket("s3").throttle(len(data))
         return data

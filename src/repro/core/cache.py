@@ -42,7 +42,12 @@ module adds the host cache as three layers:
 
   - never stale: every hit revalidates the entry's captured etag
     against the store's current metadata; a re-driven PUT bumps the
-    etag and the entry invalidates instead of serving old bytes;
+    etag and the entry invalidates instead of serving old bytes.
+    Fills bind payload + etag from one atomic store snapshot
+    (`ObjectStore.get_with_meta`) and a fill that loses the insert
+    race is dropped whole, so a PUT racing the modeled transfer can
+    never pair its etag with older bytes; a durable overwrite also
+    invalidates the resident entry even with write-allocation off;
   - never torn: payloads are published under the cache lock only
     after the full byte copy completes, and hits hand out immutable
     copies — a backend crash can abandon a fill, never expose half of
@@ -166,22 +171,30 @@ class CacheState:
     def fill(self, lk: str, ck: str, size: int, *, hinted: bool = True) -> bool:
         """Miss-path admission: offer the fetched object to the cache.
         Admitted iff the GET was hint-declared (or policy admits all)
-        and the object fits. Returns whether the entry is resident."""
+        and the object fits. Returns True only when THIS call inserted
+        the entry. A racing fill that already won returns False: the
+        resident entry may hold different content (two misses can
+        straddle a PUT), so the loser's payload/etag must not be bound
+        to it."""
         with self.lock:
             if lk in self._entries:
-                return True                      # racing fill already won
+                return False                     # racing fill already won
             if not (hinted or self.spec.admit == "all"):
                 return False
             return self._insert(lk, ck, size)
 
     def write(self, lk: str, ck: str, size: int) -> bool:
-        """Write-through admission after a durable PUT committed."""
+        """Write-through admission after a durable PUT committed. The
+        PUT is authoritative evidence that any resident entry for `lk`
+        is stale, so the overwrite invalidates it even when
+        write-allocation is off — correctness never rests on etag
+        revalidation alone."""
         with self.lock:
             self.writes += 1
-            if not self.spec.write_allocate:
-                return False
             if lk in self._entries:
                 self._remove(lk)                 # overwrite: new content
+            if not self.spec.write_allocate:
+                return False
             return self._insert(lk, ck, size)
 
     def invalidate(self, lk: str) -> None:
@@ -349,7 +362,14 @@ class SharedCache:
 
     def fill(self, tenant: str, bucket: str, key: str, data: bytes,
              nominal_size: int, *, hinted: bool, etag: int) -> bool:
-        """Offer a freshly fetched object (miss path)."""
+        """Offer a freshly fetched object (miss path). `etag` must come
+        from the same atomic store snapshot as `data` (see
+        `ObjectStore.get_with_meta`). When a racing fill already won,
+        `CacheState.fill` reports no insert and this offer is dropped
+        whole: stamping OUR etag (possibly newer) onto the resident
+        entry's bytes (possibly older) would create a stale hit, and
+        parking a payload under an unreferenced content key would leak
+        its arena slot."""
         lk = self._lk(bucket, key)
         ck = self._ck(tenant, data)
         with self._lock:

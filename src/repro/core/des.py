@@ -1198,6 +1198,14 @@ class DensitySimulator:
         sim's `CacheState` at arrival, in virtual-time service order —
         the same serial order the threaded node's trace drives the twin
         machine, so the counters are its replay-verified prediction.
+        SERIAL-TRACE PRECONDITION: the whole trace lands at arrival,
+        while the threaded node fills only after the remote fetch
+        completes — under concurrent first GETs of one key the DES
+        scores 1 miss + 1 hit where the threaded node scores 2 misses.
+        Cross-executor count parity is only asserted on serial traces
+        (`tests/test_cache.py::TestCountParity`); concurrent
+        cache-enabled runs (e.g. the chaos matrix) compare DES engines
+        to each other instead.
         Returns the run's duration vector with each hit's
         ``fetch_net[i]`` shrunk to the arena hit service time and its
         SDK cpu cost zeroed — exactly what the threaded hit path skips.

@@ -766,24 +766,26 @@ class WorkerNode:
                 fault=lambda: (hooks.guest_crash is not None
                                and hooks.guest_crash()))
         else:
-            # SharedCache admission metadata, derived once per
-            # invocation from hint × effective-profile agreement:
-            # `hinted` marks GETs promoted at ingress (the DES's
-            # `prefetchable` bit — the two executors must agree on it
-            # for hit/miss parity); `nocache` is the full-bypass set
-            # (declared Get.cacheable=False or the event's
-            # `"cache": false` header).
+            # SharedCache admission metadata, derived per GET *ordinal*
+            # from hint × effective-profile agreement: `hinted` marks
+            # GETs promoted at ingress (the DES's `prefetchable` bit —
+            # the two executors must agree on it for hit/miss parity);
+            # `cacheable` is the per-GET bypass (declared
+            # Get.cacheable=False or the event's `"cache": false`
+            # header). Flags are queued per (bucket, key) in declared
+            # order and consumed per occurrence — a set keyed on the
+            # pair would collapse duplicate-key GETs with differing
+            # flags into one decision and diverge from the DES's
+            # per-op admission.
             gets = profile.gets if profile is not None else ()
-            hinted = frozenset(
-                (h.bucket, h.key) for h, g in zip(ctx.inputs, gets)
-                if g.prefetchable)
-            nocache = frozenset(
-                (h.bucket, h.key) for h, g in zip(ctx.inputs, gets)
-                if not (g.cacheable and h.cacheable))
+            admission: dict[tuple[str, str], list] = {}
+            for h, g in zip(ctx.inputs, gets):
+                admission.setdefault((h.bucket, h.key), []).append(
+                    (g.prefetchable, g.cacheable and h.cacheable))
             ctx.gctx = GuestContext(tenant=ctx.w.name,
                                     cred_handle=self._creds[ctx.w.name],
                                     invocation_id=ctx.inv_id,
-                                    hinted=hinted, nocache=nocache)
+                                    admission=admission)
             ctx.client = NexusClient(
                 ctx.gctx, lambda: self.supervisor.backend, self.acct,
                 max_retries=self.client_max_retries,

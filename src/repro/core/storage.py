@@ -56,12 +56,21 @@ class ObjectStore:
             return self._meta[k]
 
     def get(self, bucket: str, key: str) -> bytes:
+        return self.get_with_meta(bucket, key)[0]
+
+    def get_with_meta(self, bucket: str, key: str) -> tuple[bytes, ObjectMeta]:
+        """Bytes + metadata captured under ONE lock hold, so the
+        returned etag is the version of exactly these bytes. Cache
+        fills must bind payload and etag from this atomic snapshot — a
+        separate head() after the get leaves the whole modeled transfer
+        as a window for a concurrent PUT to bump the etag, silently
+        stamping new-version metadata onto old-version bytes."""
         k = self._key(bucket, key)
         with self._lock:
             if k not in self._data:
                 raise StorageError(f"NoSuchKey: {k}")
             self.gets += 1
-            return self._data[k]
+            return self._data[k], self._meta[k]
 
     def head(self, bucket: str, key: str) -> ObjectMeta:
         k = self._key(bucket, key)
@@ -171,9 +180,16 @@ class RemoteStorage:
                 f"transient storage failure (fault window, op {op_no})")
 
     def get(self, bucket: str, key: str) -> bytes:
+        return self.get_with_meta(bucket, key)[0]
+
+    def get_with_meta(self, bucket: str, key: str) -> tuple[bytes, ObjectMeta]:
+        """GET returning the store's atomic (bytes, meta) snapshot —
+        the etag a cache fill may bind to these bytes. The snapshot is
+        taken before the modeled transfer sleep, so a PUT committing
+        mid-transfer cannot pair its etag with our older payload."""
         op = self._next_op()
         self._maybe_fail(op)
-        data = self.store.get(bucket, key)
+        data, meta = self.store.get_with_meta(bucket, key)
         t = self._service_time(len(data), op)
         if self.hedge_after_s is not None and t > self.hedge_after_s:
             # hedged read: fire a duplicate request; it completes at the
@@ -185,7 +201,7 @@ class RemoteStorage:
         self._sleep(t)
         self.transport.charge_transfer(self.acct,
                                        int(len(data) * self.cost_scale))
-        return data
+        return data, meta
 
     def put(self, bucket: str, key: str, data) -> ObjectMeta:
         op = self._next_op()

@@ -145,6 +145,27 @@ class TestCacheState:
         assert st2.write("out", "ck", 100)
         assert st2.lookup("out") == "ck"
 
+    def test_write_invalidates_even_without_allocation(self):
+        """A durable PUT is authoritative staleness evidence: with
+        write-allocation off, the overwrite must still evict the
+        resident old-content entry instead of leaving correctness to
+        etag revalidation."""
+        st = CacheState(_spec(write_allocate=False))
+        assert st.fill("k", "ck-v1", 100)
+        assert not st.write("k", "ck-v2", 100)
+        assert st.lookup("k") is None
+        assert st.snapshot()["used_bytes"] == 0
+
+    def test_racing_fill_reports_no_insert(self):
+        """The second of two racing fills must learn it lost — its
+        bytes/etag may belong to a different object version and must
+        not be bound to the winner's entry."""
+        st = CacheState(_spec())
+        assert st.fill("k", "ck-v1", 100)
+        assert not st.fill("k", "ck-v2", 100)
+        assert st.lookup("k") == "ck-v1"
+        assert st.snapshot()["admitted"] == 1
+
     def test_write_overwrites_existing_entry(self):
         st = CacheState(_spec())
         st.write("out", "ck-v1", 100)
@@ -255,6 +276,45 @@ class TestSharedCache:
         first = bytearray(cache.get("t", "in", "k", store))
         first[:4] = b"zzzz"
         assert cache.get("t", "in", "k", store) == b"x" * 4096
+
+    def test_losing_racer_never_rebinds_etag_or_leaks_payload(self):
+        """Two concurrent misses straddling a PUT: racer A fills the
+        old version first; racer B (holding the new bytes + new etag)
+        loses the fill race. B's etag must NOT be stamped onto A's
+        entry (that hit would serve v1 while revalidating as v2), and
+        B's payload must not be parked under an unreferenced content
+        key (arena slot leak)."""
+        store = self._store()
+        cache = SharedCache(CacheSpec(capacity_mb=1.0))
+        v1, e1 = store.get_with_meta("in", "k")
+        assert cache.fill("t", "in", "k", v1, 4096,
+                          hinted=True, etag=e1.etag)
+        store.put("in", "k", b"y" * 4096)        # PUT between the racers
+        v2, e2 = store.get_with_meta("in", "k")
+        assert not cache.fill("t", "in", "k", v2, 4096,
+                              hinted=True, etag=e2.etag)
+        # entry still binds v1 to v1's etag: revalidation must miss,
+        # never serve the old bytes under the new version's etag
+        assert cache.get("t", "in", "k", store) is None
+        assert cache.snapshot()["stale_invalidations"] == 1
+        # no orphan payload parked for the losing racer's content key
+        assert len(cache._payload) == 0          # invalidation freed v1's
+        assert cache._etag == {}
+
+    def test_put_without_allocation_invalidates_stale_entry(self):
+        """write_allocate=False: the write-through declines the new
+        bytes but must still drop the resident old-content entry (and
+        its parked payload + captured etag)."""
+        store = self._store()
+        cache = SharedCache(CacheSpec(capacity_mb=1.0,
+                                      write_allocate=False))
+        v1, m1 = store.get_with_meta("in", "k")
+        cache.fill("t", "in", "k", v1, 4096, hinted=True, etag=m1.etag)
+        m2 = store.put("in", "k", b"y" * 4096)
+        assert not cache.put("t", "in", "k", b"y" * 4096, 4096, m2.etag)
+        snap = cache.snapshot()
+        assert snap["entries"] == 0 and snap["used_bytes"] == 0
+        assert cache._payload == {} and cache._etag == {}
 
     def test_cross_tenant_dedup_switch(self):
         store = self._store()
@@ -531,6 +591,34 @@ class TestMLSecondInvocationHits:
         per_fn_gets = {f: len(sim.workload[f].profile.gets)
                        for f in sim.functions}
         assert r.cache_stats["misses"] <= sum(per_fn_gets.values())
+
+
+# ------------------------------------------------ per-op admission
+
+class TestPerOrdinalAdmission:
+    """The threaded client's SharedCache admission flags are per GET
+    *ordinal*, like the DES overlay's — a profile declaring two GETs
+    on one (bucket, key) with differing prefetchable/cacheable bits
+    must not collapse them into one decision."""
+
+    def _client(self, admission):
+        from repro.core import metrics as M
+        from repro.core.frontend import GuestContext, NexusClient
+        ctx = GuestContext(tenant="t", cred_handle="c",
+                           admission=admission)
+        return NexusClient(ctx, lambda: None, M.CycleAccount())
+
+    def test_duplicate_key_gets_keep_their_own_flags(self):
+        client = self._client({("b", "k"): [(True, True),
+                                            (False, False)]})
+        assert client._admission("b", "k") == (True, True)
+        assert client._admission("b", "k") == (False, False)
+        # the final entry sticks for calls past the declared count
+        assert client._admission("b", "k") == (False, False)
+
+    def test_undeclared_pair_is_unhinted_but_cacheable(self):
+        client = self._client({})
+        assert client._admission("b", "k") == (False, True)
 
 
 # -------------------------------------------------------- cluster

@@ -182,3 +182,42 @@ class TestObjectStore:
             store.get("b", "nope")
         with pytest.raises(StorageError):
             store.head("b", "nope")
+
+    def test_get_with_meta_pairs_bytes_with_their_etag(self):
+        store = ObjectStore()
+        store.put("b", "k", b"v1")
+        data, meta = store.get_with_meta("b", "k")
+        assert (data, meta.etag) == (b"v1", 1)
+        assert store.gets == 1                  # one GET, not get+head
+
+
+class TestGetWithMetaAtomicity:
+    def test_put_during_modeled_transfer_cannot_rebind_etag(self):
+        """Regression (stale-fill race): the fill etag used to come
+        from a separate head() AFTER remote.get(), so a PUT committing
+        during the modeled transfer bound the OLD bytes to the NEW
+        etag — and every later cache hit revalidated successfully
+        against stale data. `get_with_meta` snapshots bytes + meta
+        under one store lock; a PUT landing in the transfer window
+        must leave the captured pair self-consistent."""
+        store = ObjectStore()
+        store.put("b", "k", b"old-version")
+
+        def put_mid_transfer(_t):
+            # fires inside the modeled transfer sleep — after the
+            # snapshot, before get_with_meta returns
+            store.put("b", "k", b"new-version")
+
+        remote = RemoteStorage(store, "tcp", M.CycleAccount(),
+                               sleep=put_mid_transfer)
+        data, meta = remote.get_with_meta("b", "k")
+        assert data == b"old-version"
+        assert meta.etag == 1                   # the OLD version's etag
+        assert store.head("b", "k").etag == 2   # the PUT did land
+
+    def test_remote_get_still_returns_bytes_only(self):
+        store = ObjectStore()
+        store.put("b", "k", b"z")
+        remote = RemoteStorage(store, "tcp", M.CycleAccount(),
+                               sleep=lambda _t: None)
+        assert remote.get("b", "k") == b"z"
